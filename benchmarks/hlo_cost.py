@@ -1,0 +1,3 @@
+"""Shim: the implementation lives in repro.launch.hlo_cost (importable from
+both the dry-run driver and the benchmarks package)."""
+from repro.launch.hlo_cost import analyze_hlo, parse  # noqa: F401

@@ -1,0 +1,128 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads benchmarks/out/dryrun/*.json and derives, per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_chip / HBM_bw             [s]
+    collective term = collective_bytes_per_chip / ICI_bw      [s]
+
+(cost_analysis on the SPMD executable reports per-chip figures; peak chip
+constants are the assignment's v5e numbers.) Also reports MODEL_FLOPS
+(6·N·D train / 2·N·D inference, N = active params) and the useful-compute
+ratio MODEL_FLOPS_per_chip / HLO_FLOPs — remat/dispatch waste shows up here.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir ...] [--md out.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (assignment constant)
+
+SHAPE_TOKENS = {         # decoded tokens per step for inference shapes
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    # prefer the trip-count-aware HLO walk: XLA:CPU cost_analysis counts
+    # while (scan) bodies once (see hlo_cost.py)
+    cost = rec.get("cost_tripaware") or rec["cost"]
+    flops = cost["flops"]                        # per-chip (SPMD program)
+    mem_bytes = cost["bytes_accessed"]
+    coll = (cost.get("collectives") or rec["collectives"])["total"]
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_n = coll / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_n}
+    dom = max(terms, key=terms.get)
+    n_active = rec["model_params_active"]
+    if "fft_model_flops_total" in rec:           # paper FFT cells
+        model_flops_total = rec["fft_model_flops_total"]
+    else:
+        tokens = SHAPE_TOKENS[rec["shape"]]
+        factor = 6 if rec["shape"] == "train_4k" else 2
+        model_flops_total = factor * n_active * tokens
+    model_flops_chip = model_flops_total / chips
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "model_flops_per_chip": model_flops_chip,
+        "useful_ratio": model_flops_chip / flops if flops else 0.0,
+        "roofline_frac": (model_flops_chip / PEAK_FLOPS) / bound if bound else 0.0,
+        "peak_gib": rec["memory"]["peak_per_device_bytes"] / 2 ** 30,
+        "fits_hbm": rec["memory"]["peak_per_device_bytes"] <= 16 * 2 ** 30,
+    }
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(os.path.dirname(__file__),
+                                                  "out", "dryrun"))
+    ap.add_argument("--md", default="")
+    ap.add_argument("--mesh", default="pod16x16",
+                    help="roofline table mesh (single pod by assignment)")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        a = analyze(rec)
+        if a and a["mesh"] == args.mesh:
+            rows.append(a)
+        elif rec.get("status") not in ("ok", None) and rec["mesh"] == args.mesh:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": rec["status"]})
+
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful | roofline frac | peak GiB | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,useful_ratio,"
+          "roofline_frac,peak_gib,fits_hbm")
+    for r in rows:
+        if "status" in r and "compute_s" not in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — | — | — |")
+            print(f"{r['arch']},{r['shape']},,,,{r['status']},,,,")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.2f} | "
+            f"{'y' if r['fits_hbm'] else 'NO'} |")
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.6g},"
+              f"{r['memory_s']:.6g},{r['collective_s']:.6g},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_frac']:.4f},"
+              f"{r['peak_gib']:.2f},{r['fits_hbm']}")
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("\n".join(lines) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Benchmark suite — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Analytic (model-derived) rows
+report ``us_per_call=0``; measured rows time real executions on this host.
+
+    PYTHONPATH=src python -m benchmarks.run [--only a,b,c]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.3f},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Table 4.1 / 4.2 — architecture comparison (normalized units)
+# ---------------------------------------------------------------------------
+
+def bench_table_4_1():
+    from repro.core import perfmodel as pm
+    for mu in (1, 3):
+        t = pm.table_4_1(mu)
+        for k, v in t.items():
+            _row(f"table4.1/mu{mu}/{k}/T_tot", 0.0, v["T_tot"])
+            _row(f"table4.1/mu{mu}/{k}/B", 0.0, v["B"])
+            _row(f"table4.1/mu{mu}/{k}/M", 0.0, v["M"])
+
+
+def bench_table_4_2():
+    from repro.core import perfmodel as pm
+    for mu in (1, 3, 4):
+        t = pm.table_4_2(mu)
+        for k, v in t.items():
+            _row(f"table4.2/mu{mu}/{k}/T_tot", 0.0, v["T_tot"])
+            _row(f"table4.2/mu{mu}/{k}/B", 0.0, v["B"])
+
+
+# ---------------------------------------------------------------------------
+# Tables 5.2 / 5.4 / 5.6 — FFT engine characterization
+# ---------------------------------------------------------------------------
+
+_ENGINE_POINTS = [  # (r, n, l_op, f_mhz) — f_max values reported by the thesis
+    (1, 512, 3, 250), (1, 1024, 3, 247), (1, 2048, 3, 251), (1, 4096, 3, 244),
+    (1, 8192, 3, 236), (1, 2048, 9, 379),
+    (2, 512, 3, 238), (2, 2048, 6, 345), (2, 8192, 9, 377),
+    (4, 512, 3, 226), (4, 2048, 9, 376), (4, 4096, 9, 378),
+]
+
+
+def bench_engine_tables():
+    from repro.core.perfmodel import EnginePoint
+    for r, n, lop, f in _ENGINE_POINTS:
+        pt = EnginePoint(n=n, r=r, l_op=lop, f_mhz=f)
+        tbl = {1: "5.2", 2: "5.4", 4: "5.6"}[r]
+        base = f"table{tbl}/R{r}/N{n}/lop{lop}"
+        _row(base + "/latency_cycles", 0.0, pt.latency_cycles)
+        _row(base + "/T_FFT_us", 0.0, round(pt.t_fft_us, 3))
+        _row(base + "/B_FFT_GiBs", 0.0, round(pt.b_fft_gib_s, 2))
+        _row(base + "/GFLOPS", 0.0, round(pt.gflops, 2))
+
+
+# ---------------------------------------------------------------------------
+# Table 5.7 — global 3D FFT expected times ; Table 5.8 — Xeon Phi baseline
+# ---------------------------------------------------------------------------
+
+def bench_global_fft():
+    from repro.core import perfmodel as pm
+    for mu in (1, 3):
+        t = pm.table_5_7(mu=mu)
+        for n, row in t.items():
+            for p, v in row.items():
+                _row(f"table5.7/mu{mu}/N{n}/P{p}", 0.0,
+                     "oom" if v is None else round(v, 6))
+    # Table 5.8 — measured Marconi (Xeon Phi) baselines from the thesis, the
+    # strong-scaling comparison the paper draws in §5.6
+    xeon = {(1024, 8): 1.20, (1024, 16): 0.67, (1024, 32): 1.61,
+            (1024, 64): 0.29, (1024, 128): 0.18, (2048, 16): 48.2,
+            (2048, 32): 3.75, (2048, 64): 2.26, (2048, 128): 4.90,
+            (2048, 256): 0.74, (2048, 512): 0.41}
+    for (n, p), v in sorted(xeon.items()):
+        ours = pm.global_fft_time(n, min(p, 1024), mu=1)
+        _row(f"table5.8/N{n}/P{p}/xeonphi_s", 0.0, v)
+        _row(f"table5.8/N{n}/P{p}/fpga_model_speedup", 0.0, round(v / ours, 1))
+
+
+# ---------------------------------------------------------------------------
+# Figs 5.11 / 5.12 — network required-bandwidth curves
+# ---------------------------------------------------------------------------
+
+def bench_network_bw():
+    from repro.core import topology as topo
+    for topol in ("switched", "torus"):
+        fig = "fig5.11" if topol == "switched" else "fig5.12"
+        curves = topo.bandwidth_curves(topol)
+        for (r, f), pts in sorted(curves.items()):
+            for q, bw in pts:
+                if q in (2, 4, 8, 16, 32):
+                    _row(f"{fig}/{topol}/R{r}/f{int(f)}/sqP{q}_Gbps",
+                         0.0, round(bw, 1))
+    s = topo.scalability_summary(200.0)
+    for (t, r, f), p in sorted(s.items()):
+        _row(f"scalability/{t}/R{r}/f{int(f)}/maxP_at_200G", 0.0, p)
+
+
+# ---------------------------------------------------------------------------
+# Fig 1.1 — required RAM per node
+# ---------------------------------------------------------------------------
+
+def bench_fig_1_1():
+    from repro.core.perfmodel import required_ram_per_node
+    for n in (256, 512, 1024, 2048, 4096, 8192):
+        for p in (1, 64, 1024):
+            _row(f"fig1.1/N{n}/P{p}_GiB", 0.0,
+                 round(required_ram_per_node(n, p) / 2 ** 30, 3))
+
+
+# ---------------------------------------------------------------------------
+# Measured: single-host FFT wallclock (engine vs oracle backends)
+# ---------------------------------------------------------------------------
+
+def _time(fn, *a, iters=5):
+    import jax
+    jax.block_until_ready(fn(*a))  # compile + warm
+    t0 = time.time()
+    out = None
+    for _ in range(iters):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench_fft_wallclock():
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+
+    for n in (256, 1024):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, n), jnp.float32)
+        xi = jnp.zeros_like(x)
+        for backend in ("jnp", "ref", "pallas"):
+            us = _time(lambda a, b: kops.fft1d(a, b, backend=backend), x, xi)
+            _row(f"fft1d_wallclock/{backend}/B64xN{n}", us, "")
+    from repro.core.decomposition import PencilGrid
+    from repro.core.fft3d import FFT3DPlan, fft3d_local
+    for n in (32, 64):
+        grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+        plan = FFT3DPlan(n=(n, n, n), grid=grid, backend="jnp")
+        x = jax.random.normal(jax.random.PRNGKey(1), (n, n, n), jnp.float32)
+        xi = jnp.zeros_like(x)
+        f = jax.jit(functools.partial(fft3d_local, plan))
+        us = _time(f, x, xi)
+        _row(f"fft3d_wallclock/jnp/N{n}", us, "")
+        z = np.random.randn(n, n, n).astype(np.complex64)
+        t0 = time.time()
+        for _ in range(5):
+            np.fft.fftn(z)
+        _row(f"fft3d_wallclock/numpy/N{n}", (time.time() - t0) / 5 * 1e6, "")
+
+
+BENCHES = {
+    "table_4_1": bench_table_4_1,
+    "table_4_2": bench_table_4_2,
+    "engine_tables": bench_engine_tables,
+    "global_fft": bench_global_fft,
+    "network_bw": bench_network_bw,
+    "fig_1_1": bench_fig_1_1,
+    "fft_wallclock": bench_fft_wallclock,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

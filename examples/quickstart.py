@@ -1,0 +1,42 @@
+"""Quickstart: the paper's distributed 3D FFT in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs an 8-device (fake) 4x2 pencil grid, forward+inverse 3D FFT with the
+pipelined schedule on both network models, and checks against numpy.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fft3d import make_fft3d
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+N = (32, 32, 32)
+
+rng = np.random.RandomState(0)
+field = rng.randn(*N).astype(np.float32)          # (y, z, x) X-pencil layout
+
+for net in ("switched", "torus"):
+    fwd, inv, plan = make_fft3d(mesh, N, real=True, schedule="pipelined",
+                                chunks=4, net=net)
+    kr, ki = fwd(jnp.asarray(field))              # spectral, (kx, ky, kz)
+    back = inv(kr, ki)                            # physical again
+
+    keep = N[0] // 2 + 1
+    want = np.fft.fftn(np.fft.rfft(field, axis=2), axes=(0, 1)).transpose(2, 0, 1)
+    got = (np.asarray(kr) + 1j * np.asarray(ki))[:keep]
+    err_f = np.linalg.norm(got - want) / np.linalg.norm(want)
+    err_b = np.linalg.norm(np.asarray(back) - field) / np.linalg.norm(field)
+    print(f"net={net:9s}  forward rel-err {err_f:.2e}   roundtrip {err_b:.2e}")
+    assert err_f < 1e-5 and err_b < 1e-5
+
+print("quickstart OK — pencil grid", (plan.grid.pu, plan.grid.pv),
+      "schedule", plan.schedule)

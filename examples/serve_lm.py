@@ -1,0 +1,17 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    toks = serve_main(["--arch", "smollm-360m", "--smoke",
+                       "--batch", "4", "--prompt-len", "32", "--gen", "16"])
+    assert toks.shape == (4, 16)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a ~100M-class LM for a few hundred steps on CPU (end-to-end driver).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+Uses a width-reduced smollm-family config (same 32-layer llama shape family,
+~14M params so a few hundred steps finish on a CPU host), the deterministic
+synthetic pipeline, AdamW, checkpointing every 50 steps, and prints the loss
+curve. Loss must drop substantially from ~ln(V).
+"""
+
+import argparse
+import math
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args(argv)
+    if not args.ckpt_dir:
+        args.ckpt_dir = tempfile.mkdtemp(prefix="repro_train_lm_")
+
+    losses = train_main([
+        "--arch", "smollm-360m", "--smoke",
+        "--steps", str(args.steps), "--batch", "16", "--seq", "128",
+        "--lr", "1e-3", "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+    ])
+    first, last = losses[0], sum(losses[-10:]) / 10
+    print(f"loss: {first:.3f} -> {last:.3f} (ln V = {math.log(512):.3f})")
+    # short CI runs only need a downward trend; the full 200-step run drops
+    # well past 0.5 nats
+    want = 0.5 if args.steps >= 150 else 0.02
+    assert last < first - want, f"loss should fall by >{want} nats"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Fault-tolerant checkpointing: atomic (tmp + rename) sharded saves, async
+writer thread, keep-last-k GC, and **resharding restore** — a checkpoint
+written on mesh A restores onto mesh B (elastic up/down-scaling), because
+leaves are stored as full logical arrays and re-placed with the target
+shardings at load.
+
+Layout:  <dir>/step_<n>/   manifest.json  +  arrays.npz (flat path-keyed)
+         <dir>/LATEST      (atomic pointer file)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save -------------------------------------------------------------
+    def save(self, step: int, tree, meta: dict | None = None, block: bool = False):
+        """Snapshot to host memory synchronously, write to disk async."""
+        flat, _ = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device->host copy
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, meta or {}), daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict, meta: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        meta = dict(meta, step=step, time=time.time())
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)
+        ptr = os.path.join(self.dir, "LATEST.tmp")
+        with open(ptr, "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(ptr, os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir) if d.startswith("step_")
+                       and not d.endswith(".tmp"))
+        for d in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # ---- restore ------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            name = f.read().strip()
+        if not os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+            return None  # torn write — fall back to scan
+        return int(name.split("_")[1])
+
+    def restore(self, target_tree, step: int | None = None,
+                shardings=None) -> tuple:
+        """Restore into the structure of ``target_tree``; device_put with
+        ``shardings`` (same structure) if given — this is the elastic path."""
+        step = self.latest_step() if step is None else step
+        assert step is not None, f"no checkpoint under {self.dir}"
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json.load(f)
+        z = np.load(os.path.join(d, "arrays.npz"))
+        flat, treedef = _flatten(target_tree)
+        leaves = []
+        shard_flat = None
+        if shardings is not None:
+            shard_flat, _ = _flatten(shardings)
+        for k, tgt in flat.items():
+            a = z[k]
+            assert tuple(a.shape) == tuple(tgt.shape), (k, a.shape, tgt.shape)
+            a = a.astype(tgt.dtype)
+            if shard_flat is not None and shard_flat.get(k) is not None:
+                a = jax.device_put(a, shard_flat[k])
+            leaves.append(a)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, meta

@@ -1,0 +1,15 @@
+"""The paper's primary contribution: distributed 3D FFT on a 2D pencil grid
+with sequential/pipelined scheduling, switched/torus network models, and the
+analytic performance model of the thesis."""
+
+from repro.core.decomposition import PencilGrid
+from repro.core.fft3d import (FFT3DPlan, fft3d_local, ifft3d_local,
+                              fft3d_vector_local, ifft3d_vector_local,
+                              make_fft3d)
+from repro.core import perfmodel, spectral, topology, transpose
+
+__all__ = [
+    "PencilGrid", "FFT3DPlan", "fft3d_local", "ifft3d_local",
+    "fft3d_vector_local", "ifft3d_vector_local", "make_fft3d",
+    "perfmodel", "spectral", "topology", "transpose",
+]

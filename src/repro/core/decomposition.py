@@ -1,0 +1,102 @@
+"""2D pencil domain decomposition (paper §3.2.3, Fig. 3.2).
+
+The N³ grid is distributed over a Pu×Pv process grid mapped onto mesh axes
+(u → ``data``-like axes, v → ``model``-like axes). Layout convention (matching
+P3DFFT and the thesis):
+
+* **X-pencil** (physical space input): local ``(Ny/Pu, Nz/Pv, Nx)`` — the full
+  X line is local, FFT runs over the last axis.
+* **Y-pencil** (after the X↔Y fold): local ``(Nx/Pu, Nz/Pv, Ny)``.
+* **Z-pencil** (after the Y↔Z fold, spectral output): local
+  ``(Nx/Pu, Ny/Pv, Nz)`` — i.e. global ``(kx, ky, kz)`` natural order sharded
+  ``P(u, v, None)``.
+
+The forward transform therefore lands in natural (kx, ky, kz) order, and the
+inverse retraces the pipeline back to X-pencils.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PencilGrid:
+    """The Pu×Pv processor grid of the paper, bound to mesh axis names."""
+
+    pu: int
+    pv: int
+    u_axes: tuple[str, ...] = ("data",)
+    v_axes: tuple[str, ...] = ("model",)
+
+    @classmethod
+    def from_mesh(cls, mesh: jax.sharding.Mesh,
+                  u_axes=("data",), v_axes=("model",)) -> "PencilGrid":
+        u_axes, v_axes = tuple(u_axes), tuple(v_axes)
+        pu = math.prod(mesh.shape[a] for a in u_axes)
+        pv = math.prod(mesh.shape[a] for a in v_axes)
+        return cls(pu=pu, pv=pv, u_axes=u_axes, v_axes=v_axes)
+
+    @property
+    def p(self) -> int:
+        return self.pu * self.pv
+
+    # ---- shardings -------------------------------------------------------
+    def pencil_spec(self) -> P:
+        """All three pencil layouts shard axes 0,1 over (u, v)."""
+        u = self.u_axes if len(self.u_axes) > 1 else self.u_axes[0]
+        v = self.v_axes if len(self.v_axes) > 1 else self.v_axes[0]
+        return P(u, v, None)
+
+    def sharding(self, mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.pencil_spec())
+
+    # ---- local shapes ----------------------------------------------------
+    def validate(self, n: tuple[int, int, int]) -> None:
+        nx, ny, nz = n
+        if ny % self.pu:
+            raise ValueError(f"Ny={ny} not divisible by Pu={self.pu}")
+        if nz % self.pv:
+            raise ValueError(f"Nz={nz} not divisible by Pv={self.pv}")
+        if nx % self.pu:
+            raise ValueError(f"Nx={nx} not divisible by Pu={self.pu} (X<->Y fold)")
+        if ny % self.pv:
+            raise ValueError(f"Ny={ny} not divisible by Pv={self.pv} (Y<->Z fold)")
+
+    def x_pencil_local(self, n):  # (Ny/Pu, Nz/Pv, Nx)
+        nx, ny, nz = n
+        return (ny // self.pu, nz // self.pv, nx)
+
+    def y_pencil_local(self, n, kx: int | None = None):
+        nx, ny, nz = n
+        return ((kx or nx) // self.pu, nz // self.pv, ny)
+
+    def z_pencil_local(self, n, kx: int | None = None):
+        nx, ny, nz = n
+        return ((kx or nx) // self.pu, ny // self.pv, nz)
+
+    def padded_r2c_len(self, nx: int) -> int:
+        """Shard-divisible length holding the N/2+1 significant bins.
+
+        The paper keeps N/2+1 complex outputs of the real X transform
+        (§3.2.5) and accepts the resulting slight imbalance; on a rigid SPMD
+        mesh we instead pad to the next multiple of Pu (the padding carries
+        zeros and is dropped by the inverse).
+        """
+        keep = nx // 2 + 1
+        return ((keep + self.pu - 1) // self.pu) * self.pu
+
+    # ---- data-volume model (paper §3.2.5) --------------------------------
+    def local_volume_bytes(self, n, s: int = 8) -> int:
+        """V = s·N³/P (Eq. 3.3)."""
+        nx, ny, nz = n
+        return s * nx * ny * nz // self.p
+
+    def local_volume_after_x_bytes(self, n, s: int = 8) -> int:
+        """V' = s(N³ + 2N²)/P (Eq. 3.4), N=Nx."""
+        nx, ny, nz = n
+        return s * (nx * ny * nz + 2 * ny * nz) // self.p

@@ -1,0 +1,256 @@
+"""Distributed 3D FFT over a 2D pencil decomposition — the paper's core.
+
+Implements the *transpose method* (§3.2.4): local X FFT → X↔Y fold → local Y
+FFT → Y↔Z fold → local Z FFT, with the task-organization models of Chapter 4:
+
+* ``schedule="sequential"`` — each phase processes the whole local volume
+  before the next starts (Fig. 4.2; the paper's case B — XLA still overlaps
+  DMA-like copies, but FFT phases are serialized on the full volume).
+* ``schedule="pipelined"`` — the volume is split into ``chunks`` slabs along
+  an axis untouched by the upcoming fold, and each slab's FFT→fold chain is
+  emitted independently (Fig. 4.3 / case C). XLA's latency-hiding scheduler
+  can then run slab i+1's butterflies underneath slab i's all-to-all — the
+  TPU rendition of the paper's deep pipeline across engines and network.
+* ``vector_mode="parallel"|"streaming"`` — μ-component vector fields are
+  processed either simultaneously (leading component axis, ~μ× live memory;
+  §4.4.1) or as a per-dimension stream (unrolled loop, §4.4.2/Fig. 4.6).
+
+Network model: ``net="switched"`` (single all-to-all, Fig. 5.10) or
+``net="torus"`` (ppermute ring, Fig. 5.9) — see ``core.transpose``.
+
+Real-to-complex: the X phase uses the general complex engine on real input
+and keeps N/2+1 bins (padded to a Pu-divisible length), exactly the paper's
+choice (§3.2.5, §3.4: "we prefer a more general and flexible architecture").
+``r2c_packed=True`` switches on the beyond-paper even/odd packed real FFT.
+
+All ``*_local`` functions run inside ``shard_map``; ``make_fft3d`` builds the
+jitted global-array entry points.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.decomposition import PencilGrid
+from repro.core import transpose as tr
+from repro.kernels import ops as kops
+
+Schedule = Literal["sequential", "pipelined"]
+VectorMode = Literal["parallel", "streaming"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FFT3DPlan:
+    n: tuple[int, int, int]
+    grid: PencilGrid
+    real: bool = False
+    backend: str = "jnp"             # "pallas" | "ref" | "jnp"
+    schedule: Schedule = "sequential"
+    chunks: int = 1                  # pipelined slab count (1 = sequential)
+    net: str = "switched"            # "switched" | "torus"
+    r2c_packed: bool = False         # beyond-paper packed real FFT
+
+    def __post_init__(self):
+        self.grid.validate(self.n)
+        if self.schedule == "sequential":
+            object.__setattr__(self, "chunks", 1)
+        assert self.chunks >= 1
+
+    @property
+    def kx(self) -> int:
+        """Spectral X length: padded N/2+1 bins if real, else Nx."""
+        return self.grid.padded_r2c_len(self.n[0]) if self.real else self.n[0]
+
+    @property
+    def kx_keep(self) -> int:
+        return self.n[0] // 2 + 1 if self.real else self.n[0]
+
+
+# ---------------------------------------------------------------------------
+# chunked phase runner
+# ---------------------------------------------------------------------------
+
+def _run_chunked(fn, arrs, axis: int, chunks: int):
+    """Apply ``fn`` per slab along ``axis`` (same axis in/out), concat results.
+
+    Emitting independent per-slab chains is what lets XLA overlap slab i's
+    collective with slab i+1's compute (paper Fig. 4.3 timeline).
+    """
+    if chunks == 1:
+        return fn(*arrs)
+    size = arrs[0].shape[axis]
+    c = min(chunks, size)
+    while size % c:
+        c -= 1
+    outs = []
+    step = size // c
+    for i in range(c):
+        sl = [jax.lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis) for a in arrs]
+        outs.append(fn(*sl))
+    if isinstance(outs[0], tuple):
+        return tuple(jnp.concatenate([o[j] for o in outs], axis=axis)
+                     for j in range(len(outs[0])))
+    return jnp.concatenate(outs, axis=axis)
+
+
+def _fftx(plan, xr, xi):
+    if plan.real:
+        yr, yi = kops.rfft1d(xr, axis=-1, backend=plan.backend, packed=plan.r2c_packed)
+        pad = plan.kx - plan.kx_keep
+        if pad:
+            pw = [(0, 0)] * (yr.ndim - 1) + [(0, pad)]
+            yr, yi = jnp.pad(yr, pw), jnp.pad(yi, pw)
+        return yr, yi
+    return kops.fft1d(xr, xi, axis=-1, backend=plan.backend)
+
+
+def _ifftx(plan, xr, xi):
+    if plan.real:
+        xr = xr[..., : plan.kx_keep]
+        xi = xi[..., : plan.kx_keep]
+        return kops.irfft1d(xr, xi, n=plan.n[0], axis=-1, backend=plan.backend)
+    return kops.fft1d(xr, xi, axis=-1, backend=plan.backend, inverse=True)
+
+
+# ---------------------------------------------------------------------------
+# local (inside-shard_map) forward / inverse
+# ---------------------------------------------------------------------------
+
+def fft3d_local(plan: FFT3DPlan, xr, xi=None):
+    """Forward 3D FFT of the local pencil (any leading axes).
+
+    In : X-pencil ``(..., Ny/Pu, Nz/Pv, Nx)`` (xi may be None for real input)
+    Out: Z-pencil ``(..., Kx/Pu, Ny/Pv, Nz)`` planar complex, natural order.
+    """
+    g, net = plan.grid, plan.net
+    if xi is None:
+        xi = jnp.zeros_like(xr)
+
+    # Phase X + X↔Y fold (hardware tasks A–D), slabbed along local z (axis -2)
+    def phase_x(cr, ci):
+        yr, yi = _fftx(plan, cr, ci)
+        return (tr.xy_fold(yr, g.u_axes, mode=net),
+                tr.xy_fold(yi, g.u_axes, mode=net))
+
+    yr, yi = _run_chunked(phase_x, (xr, xi), axis=xr.ndim - 2, chunks=plan.chunks)
+
+    # Phase Y + Y↔Z fold (tasks E–H), slabbed along local kx (axis -3)
+    def phase_y(cr, ci):
+        zr, zi = kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
+        return (tr.yz_fold(zr, g.v_axes, mode=net),
+                tr.yz_fold(zi, g.v_axes, mode=net))
+
+    yr, yi = _run_chunked(phase_y, (yr, yi), axis=yr.ndim - 3, chunks=plan.chunks)
+
+    # Phase Z (tasks I–K)
+    return kops.fft1d(yr, yi, axis=-1, backend=plan.backend)
+
+
+def ifft3d_local(plan: FFT3DPlan, kr, ki):
+    """Inverse 3D FFT: Z-pencil spectral in, X-pencil physical out.
+
+    Returns real array if ``plan.real`` else a planar (re, im) pair.
+    """
+    g, net = plan.grid, plan.net
+    yr, yi = kops.fft1d(kr, ki, axis=-1, backend=plan.backend, inverse=True)
+
+    def phase_y_inv(cr, ci):
+        ur = tr.yz_unfold(cr, g.v_axes, mode=net)
+        ui = tr.yz_unfold(ci, g.v_axes, mode=net)
+        return kops.fft1d(ur, ui, axis=-1, backend=plan.backend, inverse=True)
+
+    yr, yi = _run_chunked(phase_y_inv, (yr, yi), axis=yr.ndim - 3, chunks=plan.chunks)
+
+    def phase_x_inv(cr, ci):
+        ur = tr.xy_unfold(cr, g.u_axes, mode=net)
+        ui = tr.xy_unfold(ci, g.u_axes, mode=net)
+        if plan.real:
+            return (_ifftx(plan, ur, ui),)
+        return _ifftx(plan, ur, ui)
+
+    out = _run_chunked(phase_x_inv, (yr, yi), axis=yr.ndim - 2, chunks=plan.chunks)
+    if plan.real:
+        return out[0] if isinstance(out, tuple) and len(out) == 1 else out
+    return out
+
+
+def fft3d_vector_local(plan: FFT3DPlan, xr, xi=None,
+                       vector_mode: VectorMode = "streaming"):
+    """μ-component transform; leading axis 0 of ``xr`` is the component axis.
+
+    ``parallel``  — one pass with the component axis live throughout (μ×
+                    memory, paper §4.4.1).
+    ``streaming`` — per-dimension stream X(c),Y(c),Z(c) per component c
+                    (Fig. 4.4/4.6): unrolled so XLA pipelines component c+1
+                    under component c.
+    """
+    if vector_mode == "parallel":
+        return fft3d_local(plan, xr, xi)
+    outs = [fft3d_local(plan, xr[c], None if xi is None else xi[c])
+            for c in range(xr.shape[0])]
+    return (jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs]))
+
+
+def ifft3d_vector_local(plan: FFT3DPlan, kr, ki,
+                        vector_mode: VectorMode = "streaming"):
+    if vector_mode == "parallel":
+        return ifft3d_local(plan, kr, ki)
+    outs = [ifft3d_local(plan, kr[c], ki[c]) for c in range(kr.shape[0])]
+    if plan.real:
+        return jnp.stack(outs)
+    return (jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs]))
+
+
+# ---------------------------------------------------------------------------
+# global entry points
+# ---------------------------------------------------------------------------
+
+def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
+               real: bool = False, backend: str = "jnp",
+               schedule: Schedule = "sequential", chunks: int = 1,
+               net: str = "switched", components: int = 0,
+               vector_mode: VectorMode = "streaming", r2c_packed: bool = False):
+    """Build jitted (forward, inverse, plan) over globally-sharded arrays.
+
+    Global input layout: X-pencil ``(Ny, Nz, Nx)`` sharded ``P(u, v, None)``
+    (plus a leading component axis if ``components``); output Z-pencil
+    ``(Kx, Ny, Nz)`` sharded the same way.
+    """
+    grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
+    plan = FFT3DPlan(n=tuple(n), grid=grid, real=real, backend=backend,
+                     schedule=schedule, chunks=chunks, net=net,
+                     r2c_packed=r2c_packed)
+    base = grid.pencil_spec()
+    spec = P(*((None,) + tuple(base))) if components else base
+
+    def fwd_local(xr, xi):
+        f = functools.partial(fft3d_vector_local, plan, vector_mode=vector_mode) \
+            if components else functools.partial(fft3d_local, plan)
+        return f(xr, xi)
+
+    def inv_local(kr, ki):
+        f = functools.partial(ifft3d_vector_local, plan, vector_mode=vector_mode) \
+            if components else functools.partial(ifft3d_local, plan)
+        return f(kr, ki)
+
+    if real:
+        fwd = jax.jit(jax.shard_map(
+            lambda x: fwd_local(x, None), mesh=mesh,
+            in_specs=spec, out_specs=(spec, spec), check_vma=False))
+        inv = jax.jit(jax.shard_map(
+            inv_local, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
+            check_vma=False))
+    else:
+        fwd = jax.jit(jax.shard_map(
+            fwd_local, mesh=mesh,
+            in_specs=(spec, spec), out_specs=(spec, spec), check_vma=False))
+        inv = jax.jit(jax.shard_map(
+            inv_local, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
+            check_vma=False))
+    return fwd, inv, plan

@@ -1,0 +1,125 @@
+"""Spectral-space operators for the pseudo-spectral CFD case study (§1.2).
+
+All functions operate on Z-pencil spectral fields — local shape
+``(..., Kx/Pu, Ny/Pv, Nz)`` inside ``shard_map`` — and therefore need the
+*local* wavenumber slabs, which depend on the rank's (u, v) grid coordinates.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.fft3d import FFT3DPlan
+
+
+def _flat_index(axes):
+    if not axes:
+        return 0
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def local_wavenumbers(plan: FFT3DPlan, dtype=jnp.float64):
+    """(kx, ky, kz) integer wavenumbers for this rank's Z-pencil slab.
+
+    kx: slab of the padded spectral X axis (r2c keeps 0..N/2 then zeros);
+    ky: slab of fftfreq-ordered Ny; kz: full fftfreq-ordered Nz.
+    """
+    nx, ny, nz = plan.n
+    g = plan.grid
+    u = _flat_index(g.u_axes)
+    v = _flat_index(g.v_axes)
+
+    def fftfreq_int(n):
+        k = jnp.arange(n)
+        return jnp.where(k <= n // 2 - 1 + (n % 2), k, k - n).astype(dtype)
+
+    if plan.real:
+        kx_full = jnp.arange(plan.kx, dtype=dtype)  # bins beyond keep are pad
+    else:
+        kx_full = fftfreq_int(nx)
+    lx = plan.kx // g.pu
+    kx = lax.dynamic_slice_in_dim(kx_full, u * lx, lx)
+
+    ky_full = fftfreq_int(ny)
+    ly = ny // g.pv
+    ky = lax.dynamic_slice_in_dim(ky_full, v * ly, ly)
+
+    kz = fftfreq_int(nz)
+    return kx[:, None, None], ky[None, :, None], kz[None, None, :]
+
+
+def pad_mask(plan: FFT3DPlan, dtype=jnp.float64):
+    """1 on significant kx bins, 0 on the r2c shard padding."""
+    g = plan.grid
+    u = _flat_index(g.u_axes)
+    lx = plan.kx // g.pu
+    idx = u * lx + jnp.arange(lx)
+    return (idx < plan.kx_keep).astype(dtype)[:, None, None]
+
+
+def dealias_mask(plan: FFT3DPlan, dtype=jnp.float64):
+    """2/3-rule mask for the pseudo-spectral nonlinear term."""
+    kx, ky, kz = local_wavenumbers(plan, dtype)
+    nx, ny, nz = plan.n
+    m = ((jnp.abs(kx) < nx / 3.0)
+         & (jnp.abs(ky) < ny / 3.0)
+         & (jnp.abs(kz) < nz / 3.0))
+    out = m.astype(dtype)
+    if plan.real:
+        out = out * pad_mask(plan, dtype)
+    return out
+
+
+def k_squared(plan: FFT3DPlan, dtype=jnp.float64):
+    kx, ky, kz = local_wavenumbers(plan, dtype)
+    return kx * kx + ky * ky + kz * kz
+
+
+def poisson_solve(plan: FFT3DPlan, fr, fi):
+    """∇²φ = f  ⇒  φ̂ = −f̂ / k² (zero-mean gauge; k=0 mode zeroed)."""
+    k2 = k_squared(plan, fr.dtype)
+    inv = jnp.where(k2 > 0, -1.0 / jnp.maximum(k2, 1e-30), 0.0)
+    if plan.real:
+        inv = inv * pad_mask(plan, fr.dtype)
+    return fr * inv, fi * inv
+
+
+def gradient(plan: FFT3DPlan, fr, fi):
+    """∂/∂(x,y,z) in spectral space: multiply by i·k (planar complex)."""
+    kx, ky, kz = local_wavenumbers(plan, fr.dtype)
+    outs = []
+    for k in (kx, ky, kz):
+        outs.append((-k * fi, k * fr))  # i*k*(fr + i fi) = -k fi + i k fr
+    return outs
+
+
+def project_divergence_free(plan: FFT3DPlan, vr, vi):
+    """Leray projection: v̂ ← v̂ − k (k·v̂)/k² for a 3-component field.
+
+    vr/vi: (3, ...) planar spectral velocity. Used by the Navier–Stokes
+    driver to enforce incompressibility.
+    """
+    kx, ky, kz = local_wavenumbers(plan, vr.dtype)
+    ks = (kx, ky, kz)
+    k2 = k_squared(plan, vr.dtype)
+    dot_r = sum(ks[c] * vr[c] for c in range(3))
+    dot_i = sum(ks[c] * vi[c] for c in range(3))
+    inv = jnp.where(k2 > 0, 1.0 / jnp.maximum(k2, 1e-30), 0.0)
+    pr = jnp.stack([vr[c] - ks[c] * dot_r * inv for c in range(3)])
+    pi = jnp.stack([vi[c] - ks[c] * dot_i * inv for c in range(3)])
+    return pr, pi
+
+
+def energy_spectrum_total(plan: FFT3DPlan, vr, vi):
+    """Total kinetic energy Σ|v̂|² over local slab (psum over the grid)."""
+    g = plan.grid
+    e = jnp.sum(vr * vr + vi * vi)
+    axes = tuple(g.u_axes) + tuple(g.v_axes)
+    if axes:
+        e = lax.psum(e, axes if len(axes) > 1 else axes[0])
+    return e

@@ -1,0 +1,74 @@
+"""Network topology characterization (paper §3.2.6, §5.5).
+
+The 2D processor grid puts X↔Y traffic on rows and Y↔Z traffic on columns —
+"rows and columns never exchange data traffic and can live on separated
+networks". This module sizes those networks for both fabrics of the thesis
+and answers the scalability question of Figs 5.11/5.12.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import perfmodel as pm
+
+LINK_CAPS_GBPS = (100.0, 200.0, 400.0)      # thesis reference lines
+FREQS_MHZ = (180.0, 250.0, 380.0)           # slow / standard / very fast engine
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    """Sizing of one fabric choice for a √P×√P grid."""
+    topology: str           # "switched" | "torus"
+    p: int
+    r: int
+    f_mhz: float
+
+    @property
+    def nics_per_node(self) -> int:
+        """Fig. 5.9/5.10: 4 links for the torus, 2 for the switched grid."""
+        return 4 if self.topology == "torus" else 2
+
+    @property
+    def required_bw_bytes_s(self) -> float:
+        fn = pm.b_net_switched if self.topology == "switched" else pm.b_net_torus
+        return fn(self.p, self.r, self.f_mhz * 1e6)
+
+    @property
+    def required_bw_gbit_s(self) -> float:
+        return self.required_bw_bytes_s * 8.0 / 1e9
+
+    def fits(self, link_gbps: float) -> bool:
+        return self.required_bw_gbit_s <= link_gbps
+
+    @property
+    def n_switches(self) -> int:
+        """2·√P row/column switches for the switched mesh, 0 for the torus."""
+        return 0 if self.topology == "torus" else 2 * int(math.sqrt(self.p))
+
+
+def bandwidth_curves(topology: str, r_values=(1, 2, 4), freqs_mhz=FREQS_MHZ,
+                     sqrt_p_values=range(2, 33)):
+    """The curves of Fig. 5.11 (switched) / Fig. 5.12 (torus): required
+    network bandwidth (Gbit/s) vs grid side √P, per (R, f)."""
+    curves = {}
+    for r in r_values:
+        for f in freqs_mhz:
+            curves[(r, f)] = [
+                (q, NetworkPlan(topology, q * q, r, f).required_bw_gbit_s)
+                for q in sqrt_p_values
+            ]
+    return curves
+
+
+def scalability_summary(link_gbps: float = 200.0):
+    """The thesis' conclusion quantified: torus is fine for √P ≤ 4; the
+    switched fabric scales to √P ≤ 32 (32-port full-bisection switches)."""
+    out = {}
+    for topo in ("switched", "torus"):
+        for r in (1, 2, 4):
+            for f in FREQS_MHZ:
+                out[(topo, r, f)] = pm.max_scalable_p(
+                    r, f * 1e6, link_gbps * 1e9, topology=topo, sq_max=32)
+    return out

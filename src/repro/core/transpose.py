@@ -1,0 +1,132 @@
+"""Distributed pencil transposes — the paper's "fold communications" (§3.2.4).
+
+Two network models, mirroring §5.5:
+
+* ``mode="switched"`` — a single ``lax.all_to_all`` along the processor-grid
+  axis. This is the 2D switched fabric of Fig. 5.10: XLA lowers it to one
+  full-bisection exchange; required bandwidth follows Eq. 5.5.
+* ``mode="torus"``   — a ring algorithm of P−1 ``lax.ppermute`` rounds, round
+  r carrying the block destined r hops away. On a TPU torus a shift-by-r
+  collective-permute is routed over r ICI hops, reproducing the multi-hop
+  degradation of Eq. 5.6 / Fig. 5.12 (APEnet-style DOR routing).
+
+All functions run *inside* ``shard_map`` over the FFT mesh axes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+MODES = ("switched", "torus")
+
+
+def _flat_axis_index(axes: tuple[str, ...]):
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def _axis_size(axes: tuple[str, ...]) -> int:
+    return math.prod(lax.axis_size(a) for a in axes)
+
+
+def all_to_all_blocks(x, axes: tuple[str, ...], *, split_axis: int,
+                      concat_axis: int, mode: str = "switched"):
+    """Exchange P equal blocks of ``x`` (split along ``split_axis``) so block
+    j goes to rank j; received blocks concatenate along ``concat_axis``
+    ordered by source rank. ``tiled`` all-to-all semantics."""
+    assert mode in MODES, mode
+    axes = tuple(axes)
+    if not axes:  # Pu (or Pv) == 1: the exchange degenerates to identity
+        return x
+    if mode == "switched":
+        name = axes if len(axes) > 1 else axes[0]
+        return lax.all_to_all(x, name, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+    return _ring_all_to_all(x, axes, split_axis=split_axis,
+                            concat_axis=concat_axis)
+
+
+def _ring_all_to_all(x, axes, *, split_axis: int, concat_axis: int):
+    """P−1 ppermute rounds; round r ships the block for rank (me+r) mod P."""
+    p = _axis_size(axes)
+    me = _flat_axis_index(axes)
+    n = x.shape[split_axis]
+    assert n % p == 0, (n, p)
+    blk = n // p
+    # stack blocks on a fresh leading axis: (P, ..., blk, ...)
+    xs = x.reshape(x.shape[:split_axis] + (p, blk) + x.shape[split_axis + 1:])
+    xs = jnp.moveaxis(xs, split_axis, 0)
+    out = jnp.zeros_like(xs)
+    # own block stays local
+    own = lax.dynamic_index_in_dim(xs, me, axis=0, keepdims=True)
+    out = lax.dynamic_update_index_in_dim(out, own, me, axis=0)
+    name = axes if len(axes) > 1 else axes[0]
+    for r in range(1, p):
+        send = lax.dynamic_index_in_dim(xs, (me + r) % p, axis=0, keepdims=True)
+        perm = [(i, (i + r) % p) for i in range(p)]
+        recv = lax.ppermute(send, name, perm)
+        out = lax.dynamic_update_index_in_dim(out, recv, (me - r) % p, axis=0)
+    out = jnp.moveaxis(out, 0, concat_axis)
+    # merge the rank axis with the original concat dim (rank-major block order,
+    # matching tiled all_to_all semantics)
+    return out.reshape(out.shape[:concat_axis]
+                       + (p * out.shape[concat_axis + 1],)
+                       + out.shape[concat_axis + 2:])
+
+
+# ---------------------------------------------------------------------------
+# The two fold communications of the 3D FFT (hardware tasks C and G, §4.2).
+# All operate on the LAST THREE axes; arbitrary leading (batch / μ-component)
+# axes pass through untouched — this is what the paper's "parallel vector
+# processing" (§4.4.1) rides on.
+# ---------------------------------------------------------------------------
+
+def _swap_last3(a):
+    perm = tuple(range(a.ndim - 3)) + (a.ndim - 1, a.ndim - 2, a.ndim - 3)
+    return a.transpose(perm)
+
+
+def _swap_last2(a):
+    perm = tuple(range(a.ndim - 3)) + (a.ndim - 3, a.ndim - 1, a.ndim - 2)
+    return a.transpose(perm)
+
+
+def xy_fold(a, u_axes, *, mode="switched"):
+    """X-pencil → Y-pencil: (..., Ny/Pu, Nz/Pv, Kx) → (..., Kx/Pu, Nz/Pv, Ny).
+
+    Data moves only among the Pu ranks of the same processor-grid row
+    (§3.2.6) — rows and columns never exchange traffic.
+    """
+    d = a.ndim
+    b = all_to_all_blocks(a, u_axes, split_axis=d - 1, concat_axis=d - 3, mode=mode)
+    return _swap_last3(b)
+
+
+def xy_unfold(a, u_axes, *, mode="switched"):
+    """Y-pencil → X-pencil (inverse of xy_fold)."""
+    d = a.ndim
+    b = _swap_last3(a)  # (..., Ny, Nz/Pv, Kx/Pu)
+    return all_to_all_blocks(b, u_axes, split_axis=d - 3, concat_axis=d - 1, mode=mode)
+
+
+def yz_fold(a, v_axes, *, mode="switched"):
+    """Y-pencil → Z-pencil: (..., Kx/Pu, Nz/Pv, Ny) → (..., Kx/Pu, Ny/Pv, Nz).
+
+    Moves along the Pv ranks of the same grid column.
+    """
+    d = a.ndim
+    b = all_to_all_blocks(a, v_axes, split_axis=d - 1, concat_axis=d - 2, mode=mode)
+    return _swap_last2(b)
+
+
+def yz_unfold(a, v_axes, *, mode="switched"):
+    """Z-pencil → Y-pencil (inverse of yz_fold)."""
+    d = a.ndim
+    b = _swap_last2(a)  # (..., Kx/Pu, Nz, Ny/Pv)
+    return all_to_all_blocks(b, v_axes, split_axis=d - 2, concat_axis=d - 1, mode=mode)

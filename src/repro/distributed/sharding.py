@@ -1,0 +1,138 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Params carry logical axis names (the mirror tree built by ``init_model``);
+this module turns them into ``PartitionSpec``s with two safeguards:
+
+* a mesh axis is used at most once per spec (first logical axis wins);
+* a dim must divide evenly by the mesh-axis size, else it falls back to
+  replication (e.g. smollm's 15 heads on a 16-way model axis).
+
+DP over (pod, data); FSDP = params' ``embed`` dim over ``data``; TP over
+``model`` (heads / mlp / vocab / experts). The FFT subsystem maps its pencil
+grid (Pu, Pv) onto the same axes (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (tuple entries mean "all of these")
+PARAM_RULES = {
+    "embed": ("data",),          # FSDP / ZeRO-3 param sharding
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "heads_x": ("model",),       # rwkv fused-head projections
+    "mlp": ("model",),
+    "expert_mlp": None,
+    "experts": ("model",),       # expert parallelism
+    "kv_lora": None,
+    "embed_out": ("model",),
+    "head_dim": None, "layers": None, "sub": None, "seq": None,
+    "five": None, "two": None, "conv": None, "state": None, "lora": None,
+}
+
+ACT_RULES = {
+    "batch": ("data",),
+    "seq": None, "embed": None, "heads": ("model",), "kv_heads": ("model",),
+    "mlp": ("model",), "experts": ("model",), "head_dim": None,
+    "vocab": ("model",),
+}
+
+
+def multipod_rules(rules):
+    """Extend DP/FSDP axes with the pod axis: batch over (pod, data)."""
+    out = dict(rules)
+    if "batch" in out:
+        out["batch"] = ("pod", "data")
+    return out
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def spec_for(mesh: Mesh, logical: tuple, shape: tuple, rules) -> P:
+    """PartitionSpec for one param given its logical axes and shape."""
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        rule = rules.get(name)
+        if rule is None:
+            parts.append(None)
+            continue
+        rule = tuple(a for a in rule if a in mesh.shape and a not in used)
+        if not rule or dim % _axes_size(mesh, rule) != 0:
+            parts.append(None)
+            continue
+        used.update(rule)
+        parts.append(rule if len(rule) > 1 else rule[0])
+    return P(*parts)
+
+
+def tree_specs(mesh: Mesh, axes_tree, shapes_tree, rules=None):
+    """Pytree of PartitionSpecs mirroring params."""
+    rules = rules or PARAM_RULES
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    return jax.tree.map(
+        lambda ax, sh: spec_for(mesh, ax, sh.shape, rules),
+        axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+def tree_shardings(mesh: Mesh, axes_tree, shapes_tree, rules=None):
+    specs = tree_specs(mesh, axes_tree, shapes_tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh: Mesh, ndim: int, rules=None) -> P:
+    """Batch-leading activation spec: (batch, ...replicated)."""
+    rules = rules or ACT_RULES
+    b = tuple(a for a in rules.get("batch", ()) if a in mesh.shape)
+    lead = b if len(b) > 1 else (b[0] if b else None)
+    return P(*((lead,) + (None,) * (ndim - 1)))
+
+
+def cache_specs(mesh: Mesh, cache_shapes, cfg, *, seq_shard: bool = False,
+                rules=None):
+    """Decode-cache shardings: batch over (pod,data), kv heads over model if
+    divisible; ``seq_shard`` (long_500k) shards the time axis over data."""
+    rules = rules or ACT_RULES
+    b_axes = tuple(a for a in rules.get("batch", ("data",)) if a in mesh.shape)
+    b_lead = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+
+    def one(path_leaf_shape):
+        name, sh = path_leaf_shape
+        if name == "len" or len(sh) == 0:
+            return P()
+        if name in ("k", "v", "xk", "xv", "k_scale", "v_scale"):  # (L,B,T,[H,]D)
+            parts = [None] * len(sh)
+            if seq_shard:
+                if b_axes and sh[2] % _axes_size(mesh, b_axes) == 0:
+                    parts[2] = b_lead
+            else:
+                if b_lead is not None and sh[1] % _axes_size(mesh, b_axes) == 0:
+                    parts[1] = b_lead
+            if len(sh) >= 5 and "model" in mesh.shape:
+                if sh[3] % mesh.shape["model"] == 0:
+                    parts[3] = "model"
+                elif sh[4] % mesh.shape["model"] == 0:
+                    # kv heads don't divide (e.g. 20 heads / 16-way): shard
+                    # head_dim instead — replicating a 32k cache costs
+                    # 16×of HBM (qwen1.5 decode_32k: 108 GiB observed)
+                    parts[4] = "model"
+            return P(*parts)
+        # states (rwkv/mamba): (L, B, ...) or (L, sub, B, ...)
+        parts = [None] * len(sh)
+        bdim = 1 if name in ("x_tm", "wkv", "x_cm") else 2
+        if b_lead is not None and len(sh) > bdim and sh[bdim] % _axes_size(mesh, b_axes) == 0:
+            parts[bdim] = b_lead
+        return P(*parts)
+
+    return {k: (NamedSharding(mesh, one((k, tuple(v.shape)))) if hasattr(v, "shape")
+                else NamedSharding(mesh, P()))
+            for k, v in cache_shapes.items()}

@@ -1,0 +1,113 @@
+"""Jit'd public wrappers around the FFT engine.
+
+``fft1d(x_re, x_im, axis=..., backend=...)`` is the only entry point the rest
+of the framework uses; ``backend`` selects:
+
+* ``"pallas"`` — the Pallas radix-2 DIF engine (interpret mode off-TPU),
+* ``"ref"``    — the pure-jnp oracle with the identical dataflow,
+* ``"jnp"``    — ``jnp.fft`` (XLA's FFT), used as ground truth and as the
+  fastest CPU path for large development runs,
+* ``"mxu"``    — beyond-paper four-step FFT as MXU matmuls (fft_mxu.py).
+
+All take/return planar complex (re, im) pairs, any float dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fft_radix2 import fft1d_pallas, ifft1d_pallas
+
+BACKENDS = ("pallas", "ref", "jnp", "mxu")
+
+
+def _move_last(x, axis):
+    return jnp.moveaxis(x, axis, -1)
+
+
+def _unmove_last(x, axis):
+    return jnp.moveaxis(x, -1, axis)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "backend", "inverse"))
+def fft1d(x_re, x_im, *, axis: int = -1, backend: str = "pallas", inverse: bool = False):
+    """Complex-to-complex FFT along ``axis`` (planar in/out)."""
+    assert backend in BACKENDS, backend
+    xr, xi = _move_last(x_re, axis), _move_last(x_im, axis)
+    if backend == "jnp":
+        z = xr.astype(jnp.complex64 if xr.dtype == jnp.float32 else jnp.complex128)
+        z = z + 1j * xi.astype(z.dtype)
+        z = jnp.fft.ifft(z) if inverse else jnp.fft.fft(z)
+        yr, yi = z.real.astype(xr.dtype), z.imag.astype(xr.dtype)
+    elif backend == "ref":
+        f = _ref.ifft_dif_planar if inverse else _ref.fft_dif_planar
+        yr, yi = f(xr, xi)
+    elif backend == "mxu":
+        from repro.kernels.fft_mxu import fft1d_mxu
+        if inverse:
+            yr, yi = fft1d_mxu(xr, -xi)
+            scale = jnp.asarray(1.0 / xr.shape[-1], xr.dtype)
+            yr, yi = yr * scale, -yi * scale
+        else:
+            yr, yi = fft1d_mxu(xr, xi)
+    else:
+        f = ifft1d_pallas if inverse else fft1d_pallas
+        yr, yi = f(xr, xi)
+    return _unmove_last(yr, axis), _unmove_last(yi, axis)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "backend", "packed"))
+def rfft1d(x, *, axis: int = -1, backend: str = "pallas", packed: bool = False):
+    """Real-to-complex FFT keeping N/2+1 bins (paper §3.2.5).
+
+    ``packed=True`` enables the beyond-paper even/odd packing (one N/2-point
+    complex FFT instead of an N-point one). The faithful default mirrors the
+    thesis: run the general complex engine on (x, 0).
+    """
+    xr = _move_last(x, axis)
+    n = xr.shape[-1]
+    if packed:
+        yr, yi = _ref.rfft_packed_planar(xr) if backend != "pallas" else _rfft_packed_pallas(xr)
+    else:
+        zr, zi = fft1d(xr, jnp.zeros_like(xr), axis=-1, backend=backend)
+        yr, yi = zr[..., : n // 2 + 1], zi[..., : n // 2 + 1]
+    return _unmove_last(yr, axis), _unmove_last(yi, axis)
+
+
+def _rfft_packed_pallas(x):
+    """Packed R2C on top of the Pallas engine (untangle stays in jnp)."""
+    import numpy as np
+
+    n = x.shape[-1]
+    h = n // 2
+    zr, zi = fft1d_pallas(x[..., 0::2], x[..., 1::2])
+    idx = (-jnp.arange(h)) % h
+    zcr, zci = zr[..., idx], -zi[..., idx]
+    er, ei = 0.5 * (zr + zcr), 0.5 * (zi + zci)
+    o_r, o_i = 0.5 * (zi - zci), -0.5 * (zr - zcr)
+    k = np.arange(h)
+    wr = jnp.asarray(np.cos(-2 * np.pi * k / n), dtype=x.dtype)
+    wi = jnp.asarray(np.sin(-2 * np.pi * k / n), dtype=x.dtype)
+    yr = er + (o_r * wr - o_i * wi)
+    yi = ei + (o_r * wi + o_i * wr)
+    yr = jnp.concatenate([yr, er[..., :1] - o_r[..., :1]], axis=-1)
+    yi = jnp.concatenate([yi, ei[..., :1] - o_i[..., :1]], axis=-1)
+    return yr, yi
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "backend", "n"))
+def irfft1d(x_re, x_im, *, n: int, axis: int = -1, backend: str = "pallas"):
+    """Complex-to-real inverse, reconstructing the Hermitian upper half."""
+    xr, xi = _move_last(x_re, axis), _move_last(x_im, axis)
+    k = xr.shape[-1]
+    assert k == n // 2 + 1, (k, n)
+    # rebuild bins n/2+1 .. n-1 by conjugate symmetry
+    idx = jnp.arange(n // 2 - 1, 0, -1)
+    fr = jnp.concatenate([xr, xr[..., idx]], axis=-1)
+    fi = jnp.concatenate([xi, -xi[..., idx]], axis=-1)
+    yr, _ = fft1d(fr, fi, axis=-1, backend=backend, inverse=True)
+    return _unmove_last(yr, axis)

@@ -1,0 +1,149 @@
+"""Pure-jnp oracles for the radix-2 DIF FFT engine (paper §3.3, Fig. 3.7).
+
+Everything here operates on *planar complex* data — a pair ``(re, im)`` of real
+arrays — because the Pallas TPU kernel cannot use native complex dtypes. The
+reference implements exactly the algorithm the hardware engine implements:
+``log2(N)`` decimation-in-frequency butterfly stages followed by the
+bit-reversal reorder (the paper's "on-chip reordering table"), so kernel vs
+reference comparisons are algorithm-identical, while correctness of the
+algorithm itself is separately asserted against ``jnp.fft``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def bitrev_permutation(n: int) -> np.ndarray:
+    """Indices p with p[k] = bit-reverse(k) for a log2(n)-bit index."""
+    assert is_pow2(n)
+    bits = n.bit_length() - 1
+    p = np.arange(n)
+    out = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        out |= ((p >> b) & 1) << (bits - 1 - b)
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def twiddle_table_np(n: int, dtype: str = "float64") -> tuple[np.ndarray, np.ndarray]:
+    """The twiddle ROM (paper Fig. 3.8): rows s = stage, N/2 entries per row.
+
+    Row ``s`` holds the stage-s twiddles ``W_{N/2^s}^j`` (j = 0..N/2^{s+1}-1)
+    tiled across the 2^s butterfly groups, matching the flattened
+    ``(groups, half)`` layout used by both the reference and the kernel.
+    """
+    assert is_pow2(n) and n >= 2
+    stages = n.bit_length() - 1
+    re = np.zeros((stages, n // 2), dtype=np.float64)
+    im = np.zeros((stages, n // 2), dtype=np.float64)
+    for s in range(stages):
+        half = n >> (s + 1)          # butterfly span at this stage
+        groups = 1 << s
+        j = np.arange(half)
+        ang = -2.0 * np.pi * j / (2 * half)
+        re[s] = np.tile(np.cos(ang), groups)
+        im[s] = np.tile(np.sin(ang), groups)
+    return re.astype(dtype), im.astype(dtype)
+
+
+def fft_dif_planar(x_re, x_im):
+    """Radix-2 DIF FFT over the last axis; natural-order in and out.
+
+    Reference for the Pallas kernel — same stage/shuffle/bit-reversal
+    structure, expressed in pure jnp. Any float dtype.
+    """
+    n = x_re.shape[-1]
+    assert is_pow2(n) and n >= 2, f"N must be a power of two >= 2, got {n}"
+    stages = n.bit_length() - 1
+    dtype = x_re.dtype
+    tw_re_np, tw_im_np = twiddle_table_np(n, str(np.dtype(dtype)))
+    lead = x_re.shape[:-1]
+
+    xr = x_re.reshape((-1, n))
+    xi = x_im.reshape((-1, n))
+    for s in range(stages):
+        half = n >> (s + 1)
+        groups = 1 << s
+        wr = jnp.asarray(tw_re_np[s].reshape(1, groups, half), dtype=dtype)
+        wi = jnp.asarray(tw_im_np[s].reshape(1, groups, half), dtype=dtype)
+        xr = xr.reshape(-1, groups, 2, half)
+        xi = xi.reshape(-1, groups, 2, half)
+        ar, br = xr[:, :, 0, :], xr[:, :, 1, :]
+        ai, bi = xi[:, :, 0, :], xi[:, :, 1, :]
+        # Butterfly (paper Eq. 3.8): top = a + b ; bot = (a - b) * W
+        tr, ti = ar + br, ai + bi
+        dr, di = ar - br, ai - bi
+        ur = dr * wr - di * wi
+        ui = dr * wi + di * wr
+        xr = jnp.stack([tr, ur], axis=2).reshape(-1, n)
+        xi = jnp.stack([ti, ui], axis=2).reshape(-1, n)
+    # Output of the DIF tree is bit-reversed; reorder to natural order.
+    perm = jnp.asarray(bitrev_permutation(n))
+    xr = xr[:, perm].reshape(*lead, n)
+    xi = xi[:, perm].reshape(*lead, n)
+    return xr, xi
+
+
+def ifft_dif_planar(x_re, x_im):
+    """Inverse via conj trick: ifft(x) = conj(fft(conj(x))) / N (paper §3.2.4)."""
+    n = x_re.shape[-1]
+    yr, yi = fft_dif_planar(x_re, -x_im)
+    scale = jnp.asarray(1.0 / n, dtype=x_re.dtype)
+    return yr * scale, -yi * scale
+
+
+def fft_oracle(x_re, x_im):
+    """Ground truth via jnp.fft (complex math), returned planar."""
+    y = jnp.fft.fft(x_re.astype(jnp.float64) + 1j * x_im.astype(jnp.float64))
+    return y.real.astype(x_re.dtype), y.imag.astype(x_re.dtype)
+
+
+def rfft_planar(x):
+    """Real-input FFT over the last axis, keeping the N/2+1 significant bins.
+
+    Paper §3.2.5: the X-phase transform is real→complex; by Hermitian symmetry
+    only the first N/2+1 outputs are kept (the general complex engine is used,
+    as in the thesis — no real-optimized datapath).
+    """
+    n = x.shape[-1]
+    yr, yi = fft_dif_planar(x, jnp.zeros_like(x))
+    return yr[..., : n // 2 + 1], yi[..., : n // 2 + 1]
+
+
+def rfft_packed_planar(x):
+    """Beyond-paper optimization: N-point real FFT via one N/2-point complex FFT.
+
+    Packs even/odd samples as real/imag parts, then untangles with the
+    standard split: halves butterfly work and VMEM traffic for the X phase.
+    """
+    n = x.shape[-1]
+    assert n % 2 == 0
+    h = n // 2
+    ze = x[..., 0::2]
+    zo = x[..., 1::2]
+    zr, zi = fft_dif_planar(ze, zo)
+    # Zc[k] = conj(Z[(h-k) mod h])
+    idx = (-jnp.arange(h)) % h
+    zcr, zci = zr[..., idx], -zi[..., idx]
+    # E = (Z + Zc)/2 (DFT of evens), O = (Z - Zc)/(2i) (DFT of odds)
+    er = 0.5 * (zr + zcr)
+    ei = 0.5 * (zi + zci)
+    o_r = 0.5 * (zi - zci)
+    o_i = -0.5 * (zr - zcr)
+    k = np.arange(h)
+    wr = jnp.asarray(np.cos(-2 * np.pi * k / n), dtype=x.dtype)
+    wi = jnp.asarray(np.sin(-2 * np.pi * k / n), dtype=x.dtype)
+    # X[k] = E[k] + W_N^k O[k], k = 0..h-1 ; X[h] = E[0] - O[0]
+    xr = er + (o_r * wr - o_i * wi)
+    xi = ei + (o_r * wi + o_i * wr)
+    xr = jnp.concatenate([xr, er[..., :1] - o_r[..., :1]], axis=-1)
+    xi = jnp.concatenate([xi, ei[..., :1] - o_i[..., :1]], axis=-1)
+    return xr, xi

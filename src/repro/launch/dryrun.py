@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analysis for §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --multi-pod
+
+Each cell writes benchmarks/out/dryrun/<arch>__<shape>__<mesh>.json
+incrementally, so an interrupted sweep resumes with --skip-existing.
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable
+from repro.configs.base import count_active_params, count_params
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch import specs as SP
+from repro.models import common as cm
+from repro.models.transformer import RunCfg, decode_step, prefill
+from repro.optim import adamw
+from repro.training.train_loop import TrainCfg, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "out", "dryrun")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "c64": 8, "c128": 16,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s+(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|c64|c128|s64|u64|s32|u32|s16|u16|"
+                       r"s8|u8|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op (start ops counted once;
+    matching -done ops carry no payload of their own)."""
+    per_op: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * DTYPE_BYTES[dt]
+        per_op[op] = per_op.get(op, 0) + nbytes
+        per_op[op + "_count"] = per_op.get(op + "_count", 0) + 1
+    per_op["total"] = sum(v for k, v in per_op.items()
+                          if not k.endswith("_count"))
+    return per_op
+
+
+def build_cell(arch: str, shape_name: str, mesh, run_over=None):
+    """Returns (fn, arg_structs) ready to lower for this cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    data_axes, model_axes = mesh_axes(mesh)
+    rules = sh.PARAM_RULES
+    act_rules = dict(sh.ACT_RULES)
+    if "pod" in mesh.shape:
+        act_rules = sh.multipod_rules(act_rules)
+    cm.set_activation_rules({k: (v if v is None else
+                                 (v if len(v) > 1 else v[0]))
+                             for k, v in act_rules.items()})
+    seq_shard = shape.name == "long_500k"
+    run = RunCfg(mesh=mesh, data_axes=data_axes, model_axes=model_axes,
+                 seq_shard_kv=seq_shard, remat=cfg.remat)
+    if run_over:
+        run = run_over(run)
+
+    params_sds, axes, param_sh = SP.param_structs(cfg, mesh)
+
+    if shape.kind == "train":
+        tcfg = TrainCfg(microbatches=cfg.train_microbatches,
+                        adamw=adamw.AdamWConfig(moment_dtype=cfg.opt_state_dtype))
+        step = make_train_step(cfg, run, tcfg)
+        opt_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.dtype(cfg.opt_state_dtype), sharding=s.sharding),
+            params_sds)
+        opt = {"m": opt_sds, "v": opt_sds,
+               "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch = SP.batch_specs(cfg, shape, mesh)
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (params_sds, opt, batch)
+    if shape.kind == "prefill":
+        batch = SP.batch_specs(cfg, shape, mesh)
+        pf = lambda p, b: prefill(cfg, run, p, b)
+        # constrain the returned cache's shardings (otherwise XLA replicates
+        # the multi-GiB KV stacks: qwen1.5 prefill_32k +21 GiB observed)
+        out_shapes = jax.eval_shape(pf, params_sds, batch)
+        cache_sh = sh.cache_specs(mesh, out_shapes[1], cfg)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        logits_sh = NamedSharding(mesh, sh.batch_spec(mesh, 3))
+        fn = jax.jit(pf, out_shardings=(logits_sh, cache_sh))
+        return fn, (params_sds, batch)
+    # decode
+    cache, tok = SP.decode_specs(cfg, shape, mesh, seq_shard=seq_shard)
+    fn = jax.jit(lambda p, c, t: decode_step(cfg, run, p, c, t),
+                 donate_argnums=(1,))
+    return fn, (params_sds, cache, tok)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             keep_hlo: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": 512 if multi_pod else 256}
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, SHAPES[shape_name])
+    if not ok:
+        rec["status"] = why
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            fn, args = build_cell(arch, shape_name, mesh)
+            lowered = fn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_bytes": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        from repro.launch.hlo_cost import analyze_hlo
+        walk = analyze_hlo(txt)
+        rec["cost_tripaware"] = {"flops": walk["flops"],
+                                 "bytes_accessed": walk["bytes"],
+                                 "collectives": walk["collectives"]}
+        rec["model_params"] = count_params(cfg)
+        rec["model_params_active"] = count_active_params(cfg)
+        rec["status"] = "ok"
+        if keep_hlo:
+            with open(os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo"),
+                      "w") as f:
+                f.write(txt)
+    except Exception as e:  # record failures; the sweep continues
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
+                 schedule: str = "pipelined", chunks: int = 4,
+                 net: str = "switched", r2c_packed: bool = False,
+                 backend: str = "jnp", tag: str = "") -> dict:
+    """Dry-run the paper's own workload: N³ real 3D FFT on the production
+    mesh (pencil grid = (pod·data, model))."""
+    import math as _math
+
+    from repro.core.fft3d import make_fft3d
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": f"fft{n}{tag}", "shape": f"{schedule}_{net}"
+           + ("_packed" if r2c_packed else ""),
+           "mesh": mesh_name, "chips": 512 if multi_pod else 256}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    u_axes = ("pod", "data") if multi_pod else ("data",)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            fwd, inv, plan = make_fft3d(
+                mesh, (n, n, n), u_axes=u_axes, v_axes=("model",), real=True,
+                backend=backend, schedule=schedule, chunks=chunks, net=net,
+                r2c_packed=r2c_packed)
+            x = jax.ShapeDtypeStruct(
+                (n, n, n), jnp.float32,
+                sharding=plan.grid.sharding(mesh))
+            lowered = fwd.lower(x)
+            rec["lower_s"] = round(time.time() - t0, 2)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 2)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_per_device_bytes": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - ma.alias_size_in_bytes)}
+        ca = compiled.cost_analysis() or {}
+        rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+        txt = compiled.as_text()
+        rec["collectives"] = collective_bytes(txt)
+        from repro.launch.hlo_cost import analyze_hlo
+        walk = analyze_hlo(txt)
+        rec["cost_tripaware"] = {"flops": walk["flops"],
+                                 "bytes_accessed": walk["bytes"],
+                                 "collectives": walk["collectives"]}
+        # "model params" stand-in: the transform size; model flops = 5N³log2 N³
+        rec["model_params"] = n ** 3
+        rec["model_params_active"] = n ** 3
+        rec["fft_model_flops_total"] = 5.0 * n ** 3 * _math.log2(float(n) ** 3)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fft", action="store_true", help="paper FFT cells")
+    ap.add_argument("--fft-n", type=int, default=0)
+    ap.add_argument("--fft-schedule", default="pipelined")
+    ap.add_argument("--fft-net", default="switched")
+    ap.add_argument("--fft-chunks", type=int, default=4)
+    ap.add_argument("--fft-packed", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.fft or args.fft_n:
+        sizes = [args.fft_n] if args.fft_n else [512, 1024, 2048, 4096]
+        meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+        for n in sizes:
+            for mp in meshes:
+                rec = run_fft_cell(n, mp, args.out,
+                                   schedule=args.fft_schedule,
+                                   chunks=args.fft_chunks, net=args.fft_net,
+                                   r2c_packed=args.fft_packed)
+                path = os.path.join(
+                    args.out, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"[fft] N={n} {rec['mesh']} {rec['shape']} -> {rec['status']}"
+                      + (f" compile={rec.get('compile_s')}s" if rec["status"] == "ok"
+                         else f" {rec.get('error', '')[:150]}"), flush=True)
+        return
+
+    archs = list(REGISTRY) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {arch} {shape} {mesh_name}")
+                    continue
+                print(f"[cell] {arch} {shape} {mesh_name} ...", flush=True)
+                rec = run_cell(arch, shape, mp, args.out, keep_hlo=args.keep_hlo)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"    -> {rec['status']}"
+                      + (f" compile={rec.get('compile_s')}s"
+                         f" peak={rec.get('memory', {}).get('peak_per_device_bytes', 0)/2**30:.2f}GiB"
+                         if rec["status"] == "ok" else
+                         f" {rec.get('error', '')[:200]}"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

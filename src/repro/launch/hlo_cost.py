@@ -1,0 +1,198 @@
+"""Trip-count-aware HLO cost model.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts while-loop bodies ONCE
+(verified: a 10-step scan of a matmul reports 1 matmul of FLOPs), which
+silently undercounts every scanned-layer model by ~L×. This walker parses
+``compiled.as_text()`` and accumulates, with each while body's contribution
+multiplied by its ``known_trip_count``:
+
+* flops        — dot ops: 2 · |out| · K (K = contracted extent);
+* bytes        — operands+results of ops at fusion boundaries (interior
+                 fusion ops don't touch HBM — same model XLA uses);
+* collectives  — result-shape bytes per collective op kind.
+
+Fusion calls recurse for FLOPs (dots inside fusions) but not for bytes.
+"""
+
+from __future__ import annotations
+
+import re
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "c64": 8, "c128": 16,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE = re.compile(r"(f64|f32|bf16|f16|c64|c128|s64|u64|s32|u32|s16|u16|s8|u8|"
+                    r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_HDR = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->")
+_DEF = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_OP = re.compile(r"^((?:\([^)]*\)|\S)+)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "custom-call", "after-all"}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(text: str):
+    m = _SHAPE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "rtext", "op", "args", "line")
+
+    def __init__(self, name, rtext, op, args, line):
+        self.name, self.rtext, self.op, self.args, self.line = \
+            name, rtext, op, args, line
+
+
+def parse(txt: str):
+    comps: dict[str, list[Instr]] = {}
+    entry = None
+    cur = None
+    for raw in txt.splitlines():
+        ls = raw.strip()
+        if ls.endswith("{"):
+            m = _HDR.match(ls)
+            if m:
+                cur = m.group(2).lstrip("%")
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        d = _DEF.match(ls)
+        if not d:
+            continue
+        rest = d.group(2)
+        o = _OP.match(rest)
+        if not o:
+            continue
+        args = o.group(3)
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        comps[cur].append(Instr(d.group(1), o.group(1), o.group(2), args, ls))
+    return comps, entry
+
+
+def analyze_hlo(txt: str):
+    comps, entry = parse(txt)
+    shapes = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            shapes[ins.name] = ins.rtext
+
+    memo_flops: dict[str, float] = {}
+    memo_bytes: dict[str, float] = {}
+    memo_coll: dict[str, dict] = {}
+
+    def visit(comp: str):
+        if comp in memo_flops:
+            return memo_flops[comp], memo_bytes[comp], memo_coll[comp]
+        flops = 0.0
+        nbytes = 0.0
+        coll: dict[str, float] = {}
+        for ins in comps.get(comp, []):
+            op = ins.op
+            if op == "while":
+                m = _TRIP.search(ins.line)
+                trip = int(m.group(1)) if m else 1
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                if bm and bm.group(1) in comps:
+                    f, b, c = visit(bm.group(1))
+                    flops += trip * f
+                    nbytes += trip * b
+                    for k, v in c.items():
+                        coll[k] = coll.get(k, 0) + trip * v
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if cm and cm.group(1) in comps:
+                    f, _, c = visit(cm.group(1))
+                    flops += f
+                    for k, v in c.items():
+                        coll[k] = coll.get(k, 0) + v
+                # bytes at the fusion boundary
+                nbytes += _shape_bytes(ins.rtext)
+                for a in re.findall(r"%([\w\.\-]+)", ins.args):
+                    nbytes += _shape_bytes(shapes.get(a, ""))
+                continue
+            if op in ("conditional", "call"):
+                for cm in re.findall(r"(?:true_computation|false_computation|"
+                                     r"branch_computations=\{?|to_apply)=?%?"
+                                     r"([\w\.\-]+)", ins.line):
+                    if cm in comps:
+                        f, b, c = visit(cm)
+                        flops += f
+                        nbytes += b
+                        for k, v in c.items():
+                            coll[k] = coll.get(k, 0) + v
+                continue
+            if op.startswith(_COLLECTIVES):
+                base = next(c for c in _COLLECTIVES if op.startswith(c))
+                if op.endswith("-done"):
+                    continue
+                coll[base] = coll.get(base, 0) + _shape_bytes(ins.rtext)
+                nbytes += _shape_bytes(ins.rtext)
+                continue
+            if op == "fft":
+                out = _dims_of(ins.rtext) or []
+                n_out = 1
+                for d in out:
+                    n_out *= d
+                ln = out[-1] if out else 1
+                import math
+                flops += 5.0 * n_out * max(math.log2(max(ln, 2)), 1.0)
+            if op in ("dot", "convolution"):
+                out = _dims_of(ins.rtext)
+                ops_names = re.findall(r"%([\w\.\-]+)", ins.args)
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+                if cm and ops_names:
+                    lhs_dims = _dims_of(shapes.get(ops_names[0], "")) or []
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            k *= lhs_dims[int(idx)]
+                if out is not None:
+                    n_out = 1
+                    for d in out:
+                        n_out *= d
+                    flops += 2.0 * n_out * k
+            if op not in _NO_BYTES:
+                nbytes += _shape_bytes(ins.rtext)
+                for a in re.findall(r"%([\w\.\-]+)", ins.args):
+                    nbytes += _shape_bytes(shapes.get(a, ""))
+        memo_flops[comp] = flops
+        memo_bytes[comp] = nbytes
+        memo_coll[comp] = coll
+        return flops, nbytes, coll
+
+    f, b, c = visit(entry)
+    c = dict(c)
+    c["total"] = sum(c.values())
+    return {"flops": f, "bytes": b, "collectives": c}

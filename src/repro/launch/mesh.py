@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Single pod: 16×16 = 256 chips (data, model). Multi-pod: 2×16×16 = 512 chips
+(pod, data, model). The FFT pencil grid maps (Pu, Pv) = (data, model), or
+((pod, data), model) multi-pod. Functions, not module constants — importing
+this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_dev_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh for tests/examples on N fake or real devices."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_axes(mesh) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """(data_axes incl. pod, model_axes) for a production-style mesh."""
+    names = mesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    return data_axes, ("model",)

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) cell — weak-type
+correct, shardable, no device allocation (the dry-run input contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.distributed import sharding as sh
+from repro.models import transformer as tf
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg, mesh) -> dict:
+    """Train/prefill batch ShapeDtypeStructs with batch-axis sharding."""
+    b, s = shape.global_batch, shape.seq_len
+    bs = NamedSharding(mesh, sh.batch_spec(mesh, 2))
+    bs3 = NamedSharding(mesh, sh.batch_spec(mesh, 3))
+    cd = jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_mode == "embeds":
+        return {"embeds": _sds((b, s, cfg.d_model), cd, bs3),
+                "labels": _sds((b, s), jnp.int32, bs)}
+    if cfg.embed_mode == "frames":
+        # decoder length capped for enc-dec training (audio: enc dominates)
+        return {"frames": _sds((b, s, cfg.d_model), cd, bs3),
+                "tokens": _sds((b, min(s, 4096)), jnp.int32, bs)}
+    return {"tokens": _sds((b, s), jnp.int32, bs)}
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeCfg, mesh, *,
+                 seq_shard: bool = False) -> tuple[dict, object]:
+    """(cache ShapeDtypeStructs, token struct) for a decode cell: one new
+    token against a KV cache of seq_len."""
+    b, t = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, b, t, t_enc=min(t, 8192) if cfg.encdec else 0))
+    shardings = sh.cache_specs(mesh, cache_shapes, cfg, seq_shard=seq_shard)
+    cache = {k: _sds(v.shape, v.dtype, shardings[k])
+             for k, v in cache_shapes.items()}
+    bs = NamedSharding(mesh, sh.batch_spec(mesh, 2) if not seq_shard
+                       else P(None, None))
+    tok = _sds((b, 1), jnp.int32, bs)
+    return cache, tok
+
+
+def param_structs(cfg: ArchConfig, mesh) -> tuple[dict, dict, object]:
+    """(params SDS tree, axes tree, shardings tree) without materializing."""
+    holder = {}
+
+    def run(key):
+        p, ax = tf.init_model(cfg, key)
+        holder["axes"] = ax
+        return p
+
+    shapes = jax.eval_shape(run, jax.random.PRNGKey(0))
+    axes = holder["axes"]
+    shardings = sh.tree_shardings(mesh, axes, shapes)
+    structs = jax.tree.map(lambda s, d: _sds(s.shape, s.dtype, d),
+                           shapes, shardings)
+    return structs, axes, shardings

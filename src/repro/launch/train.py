@@ -1,0 +1,116 @@
+"""Training driver with checkpoint/restart fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --steps 100 --batch 8 --seq 512 --mesh 1x1 --ckpt-dir /tmp/ckpt
+
+Multi-host TPU pods: run the same command per host after
+``jax.distributed.initialize()`` (see launch/scripts/). Resume is automatic:
+if the checkpoint dir has a LATEST pointer, training continues from it —
+kill -9 at any step and relaunch to verify (tests/test_checkpoint.py does).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_dev_mesh, mesh_axes
+from repro.launch import specs as SP
+from repro.models import common as cm
+from repro.models.transformer import RunCfg, init_model
+from repro.optim import adamw
+from repro.training.train_loop import TrainCfg, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--mesh", default="1x1", help="DATAxMODEL (e.g. 4x2)")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--halt-after", type=int, default=0,
+                    help="simulate a crash: exit after N steps (schedule and "
+                         "data are still configured for --steps)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    dm, mm = (int(v) for v in args.mesh.split("x"))
+    mesh = make_dev_mesh(data=dm, model=mm)
+    data_axes, model_axes = mesh_axes(mesh)
+    run = RunCfg(mesh=mesh, data_axes=data_axes, model_axes=model_axes,
+                 remat=cfg.remat)
+    cm.set_activation_rules({"batch": "data", "heads": "model", "mlp": "model",
+                             "experts": "model", "kv_heads": "model"})
+
+    params, axes = init_model(cfg, jax.random.PRNGKey(0))
+    shapes = jax.eval_shape(lambda p: p, params)
+    shardings = sh.tree_shardings(mesh, axes, shapes)
+    params = jax.device_put(params, shardings)
+    acfg = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                             warmup_steps=max(args.steps // 20, 5),
+                             moment_dtype=cfg.opt_state_dtype)
+    tcfg = TrainCfg(microbatches=args.microbatches, adamw=acfg,
+                    grad_compression=args.grad_compression)
+    opt_state = adamw.init(acfg, params)
+
+    start = 0
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and ckpt.latest_step() is not None:
+        (params, opt_state), meta = ckpt.restore(
+            (params, opt_state),
+            shardings=(shardings, jax.tree.map(lambda _: None, opt_state)))
+        start = meta["step"] + 1
+        print(f"[resume] from step {meta['step']}")
+
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, kind=(
+                          "embeds" if cfg.embed_mode == "embeds" else
+                          "frames" if cfg.embed_mode == "frames" else "tokens"),
+                      d_model=cfg.d_model)
+    pipe = Pipeline(dcfg)
+    step_fn = jax.jit(make_train_step(cfg, run, tcfg), donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        for step in range(start, args.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in pipe.batch_for_step(step).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"({(time.time() - t0):.1f}s)", flush=True)
+            if ckpt and (step % args.ckpt_every == 0 or step == args.steps - 1):
+                ckpt.save(step, (params, opt_state), meta={"arch": args.arch})
+            if args.halt_after and step + 1 >= args.halt_after:
+                if ckpt:
+                    ckpt.wait()
+                print(f"[halt] simulated crash after step {step}")
+                return losses
+    if ckpt:
+        ckpt.wait()
+    print(f"[done] first loss {losses[0]:.4f} last loss {losses[-1]:.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Shared model plumbing: parameter init with logical-axis tagging, norms,
+activation-sharding helpers. Pure JAX — params are pytrees of arrays and a
+parallel pytree of logical axis tuples drives sharding (MaxText-style rules
+live in ``repro.distributed.sharding``)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Initializer:
+    """Creates params and records each leaf's logical axes in a mirror tree."""
+
+    key: jax.Array
+    dtype: jnp.dtype
+    axes: dict = dataclasses.field(default_factory=dict)
+
+    def sub(self, name: str) -> "Initializer":
+        self.key, k = jax.random.split(self.key)
+        child = Initializer(key=k, dtype=self.dtype, axes={})
+        self.axes[name] = child.axes
+        return child
+
+    def param(self, name: str, shape, logical, scale: float | None = None,
+              mode: str = "normal"):
+        self.key, k = jax.random.split(self.key)
+        assert len(shape) == len(logical), (name, shape, logical)
+        if mode == "zeros":
+            w = jnp.zeros(shape, self.dtype)
+        elif mode == "ones":
+            w = jnp.ones(shape, self.dtype)
+        else:
+            if scale is None:
+                scale = 1.0 / np.sqrt(max(shape[0], 1))
+            w = (scale * jax.random.normal(k, shape, jnp.float32)).astype(self.dtype)
+        self.axes[name] = tuple(logical)
+        return w
+
+
+def stack_params(trees):
+    """Stack per-layer param trees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_axes(axes_tree, name: str = "layers"):
+    """Prefix every logical-axes leaf with a stacking axis (scan depth)."""
+    def fix(leaf):
+        return (name,) + tuple(leaf)
+    return jax.tree.map(fix, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6, plus_one: bool = False):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    inv = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if plus_one else w.astype(jnp.float32)
+    return (x32 * inv * scale).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding
+# ---------------------------------------------------------------------------
+
+_ACT_RULES: dict = {}
+
+
+def set_activation_rules(rules: dict) -> None:
+    """Install logical→mesh rules for activation constraints (set by the
+    launcher; empty rules = no constraints, e.g. single-device tests)."""
+    global _ACT_RULES
+    _ACT_RULES = dict(rules)
+
+
+def shard_act(x, logical):
+    """with_sharding_constraint by logical axes, if rules are installed."""
+    if not _ACT_RULES:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = tuple(_ACT_RULES.get(a) for a in logical)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, TypeError, RuntimeError):
+        return x  # no mesh in context / inside manual shard_map region
+
+
+def sinusoid_positions(t: int, d: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal embeddings (t, d)."""
+    half = d // 2
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    pos = np.arange(t)[:, None] * freqs[None, :]
+    emb = np.concatenate([np.sin(pos), np.cos(pos)], axis=1)
+    return jnp.asarray(emb, dtype)

@@ -1,0 +1,285 @@
+"""Attention (GQA/MQA), RoPE, and MLP layers with train / prefill / decode
+paths, including the sequence-sharded long-context decode used by
+``long_500k`` (flash-decoding-style log-sum-exp combine across the mesh —
+the pencil idiom: keep the KV slab local, reduce across the grid)."""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import shard_act
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, base: float = 10000.0):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim/2) f32."""
+    half = head_dim // 2
+    inv = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, half) or (S, half). Pairs (even, odd
+    halves) convention (HF llama style: split at D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
+    else:
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = x1f * c - x2f * s
+    o2 = x2f * c + x1f * s
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(ini, d_model: int, d_ff: int, mlp_type: str):
+    p = {}
+    if mlp_type in ("swiglu", "geglu"):
+        p["wi_gate"] = ini.param("wi_gate", (d_model, d_ff), ("embed", "mlp"))
+        p["wi_up"] = ini.param("wi_up", (d_model, d_ff), ("embed", "mlp"))
+    else:  # plain gelu (whisper)
+        p["wi"] = ini.param("wi", (d_model, d_ff), ("embed", "mlp"))
+        p["bi"] = ini.param("bi", (d_ff,), ("mlp",), mode="zeros")
+        p["bo"] = ini.param("bo", (d_model,), ("embed",), mode="zeros")
+    p["wo"] = ini.param("wo", (d_ff, d_model), ("mlp", "embed"))
+    return p
+
+
+def apply_mlp(p, x, mlp_type: str):
+    if mlp_type == "swiglu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    elif mlp_type == "geglu":
+        h = jax.nn.gelu(x @ p["wi_gate"], approximate=True) * (x @ p["wi_up"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"] + p["bi"].astype(x.dtype), approximate=True)
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    out = h @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    causal: bool = True
+
+
+def init_attention(ini, a: AttnDims):
+    p = {
+        "wq": ini.param("wq", (a.d_model, a.n_heads, a.head_dim),
+                        ("embed", "heads", "head_dim")),
+        "wk": ini.param("wk", (a.d_model, a.n_kv_heads, a.head_dim),
+                        ("embed", "kv_heads", "head_dim")),
+        "wv": ini.param("wv", (a.d_model, a.n_kv_heads, a.head_dim),
+                        ("embed", "kv_heads", "head_dim")),
+        "wo": ini.param("wo", (a.n_heads, a.head_dim, a.d_model),
+                        ("heads", "head_dim", "embed")),
+    }
+    if a.qkv_bias:
+        p["bq"] = ini.param("bq", (a.n_heads, a.head_dim), ("heads", "head_dim"), mode="zeros")
+        p["bk"] = ini.param("bk", (a.n_kv_heads, a.head_dim), ("kv_heads", "head_dim"), mode="zeros")
+        p["bv"] = ini.param("bv", (a.n_kv_heads, a.head_dim), ("kv_heads", "head_dim"), mode="zeros")
+    return p
+
+
+def _qkv(p, a: AttnDims, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if a.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if positions is not None:
+        cos, sin = rope_cos_sin(positions, a.head_dim, a.rope_base)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa_direct(q, k, v, a: AttnDims, mask=None):
+    """q: (B,S,H,D)  k/v: (B,T,Hkv,D); grouped heads; f32 softmax."""
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", w.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+CHUNK_THRESHOLD = 2048   # S·T above which the online-softmax path kicks in
+Q_CHUNK = 512
+K_CHUNK = 1024
+
+
+def _sdpa_chunked(q, k, v, a: AttnDims, causal: bool,
+                  q_chunk: int = Q_CHUNK, k_chunk: int = K_CHUNK):
+    """Flash-attention-style online softmax over KV blocks.
+
+    Never materializes the (S, T) score matrix — the memory-roofline fix for
+    train_4k/prefill_32k cells (EXPERIMENTS.md §Perf iteration M1). Causal
+    blocks strictly above the diagonal are skipped (halves the FLOPs).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    qc = min(q_chunk, s)
+    while s % qc:
+        qc //= 2
+    kc = min(k_chunk, t)
+    while t % kc:
+        kc //= 2
+    nq, nk = s // qc, t // kc
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = q.reshape(b, nq, qc, hkv, g, d)
+    kb = k.reshape(b, nk, kc, hkv, d)
+    dv = v.shape[-1]
+    vb = v.reshape(b, nk, kc, hkv, dv)
+
+    def q_block(qi):
+        qblk = qg[:, qi]                                     # (b,qc,hkv,g,d)
+        m0 = jnp.full((b, hkv, g, qc), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        o0 = jnp.zeros((b, hkv, g, qc, dv), jnp.float32)
+
+        def kv_step(carry, ki):
+            m, l, o = carry
+            lg = jnp.einsum("bqhgd,bkhd->bhgqk", qblk,
+                            kb[:, ki]).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * qc + jnp.arange(qc)
+                kpos = ki * kc + jnp.arange(kc)
+                lg = jnp.where(kpos[None, :] <= qpos[:, None], lg, -1e30)
+            m2 = jnp.maximum(m, jnp.max(lg, axis=-1))
+            alpha = jnp.exp(m - m2)
+            w = jnp.exp(lg - m2[..., None])
+            l2 = l * alpha + jnp.sum(w, axis=-1)
+            o2 = o * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", w, vb[:, ki].astype(jnp.float32))
+            return (m2, l2, o2), None
+
+        if causal:
+            # static upper bound on useful kv blocks for this q block
+            hi = ((qi + 1) * qc + kc - 1) // kc
+            hi = min(hi, nk)
+            ks = jnp.arange(hi)
+        else:
+            ks = jnp.arange(nk)
+        # remat the step so backward recomputes the exp-weights instead of
+        # saving a (qc, kc) tensor per kv block (§Perf iteration M2)
+        (m, l, o), _ = lax.scan(jax.checkpoint(kv_step), (m0, l0, o0), ks)
+        ob = o / jnp.maximum(l[..., None], 1e-30)
+        return ob                                           # (b,hkv,g,qc,d)
+
+    outs = [q_block(qi) for qi in range(nq)]                # unrolled over q
+    out = jnp.stack(outs, axis=3)                           # (b,hkv,g,nq,qc,dv)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(b, s, h, dv)
+    return out.astype(q.dtype)
+
+
+def _sdpa(q, k, v, a: AttnDims, mask=None, *, causal_hint=None):
+    s, t = q.shape[1], k.shape[1]
+    if causal_hint is not None and s > 1 and s * t > CHUNK_THRESHOLD ** 2:
+        return _sdpa_chunked(q, k, v, a, causal=causal_hint)
+    return _sdpa_direct(q, k, v, a, mask)
+
+
+def apply_attention(p, a: AttnDims, x, positions):
+    """Full self-attention for train / prefill; returns (out, (k, v))."""
+    q, k, v = _qkv(p, a, x, positions)
+    s, t = q.shape[1], k.shape[1]
+    if s > 1 and s * t > CHUNK_THRESHOLD ** 2:
+        o = _sdpa_chunked(q, k, v, a, causal=a.causal)
+    else:
+        mask = None
+        if a.causal:
+            mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])[None, None, None]
+        o = _sdpa_direct(q, k, v, a, mask)
+    o = shard_act(o, ("batch", "seq", "heads", "head_dim"))
+    return jnp.einsum("bshd,hdm->bsm", o, p["wo"]), (k, v)
+
+
+def apply_cross_attention(p, a: AttnDims, x, k, v):
+    """Cross-attention (whisper decoder): kv precomputed from the encoder."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    s, t = q.shape[1], k.shape[1]
+    if s > 1 and s * t > CHUNK_THRESHOLD ** 2:
+        o = _sdpa_chunked(q, k, v, a, causal=False)
+    else:
+        o = _sdpa_direct(q, k, v, a, mask=None)
+    return jnp.einsum("bshd,hdm->bsm", o, p["wo"])
+
+
+def apply_attention_decode(p, a: AttnDims, x, cache_k, cache_v, cache_len,
+                           positions):
+    """One-token decode against a (B, T_max, Hkv, D) cache.
+
+    Returns (out, new_k_entry, new_v_entry) — the caller owns the cache
+    update (so scan-stacked caches update in one place)."""
+    q, k, v = _qkv(p, a, x, positions)  # s == 1
+    t = cache_k.shape[1]
+    ck = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), cache_len, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), cache_len, axis=1)
+    valid = (jnp.arange(t)[None, :] <= cache_len)[None, None, None]  # (1,1,1,1,T)->broadcast
+    o = _sdpa(q, ck, cv, a, mask=valid)
+    return jnp.einsum("bshd,hdm->bsm", o, p["wo"]), ck, cv
+
+
+def decode_attention_seqsharded(q, k_shard, v_shard, local_valid, axis_name):
+    """Flash-decoding across a mesh axis: KV time-sharded, LSE-combined.
+
+    q: (B,1,H,D) replicated; k/v_shard: (B,T_loc,Hkv,D) this rank's slab;
+    local_valid: (B, T_loc) bool. Runs inside shard_map; psum/pmax over
+    ``axis_name``. This is the long_500k path (batch=1 cannot shard the
+    batch axis, so the *sequence* becomes the pencil).
+    """
+    b, s, h, d = q.shape
+    hkv = k_shard.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k_shard).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    neg = jnp.asarray(-1e30, jnp.float32)
+    logits = jnp.where(local_valid[:, None, None, None, :], logits, neg)
+    m_loc = jnp.max(logits, axis=-1)                                 # (b,h,g,s)
+    m_glob = lax.pmax(m_loc, axis_name)
+    w = jnp.exp(logits - m_glob[..., None])
+    l_loc = jnp.sum(w, axis=-1)
+    o_loc = jnp.einsum("bhgst,bthd->bshgd", w.astype(v_shard.dtype), v_shard)
+    l_glob = lax.psum(l_loc, axis_name)                              # (b,h,g,s)
+    o_glob = lax.psum(o_loc.astype(jnp.float32), axis_name)
+    lg = jnp.transpose(l_glob, (0, 3, 1, 2))[..., None]              # (b,s,h,g,1)
+    out = (o_glob / jnp.maximum(lg, 1e-30)).astype(q.dtype)
+    return out.reshape(b, s, h, d)

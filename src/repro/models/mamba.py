@@ -1,0 +1,139 @@
+"""Mamba (S6) selective-SSM block for the Jamba hybrid (arXiv:2403.19887).
+
+Selective scan over time with data-dependent (Δ, B, C); causal depthwise
+conv front-end. State per layer: conv tail (B, d_conv−1, d_inner) + SSM state
+(B, d_inner, d_state) — O(1) decode, which is what makes the hybrid run
+``long_500k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, -(-self.d_model // 16))
+
+
+def init_mamba(ini, m: MambaDims):
+    di, ds, dr = m.d_inner, m.d_state, m.dt_rank
+    return {
+        "in_proj": ini.param("in_proj", (m.d_model, 2 * di), ("embed", "mlp")),
+        "conv_w": ini.param("conv_w", (m.d_conv, di), ("conv", "mlp"), scale=0.1),
+        "conv_b": ini.param("conv_b", (di,), ("mlp",), mode="zeros"),
+        "x_proj": ini.param("x_proj", (di, dr + 2 * ds), ("mlp", "state")),
+        "dt_w": ini.param("dt_w", (dr, di), ("state", "mlp")),
+        "dt_b": ini.param("dt_b", (di,), ("mlp",), mode="ones"),
+        "A_log": ini.param("A_log", (di, ds), ("mlp", "state"), mode="ones"),
+        "D": ini.param("D", (di,), ("mlp",), mode="ones"),
+        "out_proj": ini.param("out_proj", (di, m.d_model), ("mlp", "embed")),
+    }
+
+
+def chunked_time_scan(step, carry0, xs, chunk: int = 256):
+    """Two-level rematted scan over time: the backward saves carries once per
+    *chunk* instead of per step (a 4096-step scan over a (B, d_inner,
+    d_state) f32 carry otherwise banks ~8.6 GiB per layer)."""
+    s = jax.tree.leaves(xs)[0].shape[0]
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    if c <= 1:
+        return lax.scan(step, carry0, xs)
+    xs_r = jax.tree.map(lambda a: a.reshape((s // c, c) + a.shape[1:]), xs)
+
+    step_ck = jax.checkpoint(step)   # per-step intermediates stay transient
+
+    @jax.checkpoint
+    def outer(carry, xsc):
+        return lax.scan(step_ck, carry, xsc)
+
+    carry, ys = lax.scan(outer, carry0, xs_r)
+    ys = jax.tree.map(lambda a: a.reshape((s,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def _ssm_inputs(p, m: MambaDims, xc):
+    """xc: (..., d_inner) post-conv activations -> (Δ, B, C) f32."""
+    proj = xc @ p["x_proj"]
+    dr, ds = m.dt_rank, m.d_state
+    dt = jax.nn.softplus((proj[..., :dr] @ p["dt_w"]
+                          + p["dt_b"].astype(proj.dtype)).astype(jnp.float32))
+    bmat = proj[..., dr:dr + ds].astype(jnp.float32)
+    cmat = proj[..., dr + ds:].astype(jnp.float32)
+    return dt, bmat, cmat
+
+
+def mamba_seq(p, m: MambaDims, x, conv_state0, ssm_state0):
+    """x: (B, S, D) -> (y, (conv_tail, ssm_state))."""
+    from repro.models.common import shard_act
+
+    b, s, d = x.shape
+    di, ds = m.d_inner, m.d_state
+    xz = x @ p["in_proj"]
+    xz = shard_act(xz, ("batch", "seq", "mlp"))   # keep d_inner TP-sharded
+    xi, z = xz[..., :di], xz[..., di:]
+    # causal depthwise conv with carried tail
+    xpad = jnp.concatenate([conv_state0.astype(xi.dtype), xi], axis=1)
+    conv = sum(xpad[:, i:i + s, :] * p["conv_w"][i].astype(xi.dtype)
+               for i in range(m.d_conv))
+    xc = jax.nn.silu(conv + p["conv_b"].astype(xi.dtype))
+    dt, bmat, cmat = _ssm_inputs(p, m, xc)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (di, ds)
+
+    # discretize INSIDE the (rematted) step: precomputing da/dbx materializes
+    # (B,S,di,ds) f32 ≈ 69 GiB/device on the jamba train_4k cell
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp
+        da_t = jnp.exp(dt_t[..., None] * a)                    # (B,di,ds)
+        h = da_t * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xc = shard_act(xc, ("batch", "seq", "mlp"))
+    dt = shard_act(dt, ("batch", "seq", "mlp"))
+    xs = (jnp.swapaxes(dt, 0, 1), jnp.swapaxes(bmat, 0, 1),
+          jnp.swapaxes(cmat, 0, 1), jnp.swapaxes(xc.astype(jnp.float32), 0, 1))
+    h_last, ys = chunked_time_scan(step, ssm_state0, xs)
+    y = jnp.swapaxes(ys, 0, 1)                                 # (B,S,di)
+    y = shard_act(y, ("batch", "seq", "mlp"))
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    conv_tail = xpad[:, s:, :] if m.d_conv > 1 else conv_state0
+    return out, (conv_tail.astype(conv_state0.dtype), h_last)
+
+
+def mamba_step(p, m: MambaDims, x_t, conv_state, ssm_state):
+    """One-token decode. x_t: (B, D); conv_state: (B, d_conv-1, d_inner)."""
+    di = m.d_inner
+    xz = x_t @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([conv_state.astype(xi.dtype), xi[:, None, :]], axis=1)
+    conv = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(xi.dtype))
+    xc = jax.nn.silu(conv + p["conv_b"].astype(xi.dtype))
+    dt, bmat, cmat = _ssm_inputs(p, m, xc)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt[..., None] * a)                            # (B,di,ds)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    h = da * ssm_state + dbx
+    y = jnp.einsum("bds,bs->bd", h, cmat)
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x_t.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], (window[:, 1:, :].astype(conv_state.dtype), h)

@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (DeepSeek-V2-Lite): compressed KV cache
+(kv_lora_rank + decoupled RoPE key) with the absorbed-projection decode path.
+
+Cache per token is ``kv_lora_rank + rope_dim`` floats (512+64) instead of
+``2·Hkv·D`` — the arch's defining serving optimization.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rope_cos_sin, apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    d_model: int
+    n_heads: int
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_base: float = 10000.0
+
+
+def init_mla(ini, m: MLADims):
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": ini.param("wq", (m.d_model, m.n_heads, qd), ("embed", "heads", "head_dim")),
+        "w_dkv": ini.param("w_dkv", (m.d_model, m.kv_lora_rank), ("embed", "kv_lora")),
+        "w_kr": ini.param("w_kr", (m.d_model, m.qk_rope_dim), ("embed", "head_dim")),
+        "kv_norm": ini.param("kv_norm", (m.kv_lora_rank,), ("kv_lora",), mode="ones"),
+        "w_uk": ini.param("w_uk", (m.kv_lora_rank, m.n_heads, m.qk_nope_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "w_uv": ini.param("w_uv", (m.kv_lora_rank, m.n_heads, m.v_head_dim),
+                          ("kv_lora", "heads", "head_dim")),
+        "wo": ini.param("wo", (m.n_heads, m.v_head_dim, m.d_model),
+                        ("heads", "head_dim", "embed")),
+    }
+
+
+def _rms(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    inv = lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * inv * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _compress(p, m: MLADims, x, positions):
+    """x -> (c_kv, k_rope): the only tensors the cache stores."""
+    c_kv = _rms(x @ p["w_dkv"], p["kv_norm"])              # (B,S,R)
+    k_r = x @ p["w_kr"]                                    # (B,S,dr)
+    cos, sin = rope_cos_sin(positions, m.qk_rope_dim, m.rope_base)
+    k_r = apply_rope(k_r[:, :, None, :], cos, sin)[:, :, 0, :]
+    return c_kv, k_r
+
+
+def _queries(p, m: MLADims, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_n = q[..., : m.qk_nope_dim]
+    q_r = q[..., m.qk_nope_dim:]
+    cos, sin = rope_cos_sin(positions, m.qk_rope_dim, m.rope_base)
+    q_r = apply_rope(q_r, cos, sin)
+    # absorb W_uk: q_n' = q_n @ W_uk^T  -> scores live in the latent space
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_n, p["w_uk"])
+    return q_lat, q_r
+
+
+def _attend(p, m: MLADims, q_lat, q_r, c_kv, k_r, mask):
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_dim + m.qk_rope_dim))
+    logits = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+              + jnp.einsum("bshk,btk->bhst", q_r, k_r)).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", w, c_kv)          # attn over latents
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, p["w_uv"])     # decompress values
+    return jnp.einsum("bshv,hvm->bsm", o, p["wo"])
+
+
+def apply_mla(p, m: MLADims, x, positions):
+    """Train / prefill; returns (out, (c_kv, k_rope)) for cache building.
+
+    Long sequences run the flash-style chunked path *in the latent space*:
+    queries [q_lat ; q_rope] against keys [c_kv ; k_rope] with values c_kv —
+    attention never leaves the 512-dim latent, and no (S, T) matrix is
+    materialized."""
+    from repro.models.layers import CHUNK_THRESHOLD, _sdpa_chunked, AttnDims
+
+    c_kv, k_r = _compress(p, m, x, positions)
+    q_lat, q_r = _queries(p, m, x, positions)
+    s, t = x.shape[1], c_kv.shape[1]
+    if s > 1 and s * t > CHUNK_THRESHOLD ** 2:
+        dq = m.kv_lora_rank + m.qk_rope_dim
+        eff = m.qk_nope_dim + m.qk_rope_dim
+        fix = jnp.sqrt(jnp.float32(dq) / jnp.float32(eff)).astype(q_lat.dtype)
+        qq = jnp.concatenate([q_lat, q_r], axis=-1) * fix    # (B,S,H,dq)
+        kk = jnp.concatenate([c_kv, k_r], axis=-1)[:, :, None, :]
+        vv = c_kv[:, :, None, :]
+        dims = AttnDims(d_model=m.d_model, n_heads=m.n_heads, n_kv_heads=1,
+                        head_dim=dq)
+        o_lat = _sdpa_chunked(qq, kk, vv, dims, causal=True)  # (B,S,H,R)
+        o = jnp.einsum("bshr,rhv->bshv", o_lat, p["w_uv"])
+        out = jnp.einsum("bshv,hvm->bsm", o, p["wo"])
+        return out, (c_kv, k_r)
+    mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])[None, None]
+    return _attend(p, m, q_lat, q_r, c_kv, k_r, mask), (c_kv, k_r)
+
+
+def apply_mla_decode(p, m: MLADims, x, cache_ckv, cache_kr, cache_len, positions):
+    """One-token decode over the compressed cache."""
+    c_new, kr_new = _compress(p, m, x, positions)
+    ck = lax.dynamic_update_slice_in_dim(cache_ckv, c_new.astype(cache_ckv.dtype),
+                                         cache_len, axis=1)
+    kr = lax.dynamic_update_slice_in_dim(cache_kr, kr_new.astype(cache_kr.dtype),
+                                         cache_len, axis=1)
+    q_lat, q_r = _queries(p, m, x, positions)
+    t = ck.shape[1]
+    mask = (jnp.arange(t)[None, :] <= cache_len)[None, None]
+    return _attend(p, m, q_lat, q_r, ck, kr, mask), ck, kr

@@ -1,0 +1,221 @@
+"""Token-choice top-k Mixture of Experts with capacity-based dispatch.
+
+The dispatch/combine exchange is the paper's *fold communication* in LM
+clothing: tokens sharded over ``data`` are exchanged with experts sharded
+over ``model`` — an all-to-all along one mesh axis, exactly the X↔Y pencil
+transpose pattern (DESIGN.md §4.2). The default path expresses it as einsum
+dispatch under auto-SPMD; XLA lowers the resharding to all-to-all/collective
+ops which the roofline's collective term measures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp
+from repro.models.common import shard_act
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0           # deepseek shared experts
+    d_ff_shared: int = 0
+    capacity_factor: float = 1.25
+    mlp_type: str = "swiglu"
+    router_norm_topk: bool = True   # qwen3 renormalizes the top-k probs
+
+
+def init_moe(ini, m: MoEDims):
+    p = {"router": ini.param("router", (m.d_model, m.n_experts),
+                             ("embed", "experts"), scale=0.02)}
+    sub = ini.sub("experts")
+    p["experts"] = {
+        "wi_gate": sub.param("wi_gate", (m.n_experts, m.d_model, m.d_ff_expert),
+                             ("experts", "embed", "expert_mlp")),
+        "wi_up": sub.param("wi_up", (m.n_experts, m.d_model, m.d_ff_expert),
+                           ("experts", "embed", "expert_mlp")),
+        "wo": sub.param("wo", (m.n_experts, m.d_ff_expert, m.d_model),
+                        ("experts", "expert_mlp", "embed")),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ini.sub("shared"), m.d_model,
+                               m.d_ff_shared or m.d_ff_expert * m.n_shared,
+                               m.mlp_type)
+    return p
+
+
+def _capacity(m: MoEDims, n_tokens: int) -> int:
+    cap = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, min(cap, n_tokens))
+
+
+def apply_moe(p, m: MoEDims, x):
+    """x: (B, S, D) -> (B, S, D). Capacity-dropped token-choice routing."""
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = _capacity(m, t)
+
+    gate_logits = (xt @ p["router"]).astype(jnp.float32)           # (T, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, m.top_k)                   # (T, k)
+    if m.router_norm_topk:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) in its expert's buffer
+    onehot = jax.nn.one_hot(top_e, m.n_experts, dtype=jnp.int32)   # (T, k, E)
+    flat = onehot.reshape(t * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat                          # arrival order
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, m.top_k)
+    keep = pos < cap
+
+    # dispatch tensor (T, E, cap) — one-hot token→(expert, slot)
+    disp = (jax.nn.one_hot(top_e, m.n_experts, dtype=xt.dtype)[..., None]
+            * jax.nn.one_hot(jnp.where(keep, pos, cap), cap + 1,
+                             dtype=xt.dtype)[..., None, :-1]
+            )                                                      # (T,k,E,cap)
+    combine = disp * top_p.astype(xt.dtype)[..., None, None]
+    disp = jnp.sum(disp, axis=1)                                   # (T,E,cap)
+    combine = jnp.sum(combine, axis=1)
+
+    xe = jnp.einsum("td,tec->ecd", xt, disp)                       # (E,cap,D)
+    xe = shard_act(xe, ("experts", None, "embed"))
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w["wi_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, w["wi_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, w["wo"])
+    ye = shard_act(ye, ("experts", None, "embed"))
+    out = jnp.einsum("ecd,tec->td", ye, combine)
+
+    if "shared" in p:
+        from repro.models.layers import apply_mlp
+        out = out + apply_mlp(p["shared"], xt[None], m.mlp_type)[0]
+    return out.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel path: the paper's fold communication, explicitly.
+#
+# Tokens live on the `data` mesh axis, experts on `model`. Dispatch is a
+# capacity-bounded all_to_all along `model` (exactly an X↔Y pencil fold),
+# local compute is a sort + ragged (grouped) matmul, combine is the mirror
+# all_to_all. ``chunks`` applies the paper's pipelined schedule (§4.3.2) to
+# the MoE: slab the tokens so chunk i's exchange overlaps chunk i+1's FFN.
+# ---------------------------------------------------------------------------
+
+def moe_ep_local(xt, p, m: MoEDims, model_axes: tuple[str, ...]):
+    """Inside shard_map: xt (T_loc, D) local tokens; expert weights sharded
+    (E_loc, ...) along `model`. Returns (T_loc, D).
+
+    GShard-style fixed per-(sender, expert) capacity: every buffer is static
+    so the expert FFN is one batched einsum (no sort / ragged matmul — the
+    ragged path materialized per-group masks under XLA:CPU, +200 GiB on the
+    qwen3 train cell; EXPERIMENTS.md §Perf iteration M3)."""
+    from jax import lax
+
+    t, d = xt.shape
+    msize = 1
+    for a in model_axes:
+        msize *= lax.axis_size(a)
+    name = model_axes if len(model_axes) > 1 else model_axes[0]
+    e_loc = m.n_experts // msize
+    k = m.top_k
+    e = m.n_experts
+
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    if m.router_norm_topk:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)                       # (T·k,)
+    flat_w = top_p.reshape(-1)
+    cap = int(math.ceil(t * k * m.capacity_factor / e))
+    cap = max(4, ((cap + 3) // 4) * 4)
+    # position of each entry within its expert's slab (arrival order)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(oh, axis=0) - oh) * oh, axis=-1)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)   # overflow bucket
+
+    tok_idx = jnp.arange(t * k, dtype=jnp.int32) // k
+    send_tok = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(tok_idx)
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    send_x = xt_pad[send_tok[:-1]]                   # (E·cap, D)
+
+    # fold communication along `model` (the X↔Y pencil exchange)
+    recv_x = lax.all_to_all(send_x, name, 0, 0, tiled=True)
+    # recv: (msize, e_loc, cap, D) — rank-major blocks, expert slabs static
+    xe = recv_x.reshape(msize, e_loc, cap, d).transpose(1, 0, 2, 3)
+    xe = xe.reshape(e_loc, msize * cap, d)
+
+    w = p["experts"]
+    act = jax.nn.silu if m.mlp_type == "swiglu" else \
+        (lambda v: jax.nn.gelu(v, approximate=True))
+    h = act(jnp.einsum("ecd,edf->ecf", xe, w["wi_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, w["wi_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, w["wo"])      # (e_loc, msize·cap, D)
+
+    ye = ye.reshape(e_loc, msize, cap, d).transpose(1, 0, 2, 3)
+    back = lax.all_to_all(ye.reshape(msize * e_loc * cap, d), name, 0, 0,
+                          tiled=True)
+    back = jnp.concatenate([back, jnp.zeros((1, d), back.dtype)], axis=0)
+    wgt = jnp.where(keep, flat_w, 0.0).astype(back.dtype)
+    gathered = back[slot] * wgt[:, None]
+    out = jnp.sum(gathered.reshape(t, k, d), axis=1)
+    return out
+
+
+def apply_moe_ep(p, m: MoEDims, x, mesh, *, data_axes=("data",),
+                 model_axes=("model",), chunks: int = 1):
+    """shard_map wrapper; x (B,S,D) batch-sharded over ``data_axes``."""
+    from jax.sharding import PartitionSpec as P
+
+    b, s, d = x.shape
+    dspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    mspec = tuple(model_axes) if len(model_axes) > 1 else model_axes[0]
+
+    def local_fn(xl, router, wig, wiu, wo):
+        pl = {"router": router,
+              "experts": {"wi_gate": wig, "wi_up": wiu, "wo": wo}}
+        bl = xl.shape[0]
+        xt = xl.reshape(-1, d)
+        tl = xt.shape[0]
+        c = min(chunks, tl)
+        while tl % c:
+            c -= 1
+        step = tl // c
+        # remat per chunk so only ONE chunk's dispatch buffers are live
+        # during the layer's backward (§Perf iteration M7)
+        one = jax.checkpoint(
+            lambda ct: moe_ep_local(ct, pl, m, tuple(model_axes)))
+        outs = [one(xt[i * step:(i + 1) * step]) for i in range(c)]
+        return jnp.concatenate(outs, axis=0).reshape(bl, s, d)
+
+    w = p["experts"]
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dspec, None, None), P(), P(mspec, None, None),
+                  P(mspec, None, None), P(mspec, None, None)),
+        out_specs=P(dspec, None, None), check_vma=False)
+    out = fn(x, p["router"], w["wi_gate"], w["wi_up"], w["wo"])
+    if "shared" in p:
+        from repro.models.layers import apply_mlp
+        out = out + apply_mlp(p["shared"], x, m.mlp_type)
+    return out
+
+
+def load_balance_loss(gate_logits, top_e, n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss (fraction·prob per expert)."""
+    probs = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e[..., 0], n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac * imp)

@@ -1,0 +1,816 @@
+"""Composable decoder stack covering all assigned architecture families:
+
+* uniform decoders (smollm/deepseek/qwen/gemma/llava backbone) — GQA/MQA,
+  SwiGLU/GeGLU, optional QKV bias, RoPE;
+* MoE decoders (qwen3-moe; deepseek-v2-lite with MLA + shared experts and a
+  first dense layer);
+* RWKV6 (attention-free);
+* Jamba hybrid (1:7 attn:mamba interleave, MoE every 2nd layer) via
+  period-sized superblocks scanned over depth;
+* Whisper encoder–decoder (frames-stub front end, cross-attention decoder).
+
+Layers are stacked with ``lax.scan`` (+ optional ``jax.checkpoint`` remat) so
+the compiled HLO is depth-independent — required for the 512-device dry-run
+on a single-core host. ``init_model`` returns a params pytree plus a mirror
+pytree of logical axis names (consumed by ``repro.distributed.sharding``);
+run it under ``jax.eval_shape`` to get both without materializing weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import common as cm
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models import rwkv as RW
+from repro.models import mamba as MB
+from repro.models.common import Initializer, stack_params, stack_axes
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCfg:
+    """Runtime distribution context (orthogonal to the arch config)."""
+    mesh: Any = None
+    data_axes: tuple = ("data",)
+    model_axes: tuple = ("model",)
+    seq_shard_kv: bool = False       # long_500k: KV time-sharded decode
+    remat: bool = True
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _cast_f(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        tree)
+
+
+def attn_dims(cfg: ArchConfig, causal=True) -> L.AttnDims:
+    return L.AttnDims(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                      n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                      qkv_bias=cfg.qkv_bias, rope_base=cfg.rope_base,
+                      causal=causal)
+
+
+def mla_dims(cfg: ArchConfig) -> MLA.MLADims:
+    m = cfg.mla
+    return MLA.MLADims(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                       kv_lora_rank=m.kv_lora_rank, qk_nope_dim=m.qk_nope_dim,
+                       qk_rope_dim=m.qk_rope_dim, v_head_dim=m.v_head_dim,
+                       rope_base=cfg.rope_base)
+
+
+def moe_dims(cfg: ArchConfig) -> MOE.MoEDims:
+    m = cfg.moe
+    return MOE.MoEDims(d_model=cfg.d_model, n_experts=m.n_experts,
+                       top_k=m.top_k, d_ff_expert=m.d_ff_expert,
+                       n_shared=m.n_shared, d_ff_shared=m.d_ff_shared,
+                       capacity_factor=m.capacity_factor,
+                       router_norm_topk=m.router_norm_topk,
+                       mlp_type=cfg.mlp_type)
+
+
+def mamba_dims(cfg: ArchConfig) -> MB.MambaDims:
+    mc = cfg.mamba
+    return MB.MambaDims(d_model=cfg.d_model, d_state=mc.d_state,
+                        d_conv=mc.d_conv, expand=mc.expand)
+
+
+def rwkv_dims(cfg: ArchConfig) -> RW.RWKVDims:
+    return RW.RWKVDims(d_model=cfg.d_model, n_heads=cfg.n_heads, d_ff=cfg.d_ff)
+
+
+# ---------------------------------------------------------------------------
+# init (axes keys always == params dict keys)
+# ---------------------------------------------------------------------------
+
+def _norm_param(ini, cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "ln":
+        return {"w": ini.param("w", (d,), ("embed",), mode="ones"),
+                "b": ini.param("b", (d,), ("embed",), mode="zeros")}
+    mode = "zeros" if cfg.norm_plus_one else "ones"
+    return {"w": ini.param("w", (d,), ("embed",), mode=mode)}
+
+
+def _apply_norm(p, x, cfg):
+    if cfg.norm == "ln":
+        return cm.layer_norm(x, p["w"], p["b"])
+    return cm.rms_norm(x, p["w"], plus_one=cfg.norm_plus_one)
+
+
+def _init_uniform_block(ini, cfg: ArchConfig, with_moe: bool):
+    p = {"ln1": _norm_param(ini.sub("ln1"), cfg),
+         "ln2": _norm_param(ini.sub("ln2"), cfg)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = MLA.init_mla(ini.sub("attn"), mla_dims(cfg))
+    else:
+        p["attn"] = L.init_attention(ini.sub("attn"), attn_dims(cfg))
+    if with_moe:
+        p["ff"] = MOE.init_moe(ini.sub("ff"), moe_dims(cfg))
+    else:
+        p["ff"] = L.init_mlp(ini.sub("ff"), cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return p
+
+
+def _init_rwkv_block(ini, cfg: ArchConfig):
+    return {"ln1": _norm_param(ini.sub("ln1"), cfg),
+            "ln2": _norm_param(ini.sub("ln2"), cfg),
+            "tm": RW.init_rwkv_time_mix(ini.sub("tm"), rwkv_dims(cfg)),
+            "cm": RW.init_rwkv_channel_mix(ini.sub("cm"), rwkv_dims(cfg))}
+
+
+def _init_whisper_dec_block(ini, cfg: ArchConfig):
+    return {"ln1": _norm_param(ini.sub("ln1"), cfg),
+            "lnx": _norm_param(ini.sub("lnx"), cfg),
+            "ln2": _norm_param(ini.sub("ln2"), cfg),
+            "attn": L.init_attention(ini.sub("attn"), attn_dims(cfg)),
+            "xattn": L.init_attention(ini.sub("xattn"), attn_dims(cfg, causal=False)),
+            "ff": L.init_mlp(ini.sub("ff"), cfg.d_model, cfg.d_ff, cfg.mlp_type)}
+
+
+def _init_jamba_superblock(ini, cfg: ArchConfig):
+    per = cfg.hybrid_period
+    n_moe = per // cfg.moe.every
+    p = {"ln1": ini.param("ln1", (per, cfg.d_model), ("sub", "embed"), mode="ones"),
+         "ln2": ini.param("ln2", (per, cfg.d_model), ("sub", "embed"), mode="ones"),
+         "attn": L.init_attention(ini.sub("attn"), attn_dims(cfg))}
+    p["mamba"], ax = _stack_inits(ini, per - 1,
+                                  lambda s: MB.init_mamba(s, mamba_dims(cfg)))
+    ini.axes["mamba"] = stack_axes(ax, "sub")
+    p["moe"], ax = _stack_inits(ini, n_moe, lambda s: MOE.init_moe(s, moe_dims(cfg)))
+    ini.axes["moe"] = stack_axes(ax, "sub")
+    p["mlp"], ax = _stack_inits(ini, per - n_moe, lambda s: L.init_mlp(
+        s, cfg.d_model, cfg.d_ff, cfg.mlp_type))
+    ini.axes["mlp"] = stack_axes(ax, "sub")
+    return p
+
+
+def _stack_inits(parent: Initializer, n: int, fn):
+    trees, axes = [], None
+    for _ in range(n):
+        parent.key, k = jax.random.split(parent.key)
+        sub = Initializer(key=k, dtype=parent.dtype, axes={})
+        trees.append(fn(sub))
+        axes = sub.axes
+    return stack_params(trees), axes
+
+
+def init_model(cfg: ArchConfig, key) -> tuple[dict, dict]:
+    """Returns (params, logical_axes) pytrees of identical structure."""
+    ini = Initializer(key=key, dtype=jnp.dtype(cfg.param_dtype))
+    params: dict = {}
+    axes: dict = ini.axes
+    d = cfg.d_model
+
+    params["embed"] = ini.param("embed", (cfg.vocab, d), ("vocab", "embed"),
+                                scale=1.0 / d ** 0.5)
+    params["final_norm"] = _norm_param(ini.sub("final_norm"), cfg)
+    if not cfg.tie_embeddings:
+        params["head"] = ini.param("head", (d, cfg.vocab), ("embed", "vocab"))
+
+    if cfg.mixer == "rwkv":
+        params["ln0"] = _norm_param(ini.sub("ln0"), cfg)
+        params["blocks"], bax = _stack_inits(
+            ini, cfg.n_layers, lambda s: _init_rwkv_block(s, cfg))
+        axes["blocks"] = stack_axes(bax)
+    elif cfg.mixer == "hybrid":
+        nblocks = cfg.n_layers // cfg.hybrid_period
+        params["blocks"], bax = _stack_inits(
+            ini, nblocks, lambda s: _init_jamba_superblock(s, cfg))
+        axes["blocks"] = stack_axes(bax)
+    elif cfg.encdec:
+        params["pos_embed"] = ini.param("pos_embed", (8192, d), ("seq", "embed"),
+                                        scale=0.02)
+        params["enc_blocks"], bax = _stack_inits(
+            ini, cfg.enc_layers, lambda s: _init_uniform_block(s, cfg, False))
+        axes["enc_blocks"] = stack_axes(bax)
+        params["dec_blocks"], bax = _stack_inits(
+            ini, cfg.n_layers, lambda s: _init_whisper_dec_block(s, cfg))
+        axes["dec_blocks"] = stack_axes(bax)
+        params["enc_norm"] = _norm_param(ini.sub("enc_norm"), cfg)
+    else:
+        nd = cfg.moe.first_dense if cfg.moe else 0
+        if nd:
+            params["first_blocks"], bax = _stack_inits(
+                ini, nd, lambda s: _init_uniform_block(s, cfg, False))
+            axes["first_blocks"] = stack_axes(bax)
+        with_moe = cfg.moe is not None
+        params["blocks"], bax = _stack_inits(
+            ini, cfg.n_layers - nd, lambda s: _init_uniform_block(s, cfg, with_moe))
+        axes["blocks"] = stack_axes(bax)
+    return params, axes
+
+
+def model_axes(cfg: ArchConfig) -> dict:
+    """Logical-axes pytree without materializing any weights."""
+    holder = {}
+
+    def run(key):
+        p, ax = init_model(cfg, key)
+        holder["axes"] = ax
+        return p
+
+    jax.eval_shape(run, jax.random.PRNGKey(0))
+    return holder["axes"]
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill share the block bodies; decode below)
+# ---------------------------------------------------------------------------
+
+def _ff_apply(p, cfg: ArchConfig, run: RunCfg, x):
+    if "router" in p:  # MoE block
+        m = moe_dims(cfg)
+        if cfg.moe.impl == "ep" and run.mesh is not None:
+            dsz = 1
+            for a in run.data_axes:
+                dsz *= run.mesh.shape.get(a, 1)
+            if x.shape[0] % dsz == 0:  # batch not splittable (e.g. B=1 decode)
+                return MOE.apply_moe_ep(p, m, x, run.mesh,
+                                        data_axes=run.data_axes,
+                                        model_axes=run.model_axes,
+                                        chunks=cfg.moe.chunks)
+        return MOE.apply_moe(p, m, x)
+    return L.apply_mlp(p, x, cfg.mlp_type)
+
+
+def _uniform_block_fwd(p, cfg, run, x, positions):
+    h = _apply_norm(p["ln1"], x, cfg)
+    if cfg.attn_kind == "mla":
+        a, kv = MLA.apply_mla(p["attn"], mla_dims(cfg), h, positions)
+    else:
+        a, kv = L.apply_attention(p["attn"], attn_dims(cfg), h, positions)
+    x = x + a
+    h = _apply_norm(p["ln2"], x, cfg)
+    x = x + _ff_apply(p["ff"], cfg, run, h)
+    x = cm.shard_act(x, ("batch", "seq", "embed"))
+    return x, kv
+
+
+def _rwkv_block_fwd(p, cfg, run, x, state):
+    """state: dict(x_tm (B,D), wkv (B,H,K,V), x_cm (B,D))."""
+    h = cm.rms_norm(x, p["ln1"]["w"]) if cfg.norm == "rms" else \
+        cm.layer_norm(x, p["ln1"]["w"], p["ln1"]["b"])
+    y, (x_tm, wkv) = RW.rwkv_time_mix_seq(p["tm"], rwkv_dims(cfg), h,
+                                          state["x_tm"], state["wkv"])
+    x = x + y
+    h = _apply_norm(p["ln2"], x, cfg)
+    y, x_cm = RW.rwkv_channel_mix_seq(p["cm"], h, state["x_cm"])
+    x = x + y
+    return x, {"x_tm": x_tm, "wkv": wkv, "x_cm": x_cm}
+
+
+def _jamba_superblock_fwd(p, cfg, run, x, positions, states):
+    """states: dict(conv (7,B,c-1,di), ssm (7,B,di,ds)); returns kv + states."""
+    per = cfg.hybrid_period
+    md = mamba_dims(cfg)
+    new_conv, new_ssm = [], []
+    kv = None
+    mi = 0
+    # each of the 8 sub-layers is rematted individually: the superblock is
+    # one remat unit at the depth scan, so without this all 7 mamba layers'
+    # time-scan residuals go live together during its backward
+    mamba_ck = jax.checkpoint(
+        lambda mp, h, c0, s0: MB.mamba_seq(mp, md, h, c0, s0))
+    for j in range(per):
+        h = cm.rms_norm(x, p["ln1"][j])
+        if j == cfg.hybrid_attn_pos:
+            a, kv = L.apply_attention(p["attn"], attn_dims(cfg), h, positions)
+        else:
+            mp = jax.tree.map(lambda t: t[mi], p["mamba"])
+            a, (cs, ss) = mamba_ck(mp, h, states["conv"][mi], states["ssm"][mi])
+            new_conv.append(cs)
+            new_ssm.append(ss)
+            mi += 1
+        x = x + a
+        h = cm.rms_norm(x, p["ln2"][j])
+        if j % cfg.moe.every == 1 % cfg.moe.every:
+            fp = jax.tree.map(lambda t: t[j // cfg.moe.every], p["moe"])
+            x = x + _ff_apply(fp, cfg, run, h)
+        else:
+            fp = jax.tree.map(lambda t: t[j // cfg.moe.every], p["mlp"])
+            x = x + L.apply_mlp(fp, h, cfg.mlp_type)
+        x = cm.shard_act(x, ("batch", "seq", "embed"))
+    return x, kv, {"conv": jnp.stack(new_conv), "ssm": jnp.stack(new_ssm)}
+
+
+def _embed_in(params, cfg: ArchConfig, batch):
+    cd = _dt(cfg)
+    if cfg.embed_mode == "embeds":
+        return batch["embeds"].astype(cd)
+    if cfg.embed_mode == "frames":
+        return batch["frames"].astype(cd)
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cd)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cd)
+    return cm.shard_act(x, ("batch", "seq", "embed"))
+
+
+def _head_out(params, cfg: ArchConfig, x):
+    """Logits in COMPUTE dtype — the f32 upcast happens in the loss, so the
+    backward cotangent through the whole stack stays bf16 (an f32 logits
+    matmul promotes every downstream cotangent to f32 via f32×bf16
+    promotion: +24 GiB/device of residual stacks on qwen3 train_4k;
+    §Perf iteration M5)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ w.astype(x.dtype)
+
+
+def _remat_group(n: int, target: int = 8) -> int:
+    for g in range(min(target, n), 0, -1):
+        if n % g == 0:
+            return g
+    return 1
+
+
+def _scan_blocks(blocks, x, body, remat: bool, with_aux: bool = True):
+    """Depth scan with two-level (√L-style) remat: the outer scan saves one
+    residual per *group* of layers instead of per layer (§Perf iteration M6);
+    each group's forward is recomputed once during its backward."""
+    def f(carry, bp):
+        y, aux = body(bp, carry)
+        return y, aux if with_aux else None
+
+    nl = jax.tree.leaves(blocks)[0].shape[0]
+    group = _remat_group(nl) if remat else 1
+    if not remat or group <= 1 or nl == group:
+        if remat:
+            f = jax.checkpoint(f)
+        return lax.scan(f, x, blocks)
+
+    regrouped = jax.tree.map(
+        lambda a: a.reshape((nl // group, group) + a.shape[1:]), blocks)
+    f_in = jax.checkpoint(f)   # bound live intermediates to ONE layer
+
+    @jax.checkpoint
+    def outer(carry, bgroup):  # save one residual per GROUP of layers
+        return lax.scan(f_in, carry, bgroup)
+
+    x, auxs = lax.scan(outer, x, regrouped)
+    if with_aux and auxs is not None:
+        auxs = jax.tree.map(
+            lambda a: a.reshape((nl,) + a.shape[2:]), auxs)
+    return x, auxs
+
+
+def forward(cfg: ArchConfig, run: RunCfg, params, batch, *, collect_cache=False):
+    """Full-sequence forward. Returns (logits, cache|None).
+
+    cache (when collected) is the prefill KV/state pytree used by decode.
+    """
+    cd = _dt(cfg)
+    x = _embed_in(params, cfg, batch)
+    b, s = x.shape[0], x.shape[1]
+    positions = jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+
+    if cfg.mixer == "rwkv":
+        x = _apply_norm(params["ln0"], x, cfg)
+        hdim = rwkv_dims(cfg)
+        st0 = {"x_tm": jnp.zeros((b, cfg.d_model), cd),
+               "wkv": jnp.zeros((b, cfg.n_heads, hdim.head_size, hdim.head_size),
+                                jnp.float32),
+               "x_cm": jnp.zeros((b, cfg.d_model), cd)}
+
+        def body(bp, carry):
+            bp = _cast_f(bp, cd)
+            y, st = _rwkv_block_fwd(bp, cfg, run, carry, st0)
+            return y, st
+        x, states = _scan_blocks(params["blocks"], x, body,
+                                 run.remat and cfg.remat,
+                                 with_aux=collect_cache)
+        cache = states if collect_cache else None
+    elif cfg.mixer == "hybrid":
+        md = mamba_dims(cfg)
+        per = cfg.hybrid_period
+        st0 = {"conv": jnp.zeros((per - 1, b, md.d_conv - 1, md.d_inner), cd),
+               "ssm": jnp.zeros((per - 1, b, md.d_inner, md.d_state), jnp.float32)}
+
+        def body(bp, carry):
+            bp = _cast_f(bp, cd)
+            y, kv, st = _jamba_superblock_fwd(bp, cfg, run, carry, positions, st0)
+            return y, (kv, st)
+        x, aux = _scan_blocks(params["blocks"], x, body,
+                              run.remat and cfg.remat, with_aux=collect_cache)
+        cache = None
+        if collect_cache:
+            kvs, states = aux
+            cache = {"k": kvs[0], "v": kvs[1], "states": states}
+    elif cfg.encdec:
+        enc = batch["frames"].astype(cd) + cm.sinusoid_positions(
+            batch["frames"].shape[1], cfg.d_model, cd)[None]
+
+        def enc_body(bp, carry):
+            bp = _cast_f(bp, cd)
+            h = _apply_norm(bp["ln1"], carry, cfg)
+            a, _ = L.apply_attention(bp["attn"], attn_dims(cfg, causal=False), h, None)
+            y = carry + a
+            h = _apply_norm(bp["ln2"], y, cfg)
+            return y + L.apply_mlp(bp["ff"], h, cfg.mlp_type), None
+        enc, _ = _scan_blocks(params["enc_blocks"], enc, enc_body,
+                              run.remat and cfg.remat, with_aux=False)
+        enc = _apply_norm(params["enc_norm"], enc, cfg)
+
+        sd = batch["tokens"].shape[1]
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cd)
+        x = x + params["pos_embed"][:sd].astype(cd)[None]
+
+        def dec_body(bp, carry):
+            bp = _cast_f(bp, cd)
+            h = _apply_norm(bp["ln1"], carry, cfg)
+            a, kv = L.apply_attention(bp["attn"], attn_dims(cfg), h, None)
+            y = carry + a
+            h = _apply_norm(bp["lnx"], y, cfg)
+            xk = jnp.einsum("btd,dhk->bthk", enc, bp["xattn"]["wk"])
+            xv = jnp.einsum("btd,dhk->bthk", enc, bp["xattn"]["wv"])
+            y = y + L.apply_cross_attention(bp["xattn"], attn_dims(cfg, causal=False),
+                                            h, xk, xv)
+            h = _apply_norm(bp["ln2"], y, cfg)
+            return y + L.apply_mlp(bp["ff"], h, cfg.mlp_type), (kv, (xk, xv))
+        x, aux = _scan_blocks(params["dec_blocks"], x, dec_body,
+                              run.remat and cfg.remat, with_aux=collect_cache)
+        cache = None
+        if collect_cache:
+            kvs, xkvs = aux
+            cache = {"k": kvs[0], "v": kvs[1], "xk": xkvs[0], "xv": xkvs[1]}
+    else:
+        def body(bp, carry):
+            bp = _cast_f(bp, cd)
+            return _uniform_block_fwd(bp, cfg, run, carry, positions)
+        if "first_blocks" in params:
+            x, kv0 = _scan_blocks(params["first_blocks"], x, body,
+                                  run.remat and cfg.remat,
+                                  with_aux=collect_cache)
+        else:
+            kv0 = None
+        x, kvs = _scan_blocks(params["blocks"], x, body, run.remat and cfg.remat,
+                              with_aux=collect_cache)
+        cache = None
+        if collect_cache:
+            if kv0 is not None:
+                kvs = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), kv0, kvs)
+            cache = {"k": kvs[0], "v": kvs[1]}
+
+    x = _apply_norm(params["final_norm"], x, cfg)
+    return _head_out(params, cfg, x), cache
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, b: int, t_max: int, *, t_enc: int = 0):
+    """Zero-initialized decode cache pytree (shapes only matter for dry-run;
+    real serving fills it via prefill + pad_cache)."""
+    cd = _dt(cfg)
+    if cfg.mixer == "rwkv":
+        hd = rwkv_dims(cfg)
+        L_ = cfg.n_layers
+        return {"x_tm": jnp.zeros((L_, b, cfg.d_model), cd),
+                "wkv": jnp.zeros((L_, b, cfg.n_heads, hd.head_size, hd.head_size),
+                                 jnp.float32),
+                "x_cm": jnp.zeros((L_, b, cfg.d_model), cd),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.mixer == "hybrid":
+        md = mamba_dims(cfg)
+        nb = cfg.n_layers // cfg.hybrid_period
+        per = cfg.hybrid_period
+        return {"k": jnp.zeros((nb, b, t_max, cfg.n_kv_heads, cfg.head_dim_), cd),
+                "v": jnp.zeros((nb, b, t_max, cfg.n_kv_heads, cfg.head_dim_), cd),
+                "conv": jnp.zeros((nb, per - 1, b, md.d_conv - 1, md.d_inner), cd),
+                "ssm": jnp.zeros((nb, per - 1, b, md.d_inner, md.d_state), jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.encdec:
+        L_ = cfg.n_layers
+        h, hd = cfg.n_heads, cfg.head_dim_
+        return {"k": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, hd), cd),
+                "v": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, hd), cd),
+                "xk": jnp.zeros((L_, b, t_enc or t_max, h, hd), cd),
+                "xv": jnp.zeros((L_, b, t_enc or t_max, h, hd), cd),
+                "len": jnp.zeros((), jnp.int32)}
+    if cfg.attn_kind == "mla":
+        m = cfg.mla
+        L_ = cfg.n_layers
+        return {"k": jnp.zeros((L_, b, t_max, m.kv_lora_rank), cd),
+                "v": jnp.zeros((L_, b, t_max, m.qk_rope_dim), cd),
+                "len": jnp.zeros((), jnp.int32)}
+    L_ = cfg.n_layers
+    if cfg.kv_quant:
+        return {"k": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, cfg.head_dim_), jnp.int8),
+                "v": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, cfg.head_dim_), jnp.int8),
+                "k_scale": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, 1), jnp.float32),
+                "v_scale": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, 1), jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, cfg.head_dim_), cd),
+            "v": jnp.zeros((L_, b, t_max, cfg.n_kv_heads, cfg.head_dim_), cd),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def pad_cache(cfg: ArchConfig, cache, s: int, t_max: int):
+    """Pad a prefill cache's time axis to t_max and set len=s."""
+    if cfg.mixer == "rwkv":
+        return dict(cache, len=jnp.asarray(s, jnp.int32))
+    out = dict(cache)
+    for k in ("k", "v"):
+        a = cache[k]
+        pad = [(0, 0)] * a.ndim
+        pad[2] = (0, t_max - a.shape[2])
+        out[k] = jnp.pad(a, pad)
+    out["len"] = jnp.asarray(s, jnp.int32)
+    return out
+
+
+def _flat_rank(axes):
+    r = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        r = r * lax.axis_size(a) + lax.axis_index(a)
+    return r
+
+
+def _attn_decode(bp, cfg, run: RunCfg, h, ck, cv, clen, positions):
+    """GQA decode, optionally with time-sharded KV (long_500k path)."""
+    a = attn_dims(cfg)
+    if not (run.seq_shard_kv and run.mesh is not None):
+        return L.apply_attention_decode(bp, a, h, ck, cv, clen, positions)
+    from jax.sharding import PartitionSpec as P
+    q, knew, vnew = L._qkv(bp, a, h, positions)
+    dax = tuple(run.data_axes)
+    dspec = dax if len(dax) > 1 else dax[0]
+
+    def local(qq, ks, vs, kn, vn, ln):
+        r = _flat_rank(dax)
+        tl = ks.shape[1]
+        start = r * tl
+        off = ln - start
+        ok = (off >= 0) & (off < tl)
+        offc = jnp.clip(off, 0, tl - 1)
+        k2 = lax.dynamic_update_slice_in_dim(ks, kn.astype(ks.dtype), offc, 1)
+        v2 = lax.dynamic_update_slice_in_dim(vs, vn.astype(vs.dtype), offc, 1)
+        k2 = jnp.where(ok, k2, ks)
+        v2 = jnp.where(ok, v2, vs)
+        valid = ((start + jnp.arange(tl))[None, :] <= ln)
+        valid = jnp.broadcast_to(valid, (qq.shape[0], tl))
+        o = L.decode_attention_seqsharded(qq, k2, v2, valid,
+                                          dax if len(dax) > 1 else dax[0])
+        return o, k2, v2
+
+    kvspec = P(None, dspec, None, None)
+    o, ck2, cv2 = jax.shard_map(
+        local, mesh=run.mesh,
+        in_specs=(P(), kvspec, kvspec, P(), P(), P()),
+        out_specs=(P(), kvspec, kvspec), check_vma=False)(
+            q, ck, cv, knew, vnew, clen)
+    return jnp.einsum("bshd,hdm->bsm", o, bp["wo"]), ck2, cv2
+
+
+def decode_step(cfg: ArchConfig, run: RunCfg, params, cache, tokens):
+    """One greedy-decode step. tokens: (B, 1) int32. Returns (logits, cache)."""
+    cd = _dt(cfg)
+    b = tokens.shape[0]
+    clen = cache.get("len", jnp.zeros((), jnp.int32))
+    positions = jnp.full((b, 1), clen, jnp.int32)
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cd)
+
+    if cfg.mixer == "rwkv":
+        x = x[:, 0, :]
+        x = _apply_norm(params["ln0"], x, cfg)
+
+        def body(carry, xs):
+            bp, x_tm, wkv, x_cm = xs
+            bp = _cast_f(bp, cd)
+            h1 = _apply_norm(bp["ln1"], carry, cfg)
+            y, wkv2 = RW.rwkv_time_mix_step(bp["tm"], rwkv_dims(cfg), h1, x_tm, wkv)
+            y0 = carry + y
+            h2 = _apply_norm(bp["ln2"], y0, cfg)
+            y2, x_cm2 = RW.rwkv_channel_mix_step(bp["cm"], h2, x_cm)
+            return y0 + y2, (h1, wkv2, x_cm2)
+
+        x, (ntm, nwkv, ncm) = lax.scan(
+            body, x, (params["blocks"], cache["x_tm"], cache["wkv"], cache["x_cm"]))
+        x = x[:, None, :]
+        new_cache = {"x_tm": ntm, "wkv": nwkv, "x_cm": ncm,
+                     "len": clen + 1}
+    elif cfg.mixer == "hybrid":
+        md = mamba_dims(cfg)
+        per = cfg.hybrid_period
+
+        # caches live in the scan CARRY and update in place via
+        # dynamic_update_index (xs→ys stacking would double-buffer the
+        # multi-GiB KV arrays; §Perf iteration M4)
+        def body(carry, xs):
+            x, k_all, v_all, conv_all, ssm_all = carry
+            bp, i = xs
+            bp = _cast_f(bp, cd)
+            ck = lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            conv = lax.dynamic_index_in_dim(conv_all, i, 0, keepdims=False)
+            ssm = lax.dynamic_index_in_dim(ssm_all, i, 0, keepdims=False)
+            nconv, nssm = [], []
+            mi = 0
+            for j in range(per):
+                h = cm.rms_norm(x, bp["ln1"][j])
+                if j == cfg.hybrid_attn_pos:
+                    a, ck, cv = _attn_decode(bp["attn"], cfg, run, h, ck, cv,
+                                             clen, positions)
+                else:
+                    mp = jax.tree.map(lambda t: t[mi], bp["mamba"])
+                    a2, (cs, ss) = MB.mamba_step(mp, md, h[:, 0, :],
+                                                 conv[mi], ssm[mi])
+                    a = a2[:, None, :]
+                    nconv.append(cs)
+                    nssm.append(ss)
+                    mi += 1
+                x = x + a
+                h = cm.rms_norm(x, bp["ln2"][j])
+                if j % cfg.moe.every == 1 % cfg.moe.every:
+                    fp = jax.tree.map(lambda t: t[j // cfg.moe.every], bp["moe"])
+                    x = x + _ff_apply(fp, cfg, run, h)
+                else:
+                    fp = jax.tree.map(lambda t: t[j // cfg.moe.every], bp["mlp"])
+                    x = x + L.apply_mlp(fp, h, cfg.mlp_type)
+            k_all = lax.dynamic_update_index_in_dim(k_all, ck, i, 0)
+            v_all = lax.dynamic_update_index_in_dim(v_all, cv, i, 0)
+            conv_all = lax.dynamic_update_index_in_dim(conv_all, jnp.stack(nconv), i, 0)
+            ssm_all = lax.dynamic_update_index_in_dim(ssm_all, jnp.stack(nssm), i, 0)
+            return (x, k_all, v_all, conv_all, ssm_all), None
+
+        nb = cfg.n_layers // per
+        (x, nk, nv, nconv, nssm), _ = lax.scan(
+            body, (x, cache["k"], cache["v"], cache["conv"], cache["ssm"]),
+            (params["blocks"], jnp.arange(nb)))
+        new_cache = {"k": nk, "v": nv, "conv": nconv, "ssm": nssm,
+                     "len": clen + 1}
+    elif cfg.encdec:
+        x = x + params["pos_embed"].astype(cd)[clen][None, None]
+
+        def body(carry, xs):
+            y, k_all, v_all = carry
+            bp, xk, xv, i = xs
+            bp = _cast_f(bp, cd)
+            ck = lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            h = _apply_norm(bp["ln1"], y, cfg)
+            a, ck2, cv2 = L.apply_attention_decode(
+                bp["attn"], attn_dims(cfg), h, ck, cv, clen, None)
+            y = y + a
+            h = _apply_norm(bp["lnx"], y, cfg)
+            y = y + L.apply_cross_attention(
+                bp["xattn"], attn_dims(cfg, causal=False), h, xk, xv)
+            h = _apply_norm(bp["ln2"], y, cfg)
+            y = y + L.apply_mlp(bp["ff"], h, cfg.mlp_type)
+            k_all = lax.dynamic_update_index_in_dim(k_all, ck2, i, 0)
+            v_all = lax.dynamic_update_index_in_dim(v_all, cv2, i, 0)
+            return (y, k_all, v_all), None
+
+        (x, nk, nv), _ = lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (params["dec_blocks"], cache["xk"], cache["xv"],
+             jnp.arange(cfg.n_layers)))
+        new_cache = dict(cache, k=nk, v=nv, len=clen + 1)
+    elif cfg.kv_quant and cfg.attn_kind == "gqa" and "first_blocks" not in params:
+        from repro.models import kvquant as KQ
+
+        def bodyq(carry, xs):
+            y, k_all, v_all, ks_all, vs_all = carry
+            bp, i = xs
+            bp = _cast_f(bp, cd)
+            a_dims = attn_dims(cfg)
+            h = _apply_norm(bp["ln1"], y, cfg)
+            q, knew, vnew = L._qkv(bp["attn"], a_dims, h, positions)
+            # dequantize this layer's cache slab, splice the new entry in
+            ck = KQ.dequantize(lax.dynamic_index_in_dim(k_all, i, 0, False),
+                               lax.dynamic_index_in_dim(ks_all, i, 0, False), cd)
+            cv = KQ.dequantize(lax.dynamic_index_in_dim(v_all, i, 0, False),
+                               lax.dynamic_index_in_dim(vs_all, i, 0, False), cd)
+            ck = lax.dynamic_update_slice_in_dim(ck, knew.astype(cd), clen, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cv, vnew.astype(cd), clen, axis=1)
+            t_ = ck.shape[1]
+            valid = (jnp.arange(t_)[None, :] <= clen)[None, None, None]
+            o = L._sdpa_direct(q, ck, cv, a_dims, valid)
+            a = jnp.einsum("bshd,hdm->bsm", o, bp["attn"]["wo"])
+            y = y + a
+            h = _apply_norm(bp["ln2"], y, cfg)
+            y = y + _ff_apply(bp["ff"], cfg, run, h)
+            # quantize ONLY the new entry back into the int8 cache
+            kq, ks = KQ.quantize(knew[:, 0])
+            vq, vs = KQ.quantize(vnew[:, 0])
+            def upd(all_, lay, newv):
+                lay2 = lax.dynamic_update_slice_in_dim(
+                    lay, newv[:, None].astype(lay.dtype), clen, axis=1)
+                return lax.dynamic_update_index_in_dim(all_, lay2, i, 0)
+            k_all = upd(k_all, lax.dynamic_index_in_dim(k_all, i, 0, False), kq)
+            v_all = upd(v_all, lax.dynamic_index_in_dim(v_all, i, 0, False), vq)
+            ks_all = upd(ks_all, lax.dynamic_index_in_dim(ks_all, i, 0, False), ks)
+            vs_all = upd(vs_all, lax.dynamic_index_in_dim(vs_all, i, 0, False), vs)
+            return (y, k_all, v_all, ks_all, vs_all), None
+
+        (x, nk, nv, nks, nvs), _ = lax.scan(
+            bodyq, (x, cache["k"], cache["v"], cache["k_scale"], cache["v_scale"]),
+            (params["blocks"], jnp.arange(cfg.n_layers)))
+        new_cache = {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs,
+                     "len": clen + 1}
+    else:
+        def body(carry, xs):
+            y, k_all, v_all = carry
+            bp, i = xs
+            bp = _cast_f(bp, cd)
+            ck = lax.dynamic_index_in_dim(k_all, i, 0, keepdims=False)
+            cv = lax.dynamic_index_in_dim(v_all, i, 0, keepdims=False)
+            h = _apply_norm(bp["ln1"], y, cfg)
+            if cfg.attn_kind == "mla":
+                a, ck2, cv2 = MLA.apply_mla_decode(
+                    bp["attn"], mla_dims(cfg), h, ck, cv, clen, positions)
+            else:
+                a, ck2, cv2 = _attn_decode(bp["attn"], cfg, run, h, ck, cv,
+                                           clen, positions)
+            y = y + a
+            h = _apply_norm(bp["ln2"], y, cfg)
+            y = y + _ff_apply(bp["ff"], cfg, run, h)
+            k_all = lax.dynamic_update_index_in_dim(k_all, ck2.astype(k_all.dtype), i, 0)
+            v_all = lax.dynamic_update_index_in_dim(v_all, cv2.astype(v_all.dtype), i, 0)
+            return (y, k_all, v_all), None
+
+        nd = cfg.moe.first_dense if cfg.moe else 0
+        if nd:
+            (x, nk0, nv0), _ = lax.scan(
+                body, (x, cache["k"][:nd], cache["v"][:nd]),
+                (params["first_blocks"], jnp.arange(nd)))
+            (x, nk1, nv1), _ = lax.scan(
+                body, (x, cache["k"][nd:], cache["v"][nd:]),
+                (params["blocks"], jnp.arange(cfg.n_layers - nd)))
+            nk = jnp.concatenate([nk0, nk1], 0)
+            nv = jnp.concatenate([nv0, nv1], 0)
+        else:
+            (x, nk, nv), _ = lax.scan(
+                body, (x, cache["k"], cache["v"]),
+                (params["blocks"], jnp.arange(cfg.n_layers)))
+        new_cache = {"k": nk, "v": nv, "len": clen + 1}
+
+    x = _apply_norm(params["final_norm"], x, cfg)
+    return _head_out(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# losses / entry points
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ArchConfig, run: RunCfg, params, batch):
+    """Next-token cross entropy (f32 softmax), mean over tokens.
+
+    The gold-logit pick uses a fused iota==target select, NOT
+    take_along_axis: a vocab-dim gather forces XLA to all-gather the
+    model-sharded logits (observed +60 GiB/device on train_4k cells —
+    EXPERIMENTS.md §Perf iteration M1).
+    """
+    logits, _ = forward(cfg, run, params, batch)
+    if cfg.embed_mode in ("embeds",):
+        targets = batch["labels"]
+    else:
+        targets = batch["tokens"]
+    logits = cm.shard_act(logits, ("batch", "seq", "vocab"))
+    logits = logits.astype(jnp.float32)   # f32 boundary is HERE (see _head_out)
+    logits = logits[:, :-1]
+    targets = targets[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jnp.arange(logits.shape[-1], dtype=targets.dtype)
+    gold = jnp.sum(jnp.where(vocab_iota == targets[..., None], logits, 0.0),
+                   axis=-1)
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ArchConfig, run: RunCfg, params, batch, t_max: int = 0):
+    logits, cache = forward(cfg, run, params, batch, collect_cache=True)
+    s = (batch.get("tokens") if cfg.embed_mode == "tokens" else
+         batch.get("embeds", batch.get("tokens"))).shape[1]
+    if cfg.mixer == "hybrid":
+        cache = {"k": cache["k"], "v": cache["v"],
+                 "conv": cache["states"]["conv"], "ssm": cache["states"]["ssm"]}
+        cache["len"] = jnp.asarray(s, jnp.int32)
+        if t_max and t_max > s:
+            for kk in ("k", "v"):
+                a = cache[kk]
+                pad = [(0, 0)] * a.ndim
+                pad[2] = (0, t_max - a.shape[2])
+                cache[kk] = jnp.pad(a, pad)
+    elif cfg.mixer == "rwkv":
+        cache = dict(cache, len=jnp.asarray(s, jnp.int32))
+    else:
+        cache = {("k"): cache["k"], "v": cache["v"],
+                 **({"xk": cache["xk"], "xv": cache["xv"]} if cfg.encdec else {})}
+        cache["len"] = jnp.asarray(s, jnp.int32)
+        if t_max and t_max > s:
+            cache = pad_cache(cfg, dict(cache), s, t_max)
+    return logits[:, -1:], cache

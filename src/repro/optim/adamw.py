@@ -1,0 +1,78 @@
+"""AdamW with global-norm clipping, cosine schedule, and dtype-configurable
+moments (bf16 moments let the 398B config fit 16 GB/chip; see EXPERIMENTS.md
+§Dry-run). Pure pytree implementation — no optax dependency."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"
+
+
+def schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - c.warmup_steps)
+                 / jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return c.lr * warm * (c.min_lr_ratio + (1 - c.min_lr_ratio) * cos)
+
+
+def init(c: AdamWConfig, params) -> dict:
+    dt = jnp.dtype(c.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(c: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(c, count)
+    b1, b2 = c.b1, c.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(c.moment_dtype)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        step_ = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + c.eps)
+        step_ = step_ + c.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

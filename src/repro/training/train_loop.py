@@ -1,0 +1,93 @@
+"""Training step factory: FSDP×TP sharded AdamW step with remat,
+microbatching (gradient accumulation), and optional compressed cross-pod
+gradient sync (shard_map manual over the pod axis only)."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import RunCfg, lm_loss
+from repro.optim import adamw
+from repro.distributed import compression as comp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    microbatches: int = 1
+    grad_compression: bool = False   # cross-pod int8 + error feedback
+    adamw: adamw.AdamWConfig = adamw.AdamWConfig()
+
+
+def make_loss_fn(cfg: ArchConfig, run: RunCfg):
+    def loss_fn(params, batch):
+        return lm_loss(cfg, run, params, batch)
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, run: RunCfg, tcfg: TrainCfg):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Jit it with in/out shardings from ``repro.distributed.sharding``.
+    """
+    loss_fn = make_loss_fn(cfg, run)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        # gradient accumulation over the leading batch dim
+        def split(x):
+            b = x.shape[0]
+            mb = tcfg.microbatches
+            return x.reshape(mb, b // mb, *x.shape[1:])
+        parts = jax.tree.map(split, batch)
+
+        def body(carry, mb_batch):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb_batch)
+            return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), None
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (tl, tg), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero), parts)
+        inv = 1.0 / tcfg.microbatches
+        return tl * inv, jax.tree.map(lambda g: g * inv, tg)
+
+    def step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        new_params, new_opt, metrics = adamw.update(
+            tcfg.adamw, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_opt, metrics
+
+    if not tcfg.grad_compression or run.mesh is None or \
+            "pod" not in run.mesh.shape:
+        return step
+
+    # --- compressed cross-pod DP: manual over `pod`, auto inside ------------
+    from jax.sharding import PartitionSpec as P
+
+    def step_compressed(params, opt_state, residuals, batch):
+        def inner(params, opt_state, residuals, batch):
+            loss, grads = grads_of(params, batch)
+            grads, residuals = comp.pod_sync_compressed(grads, residuals, "pod")
+            loss = jax.lax.pmean(loss, "pod")
+            new_params, new_opt, metrics = adamw.update(
+                tcfg.adamw, grads, opt_state, params)
+            return new_params, new_opt, residuals, dict(metrics, loss=loss)
+        rep = jax.tree.map(lambda _: P(), params)
+        return jax.shard_map(
+            inner, mesh=run.mesh,
+            in_specs=(rep, jax.tree.map(lambda _: P(), opt_state),
+                      jax.tree.map(lambda _: P(), residuals),
+                      jax.tree.map(lambda a: P("pod"), batch)),
+            out_specs=(rep, jax.tree.map(lambda _: P(), opt_state),
+                       jax.tree.map(lambda _: P(), residuals),
+                       {"grad_norm": P(), "lr": P(), "loss": P()}),
+            check_vma=False, axis_names={"pod"},
+        )(params, opt_state, residuals, batch)
+
+    return step_compressed

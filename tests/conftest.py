@@ -1,0 +1,5 @@
+import jax
+
+# f64 validation of the FFT engine requires x64 (model code is dtype-explicit
+# everywhere, so enabling it globally is safe).
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,135 @@
+"""Attention-path equivalence tests: chunked (flash-style) vs direct,
+sequence-sharded decode vs dense decode, MLA chunked vs direct."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models.common import Initializer
+
+
+def _dims(h=8, hkv=2, d=32, causal=True):
+    return L.AttnDims(d_model=h * d, n_heads=h, n_kv_heads=hkv, head_dim=d,
+                      causal=causal)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("s,t", [(64, 64), (128, 128), (96, 96)])
+def test_chunked_matches_direct(causal, s, t):
+    a = _dims(causal=causal)
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, s, a.n_heads, a.head_dim), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, t, a.n_kv_heads, a.head_dim))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, t, a.n_kv_heads, a.head_dim))
+    mask = None
+    if causal:
+        mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])[None, None, None]
+    ref = L._sdpa_direct(q, k, v, a, mask)
+    got = L._sdpa_chunked(q, k, v, a, causal=causal, q_chunk=32, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_dv_differs_from_dqk():
+    a = _dims()
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 64, 8, 32))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 48))
+    got = L._sdpa_chunked(q, k, v, a, causal=True, q_chunk=16, k_chunk=16)
+    assert got.shape == (1, 64, 8, 48)
+
+
+def test_mla_chunked_matches_direct():
+    m = MLA.MLADims(d_model=64, n_heads=4, kv_lora_rank=32, qk_nope_dim=16,
+                    qk_rope_dim=8, v_head_dim=16)
+    ini = Initializer(key=jax.random.PRNGKey(0), dtype=jnp.float32)
+    p = MLA.init_mla(ini, m)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, 64))
+    pos = jnp.arange(96)[None, :] * jnp.ones((2, 1), jnp.int32)
+    ref, _ = MLA.apply_mla(p, m, x, pos)
+
+    import repro.models.layers as Lmod
+    old = Lmod.CHUNK_THRESHOLD
+    Lmod.CHUNK_THRESHOLD = 8  # force the chunked path
+    try:
+        got, _ = MLA.apply_mla(p, m, x, pos)
+    finally:
+        Lmod.CHUNK_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_seqsharded_decode_matches_dense_subprocess():
+    """The long_500k LSE-combine must equal dense decode attention."""
+    import os
+    import subprocess
+    import sys
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.models import layers as L
+
+a = L.AttnDims(d_model=64, n_heads=8, n_kv_heads=2, head_dim=8)
+mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+B, T = 1, 64
+q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, 8, 8))
+k = jax.random.normal(jax.random.PRNGKey(1), (B, T, 2, 8))
+v = jax.random.normal(jax.random.PRNGKey(2), (B, T, 2, 8))
+clen = 37
+mask = (jnp.arange(T)[None, :] <= clen)[None, None, None]
+ref = L._sdpa_direct(q, k, v, a, mask)
+
+def local(qq, ks, vs):
+    r = jax.lax.axis_index("data")
+    tl = ks.shape[1]
+    valid = ((r * tl + jnp.arange(tl))[None, :] <= clen)
+    valid = jnp.broadcast_to(valid, (qq.shape[0], tl))
+    return L.decode_attention_seqsharded(qq, ks, vs, valid, "data")
+
+got = jax.jit(jax.shard_map(local, mesh=mesh,
+    in_specs=(P(), P(None, "data", None, None), P(None, "data", None, None)),
+    out_specs=P(), check_vma=False))(q, k, v)
+np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)
+print("SEQSHARD_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SEQSHARD_OK" in out.stdout
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """kv_quant=True decode logits track the unquantized cache closely."""
+    import dataclasses
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import RunCfg, decode_step, init_cache, init_model
+
+    cfg = get_config("deepseek-7b", smoke=True)
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    run = RunCfg(mesh=None, remat=False)
+    params, _ = init_model(cfg, jax.random.PRNGKey(7))
+    rng = np.random.RandomState(7)
+
+    cache = init_cache(cfg, 2, t_max=16)
+    cacheq = init_cache(cfgq, 2, t_max=16)
+    assert cacheq["k"].dtype == jnp.int8
+    agree = 0
+    for t in range(8):
+        tok = jnp.asarray(rng.randint(0, cfg.vocab, (2, 1)), jnp.int32)
+        lo, cache = decode_step(cfg, run, params, cache, tok)
+        lq, cacheq = decode_step(cfgq, run, params, cacheq, tok)
+        err = float(jnp.max(jnp.abs(lo - lq))) / max(float(jnp.max(jnp.abs(lo))), 1e-9)
+        assert err < 0.08, (t, err)
+        agree += int(jnp.argmax(lo[:, -1], -1)[0] == jnp.argmax(lq[:, -1], -1)[0])
+    assert agree >= 7  # top-1 agreement on ≥7/8 greedy steps

@@ -1,0 +1,49 @@
+"""Dry-run tooling units: HLO collective-byte parser and roofline math."""
+
+from repro.launch.dryrun import collective_bytes
+from benchmarks.roofline import analyze
+
+
+HLO = """
+ENTRY main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = (bf16[512]{0}, bf16[512]{0}) all-reduce(%x, %y), to_apply=%add
+  %a2a.1 = f32[16,128]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = u8[64]{0} collective-permute(%q), source_target_pairs={{0,1}}
+  %cps = f32[4,4]{1,0} collective-permute-start(%q2)
+  %other = f32[999,999]{1,0} add(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser():
+    got = collective_bytes(HLO)
+    assert got["all-gather"] == 256 * 128 * 4
+    assert got["all-reduce"] == 2 * 512 * 2
+    assert got["all-to-all"] == 16 * 128 * 4
+    assert got["collective-permute"] == 64 + 4 * 4 * 4
+    assert got["total"] == (got["all-gather"] + got["all-reduce"]
+                            + got["all-to-all"] + got["collective-permute"])
+    assert got["all-gather_count"] == 1
+    assert got["collective-permute_count"] == 2
+
+
+def test_roofline_analyze():
+    rec = {
+        "status": "ok", "arch": "x", "shape": "train_4k", "mesh": "pod16x16",
+        "chips": 256,
+        "cost": {"flops": 197e12 * 0.5, "bytes_accessed": 819e9 * 0.25},
+        "collectives": {"total": 50e9 * 0.1},
+        "model_params_active": 1e9,
+        "memory": {"peak_per_device_bytes": 10 * 2 ** 30},
+    }
+    a = analyze(rec)
+    assert abs(a["compute_s"] - 0.5) < 1e-9
+    assert abs(a["memory_s"] - 0.25) < 1e-9
+    assert abs(a["collective_s"] - 0.1) < 1e-9
+    assert a["dominant"] == "compute"
+    assert a["fits_hbm"]
+    # useful ratio: 6*1e9*(4096*256)/256 chips / flops
+    want = 6 * 1e9 * 4096 * 256 / 256 / (197e12 * 0.5)
+    assert abs(a["useful_ratio"] - want) < 1e-9

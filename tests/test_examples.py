@@ -1,0 +1,40 @@
+"""Examples are part of the contract: run each end-to-end in a subprocess."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args, timeout=1500):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", script), *args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
+    return out.stdout
+
+
+def test_quickstart():
+    out = _run("quickstart.py")
+    assert "quickstart OK" in out
+
+
+def test_navier_stokes():
+    out = _run("navier_stokes.py", "--n", "16", "--steps", "4")
+    assert "energy monotone decay: True" in out
+
+
+def test_train_lm_short():
+    out = _run("train_lm.py", "--steps", "30", timeout=2400)
+    assert "loss:" in out
+
+
+def test_serve_lm():
+    out = _run("serve_lm.py")
+    assert "serve_lm OK" in out

@@ -1,0 +1,72 @@
+"""Distributed 3D FFT integration tests.
+
+The heavy multi-device checks run in a subprocess (the fake-device XLA flag
+must be set before jax initializes); single-device plan/layout logic is
+tested in-process.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.decomposition import PencilGrid
+from repro.core.fft3d import FFT3DPlan, fft3d_local, ifft3d_local
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_multi_device_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_dist_fft_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ALL_OK" in out.stdout
+
+
+def test_single_device_local_matches_fftn():
+    grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    # with pu=pv=1 the folds are pure local transposes — run outside shard_map
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, backend="ref")
+    rng = np.random.RandomState(1)
+    g = rng.randn(8, 8, 8) + 1j * rng.randn(8, 8, 8)
+    kr, ki = fft3d_local(plan, jnp.asarray(g.real), jnp.asarray(g.imag))
+    want = np.fft.fftn(g, axes=(0, 1, 2)).transpose(2, 0, 1)
+    got = np.asarray(kr) + 1j * np.asarray(ki)
+    assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-10
+    br, bi = ifft3d_local(plan, kr, ki)
+    back = np.asarray(br) + 1j * np.asarray(bi)
+    assert np.linalg.norm(back - g) / np.linalg.norm(g) < 1e-10
+
+
+@pytest.mark.parametrize("pu,pv,ok", [(2, 2, True), (3, 2, False), (2, 3, False)])
+def test_validate(pu, pv, ok):
+    grid = PencilGrid(pu=pu, pv=pv)
+    if ok:
+        grid.validate((16, 16, 16))
+    else:
+        with pytest.raises(ValueError):
+            grid.validate((16, 16, 16))
+
+
+def test_padded_r2c_len():
+    g = PencilGrid(pu=4, pv=2)
+    assert g.padded_r2c_len(16) == 12  # 9 -> 12
+    assert g.padded_r2c_len(8) == 8    # 5 -> 8
+    g1 = PencilGrid(pu=1, pv=1)
+    assert g1.padded_r2c_len(16) == 9
+
+
+def test_volume_model_eqs_3_3_and_3_4():
+    # paper Eq 3.3/3.4, s=8 bytes
+    g = PencilGrid(pu=4, pv=4)
+    n = (64, 64, 64)
+    assert g.local_volume_bytes(n) == 8 * 64**3 // 16
+    assert g.local_volume_after_x_bytes(n) == 8 * (64**3 + 2 * 64**2) // 16

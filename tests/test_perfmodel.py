@@ -1,0 +1,153 @@
+"""Validate the analytic model against the thesis' own published tables.
+
+These are the paper's claims; the model must reproduce them (EXPERIMENTS.md
+cites this file as the faithful-reproduction evidence for Tables 4.x/5.x).
+"""
+
+import math
+
+import pytest
+
+from repro.core import perfmodel as pm
+from repro.core import topology as topo
+
+
+# --- Tables 5.1/5.2, R=1 rows (latency cycles, l_FFT, T_FFT, B_FFT, GFLOPS) --
+# (N, l_op, f_MHz, latency_cycles, l_fft_us, t_fft_us, b_gib_s, gflops)
+TABLE_5_2 = [
+    (512, 3, 250, 382, 1.53, 2.55, 7.45, 22.5),
+    (1024, 3, 247, 652, 2.64, 4.71, 7.36, 24.7),
+    (2048, 3, 251, 1178, 4.69, 8.77, 7.48, 27.61),
+    (4096, 3, 244, 2216, 9.08, 17.48, 7.27, 29.28),
+    (8192, 3, 236, 4278, 18.13, 35.48, 7.03, 30.68),
+    (512, 6, 348, 463, 1.33, 2.07, 10.37, 31.32),
+    (2048, 9, 379, 1376, 3.63, 6.33, 11.30, 41.69),
+]
+
+# R=2 (Table 5.4) and R=4 (Table 5.6) spot rows
+TABLE_5_4 = [(512, 3, 238, 254, 1.07, 1.61, 14.19, 42.84),
+             (8192, 9, 377, 2464, 6.54, 11.97, 22.47, 98.8)]
+TABLE_5_6 = [(512, 3, 226, 190, 0.84, 1.12, 26.94, 81.36),
+             (4096, 9, 378, 896, 2.37, 3.72, 45.06, 181.44)]
+
+
+@pytest.mark.parametrize("row", TABLE_5_2)
+def test_table_5_2_r1(row):
+    _check_engine_row(1, *row)
+
+
+@pytest.mark.parametrize("row", TABLE_5_4)
+def test_table_5_4_r2(row):
+    _check_engine_row(2, *row)
+
+
+@pytest.mark.parametrize("row", TABLE_5_6)
+def test_table_5_6_r4(row):
+    _check_engine_row(4, *row)
+
+
+def _check_engine_row(r, n, l_op, f_mhz, lat, lfft_us, tfft_us, b_gib, gflops):
+    pt = pm.EnginePoint(n=n, r=r, l_op=l_op, f_mhz=f_mhz)
+    assert pt.latency_cycles == lat
+    assert pt.l_fft_us == pytest.approx(lfft_us, rel=0.01)
+    assert pt.t_fft_us == pytest.approx(tfft_us, rel=0.01)
+    assert pt.b_fft_gib_s == pytest.approx(b_gib, rel=0.01)
+    assert pt.gflops == pytest.approx(gflops, rel=0.01)
+
+
+def test_l_butterfly_eq_5_2():
+    # l_op=14 programmable max is reported as "14 (12)" in the tables; the
+    # simple stages give l_but = 3*14+4 = 46
+    assert pm.l_butterfly(3) == 13
+    assert pm.l_butterfly(9) == 31
+
+
+def test_table_4_1_normalized():
+    t = pm.table_4_1(mu=3)
+    assert t["sequential"]["T_tot"] == 6
+    assert t["pipelined"]["T_tot"] == 2
+    assert t["parallel"]["T_tot"] == 2
+    assert t["pipelined"]["Q"] == 4 and t["pipelined"]["N_NET"] == 2
+    assert t["parallel"]["M"] == 6
+
+
+def test_table_4_2_fixed_q4():
+    t = pm.table_4_2(mu=4)
+    assert t["sequential"]["T_tot"] == 2.0 and t["sequential"]["B"] == 4
+    assert t["pipelined"]["T_tot"] == 2.5 and t["pipelined"]["B"] == 1
+
+
+# --- Table 5.7: the global projection, μ=1 and μ=3 ---------------------------
+T57_MU1 = {(512, 1): 0.17, (512, 4): 0.047, (512, 16): 0.011, (512, 64): 0.0029,
+           (512, 256): 0.00073, (512, 1024): 0.00018,
+           (1024, 4): 0.37, (1024, 16): 0.093, (1024, 64): 0.023,
+           (2048, 16): 0.74, (2048, 64): 0.19, (4096, 256): 0.37,
+           (8192, 1024): 0.75}
+T57_MU3 = {(512, 1): 0.37, (1024, 4): 0.75, (2048, 16): 1.49, (8192, 1024): 1.49}
+
+
+@pytest.mark.parametrize("key,val", sorted(T57_MU1.items()))
+def test_table_5_7_mu1(key, val):
+    n, p = key
+    got = pm.global_fft_time(n, p, mu=1)
+    # thesis' own P=1 cell is self-inconsistent by ~9%; other cells are
+    # printed to 2 significant digits (≤7% rounding)
+    tol = 0.12 if (n, p) == (512, 1) else 0.07
+    assert got == pytest.approx(val, rel=tol)
+
+
+@pytest.mark.parametrize("key,val", sorted(T57_MU3.items()))
+def test_table_5_7_mu3(key, val):
+    n, p = key
+    assert pm.global_fft_time(n, p, mu=3) == pytest.approx(val, rel=0.05)
+
+
+def test_table_5_7_feasibility_mask():
+    t = pm.table_5_7()
+    # empty cells of the printed table
+    for n, p in [(1024, 1), (2048, 1), (2048, 4), (4096, 16), (4096, 64),
+                 (8192, 256)]:
+        assert t[n][p] is None, (n, p)
+    # filled boundary cells
+    for n, p in [(2048, 16), (8192, 1024), (4096, 256), (1024, 4)]:
+        assert t[n][p] is not None, (n, p)
+
+
+# --- Network model (Figs 5.11/5.12) ------------------------------------------
+def test_b_fft_r4_f380_exceeds_200g():
+    # thesis: at R=4 and fast clock the required bandwidth "easily reaches
+    # excessive values" — ~389 Gb/s > 200 Gb/s links
+    b = pm.b_fft_bytes_per_s(4, 380e6) * 8 / 1e9
+    assert b == pytest.approx(389.1, rel=0.01)
+
+
+def test_torus_vs_switched_scalability():
+    s = topo.scalability_summary(link_gbps=200.0)
+    # torus suffers the (√P−1) multi-hop factor: fine only for small grids
+    assert s[("torus", 4, 180.0)] <= 16
+    # switched fabric scales to the full 32×32 grid at moderated frequency
+    assert s[("switched", 4, 180.0)] == 32 * 32
+    # switched required bw saturates below 4sRf — always fits if B_FFT fits
+    for q in (2, 8, 32):
+        assert pm.b_net_switched(q * q, 4, 180e6) < pm.b_fft_bytes_per_s(4, 180e6)
+
+
+def test_nic_count_and_switch_count():
+    tor = topo.NetworkPlan("torus", 256, 4, 180.0)
+    sw = topo.NetworkPlan("switched", 256, 4, 180.0)
+    assert tor.nics_per_node == 4 and sw.nics_per_node == 2
+    assert tor.n_switches == 0 and sw.n_switches == 32
+
+
+def test_required_ram_fig_1_1():
+    # Fig 1.1: single node at N=256 ≈ 0.25 GB; N=4096 ≈ 1024 GB
+    assert pm.required_ram_per_node(256, 1) / 2**30 == pytest.approx(0.25, rel=0.01)
+    assert pm.required_ram_per_node(4096, 1) / 2**30 == pytest.approx(1024, rel=0.01)
+
+
+def test_memory_models_ch4():
+    # Eq 4.8 vs Eq 4.17: pipelined adds only the 2sN²/Pu plane buffer
+    n, p, pu = 1024, 16, 4
+    seq = pm.m_tot_sequential_bytes(n, p)
+    pipe = pm.m_tot_pipelined_bytes(n, p, pu)
+    assert pipe - seq == pytest.approx(2 * 8 * n**2 / pu)

@@ -1,0 +1,119 @@
+"""Property-based (hypothesis) tests of system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decomposition import PencilGrid
+from repro.core import perfmodel as pm
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.distributed import compression as comp
+from repro.kernels import ref
+
+SET = dict(max_examples=25, deadline=None)
+
+pow2 = st.sampled_from([4, 8, 16, 32, 64, 128])
+
+
+@given(n=pow2, batch=st.integers(1, 5), seed=st.integers(0, 2 ** 16))
+@settings(**SET)
+def test_fft_linearity(n, batch, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(batch, n)
+    y = rng.randn(batch, n)
+    a, b = rng.randn(2)
+    fx = np.asarray(ref.fft_dif_planar(jnp.asarray(x), jnp.zeros_like(jnp.asarray(x)))[0])
+    fy = np.asarray(ref.fft_dif_planar(jnp.asarray(y), jnp.zeros_like(jnp.asarray(y)))[0])
+    fz = np.asarray(ref.fft_dif_planar(jnp.asarray(a * x + b * y),
+                                       jnp.zeros_like(jnp.asarray(x)))[0])
+    np.testing.assert_allclose(fz, a * fx + b * fy, rtol=1e-9, atol=1e-9)
+
+
+@given(n=pow2, seed=st.integers(0, 2 ** 16))
+@settings(**SET)
+def test_fft_parseval(n, seed):
+    rng = np.random.RandomState(seed)
+    xr = rng.randn(3, n)
+    xi = rng.randn(3, n)
+    yr, yi = ref.fft_dif_planar(jnp.asarray(xr), jnp.asarray(xi))
+    e_t = np.sum(xr ** 2 + xi ** 2)
+    e_f = float(jnp.sum(yr ** 2 + yi ** 2)) / n
+    np.testing.assert_allclose(e_f, e_t, rtol=1e-10)
+
+
+@given(n=pow2, seed=st.integers(0, 2 ** 16))
+@settings(**SET)
+def test_fft_roundtrip(n, seed):
+    rng = np.random.RandomState(seed)
+    xr = jnp.asarray(rng.randn(2, n))
+    xi = jnp.asarray(rng.randn(2, n))
+    yr, yi = ref.fft_dif_planar(xr, xi)
+    br, bi = ref.ifft_dif_planar(yr, yi)
+    np.testing.assert_allclose(np.asarray(br), np.asarray(xr), atol=1e-10)
+    np.testing.assert_allclose(np.asarray(bi), np.asarray(xi), atol=1e-10)
+
+
+@given(n=st.sampled_from([2, 4, 8, 16, 64, 256, 1024]))
+@settings(**SET)
+def test_bitrev_involution(n):
+    p = ref.bitrev_permutation(n)
+    np.testing.assert_array_equal(p[p], np.arange(n))
+    assert sorted(p.tolist()) == list(range(n))  # permutation
+
+
+@given(pu=st.sampled_from([1, 2, 4, 8]), pv=st.sampled_from([1, 2, 4]),
+       n=st.sampled_from([32, 64, 128]))
+@settings(**SET)
+def test_pencil_shapes_tile_volume(pu, pv, n):
+    g = PencilGrid(pu=pu, pv=pv)
+    g.validate((n, n, n))
+    for shape in (g.x_pencil_local((n, n, n)), g.y_pencil_local((n, n, n)),
+                  g.z_pencil_local((n, n, n))):
+        assert np.prod(shape) * g.p == n ** 3
+    kxp = g.padded_r2c_len(n)
+    assert kxp >= n // 2 + 1 and kxp % pu == 0
+
+
+@given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 1000),
+       shards=st.sampled_from([1, 2, 4]))
+@settings(**SET)
+def test_pipeline_pure_function_of_step(seed, step, shards):
+    cfg = DataConfig(vocab=101, seq_len=8, global_batch=4, seed=seed)
+    a = Pipeline(cfg, 0, shards).batch_for_step(step)["tokens"]
+    b = Pipeline(cfg, 0, shards).batch_for_step(step)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    assert a.max() < 101 and a.min() >= 0
+
+
+@given(seed=st.integers(0, 2 ** 16), scale=st.floats(1e-5, 1e4))
+@settings(**SET)
+def test_quantization_error_bound(seed, scale):
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(64) * scale, jnp.float32)
+    q, s = comp.quantize_int8(g)
+    err = np.max(np.abs(np.asarray(comp.dequantize_int8(q, s)) - np.asarray(g)))
+    assert err <= float(s) * 0.5 + 1e-12  # round-to-nearest bound
+
+
+@given(n=st.sampled_from([512, 1024, 2048, 4096]),
+       f=st.sampled_from([180e6, 250e6, 380e6]))
+@settings(**SET)
+def test_perfmodel_monotonicity(n, f):
+    # more rows -> strictly faster engine, more throughput required
+    ts = [pm.t_fft_seconds(n, r, 9, f) for r in (1, 2, 4)]
+    assert ts[0] > ts[1] > ts[2]
+    bs = [pm.b_fft_bytes_per_s(r, f) for r in (1, 2, 4)]
+    assert bs[0] < bs[1] < bs[2]
+    # torus bandwidth grows without bound in P; switched saturates
+    assert pm.b_net_torus(1024, 4, f) > pm.b_net_torus(64, 4, f)
+    assert pm.b_net_switched(1024, 4, f) <= pm.b_fft_bytes_per_s(4, f)
+
+
+@given(mu=st.integers(1, 4))
+@settings(**SET)
+def test_pipelined_beats_sequential_at_equal_Q(mu):
+    # Table 4.1: at k=1 (pipelined Q=4 vs sequential Q=1), pipelined total
+    # time (mu+1)/2 < sequential 2*mu for all mu >= 1
+    t = pm.table_4_1(mu)
+    assert t["pipelined"]["T_tot"] < t["sequential"]["T_tot"] or mu == 1
