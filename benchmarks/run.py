@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows. Analytic (model-derived) rows
 report ``us_per_call=0``; measured rows time real executions on this host.
+``--json PATH`` additionally writes the machine-readable
+``{"schema": "bench-fft/v1", "rows": [{name, us_per_call, config}]}``
+document that CI uploads as the perf-trajectory artifact.
 
-    PYTHONPATH=src python -m benchmarks.run [--only a,b,c]
+    PYTHONPATH=src python -m benchmarks.run [--only a,b,c] [--json BENCH_fft.json]
 """
 
 from __future__ import annotations
@@ -13,9 +16,14 @@ import time
 
 import numpy as np
 
+_ROWS: list[dict] = []
 
-def _row(name, us, derived):
+
+def _row(name, us, derived, config=None):
     print(f"{name},{us:.3f},{derived}")
+    if config is None:
+        config = {"derived": derived} if derived != "" else {}
+    _ROWS.append({"name": name, "us_per_call": round(us, 3), "config": config})
 
 
 # ---------------------------------------------------------------------------
@@ -125,14 +133,8 @@ def bench_fig_1_1():
 # ---------------------------------------------------------------------------
 
 def _time(fn, *a, iters=5):
-    import jax
-    jax.block_until_ready(fn(*a))  # compile + warm
-    t0 = time.time()
-    out = None
-    for _ in range(iters):
-        out = fn(*a)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters * 1e6
+    from repro.tuning.timing import time_us
+    return time_us(fn, *a, iters=iters)
 
 
 def bench_fft_wallclock():
@@ -166,6 +168,28 @@ def bench_fft_wallclock():
         _row(f"fft3d_wallclock/numpy/N{n}", (time.time() - t0) / 5 * 1e6, "")
 
 
+# ---------------------------------------------------------------------------
+# Measured: autotuned vs default 3D-FFT plan (single device, Pu=Pv=1)
+# ---------------------------------------------------------------------------
+
+def bench_fft_autotune(n: int = 32):
+    """Time the autotuner's sweep (the default plan is always in it).
+
+    ``force=True``: a benchmark must measure *this* run, never replay the
+    persistent plan cache (the entry still gets refreshed as a side effect).
+    """
+    from repro import compat
+    from repro.tuning import autotune
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    res = autotune(mesh, n, real=True, max_candidates=4, iters=3, force=True)
+    for r in res.rows:
+        _row(f"fft3d_autotune/N{n}/{r['name']}", r["us_per_call"], "",
+             config=r["config"])
+    _row(f"fft3d_autotune/N{n}/selected", res.best_us, res.best.name,
+         config=res.best_config)
+
+
 BENCHES = {
     "table_4_1": bench_table_4_1,
     "table_4_2": bench_table_4_2,
@@ -174,17 +198,29 @@ BENCHES = {
     "network_bw": bench_network_bw,
     "fig_1_1": bench_fig_1_1,
     "fft_wallclock": bench_fft_wallclock,
+    "fft_autotune": bench_fft_autotune,
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", dest="json_path", default="",
+                    help="also write rows as a bench-fft/v1 JSON document")
     args = ap.parse_args()
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    if args.json_path:
+        import jax
+
+        from repro.tuning.cli import write_bench_json
+        write_bench_json(args.json_path, _ROWS,
+                         {"jax": jax.__version__,
+                          "platform": jax.devices()[0].platform,
+                          "device_kind": jax.devices()[0].device_kind,
+                          "benches": names})
 
 
 if __name__ == "__main__":

@@ -23,21 +23,26 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import spectral as sp
 from repro.core.decomposition import PencilGrid
 from repro.core.fft3d import FFT3DPlan, fft3d_vector_local, ifft3d_vector_local
 
 
-def make_step(mesh, n, nu, dt, chunks=2):
+def make_step(mesh, n, nu, dt, chunks=2, plan_cfg=None, vector_mode="streaming"):
     grid = PencilGrid.from_mesh(mesh)
-    plan = FFT3DPlan(n=(n, n, n), grid=grid, real=True,
-                     schedule="pipelined", chunks=chunks)
+    cfg = dict(schedule="pipelined", chunks=chunks, backend="jnp",
+               net="switched", r2c_packed=False)
+    if plan_cfg:
+        cfg.update({k: plan_cfg[k] for k in cfg if k in plan_cfg})
+        vector_mode = plan_cfg.get("vector_mode", vector_mode)
+    plan = FFT3DPlan(n=(n, n, n), grid=grid, real=True, **cfg)
     spec = P(None, *grid.pencil_spec())
 
     def rhs(vr, vi):
         """Spectral RHS: -P(u.grad u)^ - nu k^2 v^ (rotational form)."""
         # velocity to physical
-        u = ifft3d_vector_local(plan, vr, vi, vector_mode="streaming")
+        u = ifft3d_vector_local(plan, vr, vi, vector_mode=vector_mode)
         # vorticity w = curl u in spectral, to physical
         kx, ky, kz = sp.local_wavenumbers(plan, jnp.float64)
         def cross_spec(ar, ai):
@@ -50,12 +55,12 @@ def make_step(mesh, n, nu, dt, chunks=2):
             # i*k x v: (i k) x (vr + i vi) = -k x vi + i k x vr
             return -ci, cr
         wr, wi = cross_spec(vr, vi)
-        w = ifft3d_vector_local(plan, wr, wi, vector_mode="streaming")
+        w = ifft3d_vector_local(plan, wr, wi, vector_mode=vector_mode)
         # nonlinear term u x w in physical space
         uxw = jnp.stack([u[1] * w[2] - u[2] * w[1],
                          u[2] * w[0] - u[0] * w[2],
                          u[0] * w[1] - u[1] * w[0]])
-        nr, ni = fft3d_vector_local(plan, uxw, None, vector_mode="streaming")
+        nr, ni = fft3d_vector_local(plan, uxw, None, vector_mode=vector_mode)
         mask = sp.dealias_mask(plan)
         nr, ni = nr * mask, ni * mask
         nr, ni = sp.project_divergence_free(plan, nr, ni)
@@ -79,11 +84,11 @@ def make_step(mesh, n, nu, dt, chunks=2):
         div = jax.lax.pmax(div, axes)
         return vr, vi, e, div
 
-    fwd = jax.jit(jax.shard_map(
-        functools.partial(fft3d_vector_local, plan, vector_mode="streaming"),
+    fwd = jax.jit(compat.shard_map(
+        functools.partial(fft3d_vector_local, plan, vector_mode=vector_mode),
         mesh=mesh, in_specs=(spec, None), out_specs=(spec, spec),
         check_vma=False))
-    stepj = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(spec, spec),
+    stepj = jax.jit(compat.shard_map(step, mesh=mesh, in_specs=(spec, spec),
                                   out_specs=(spec, spec, P(), P()),
                                   check_vma=False))
     return plan, fwd, stepj
@@ -104,11 +109,22 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--nu", type=float, default=0.1)
     ap.add_argument("--dt", type=float, default=2e-3)
+    ap.add_argument("--autotune", action="store_true",
+                    help="pick the FFT plan via repro.tuning instead of the "
+                         "hardcoded pipelined/switched default")
     args = ap.parse_args(argv)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    plan, fwd, stepj = make_step(mesh, args.n, args.nu, args.dt)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    plan_cfg = None
+    if args.autotune:
+        from repro.tuning import autotune
+        res = autotune(mesh, args.n, real=True, components=3,
+                       dtype="float64", verbose=True)
+        plan_cfg = res.best_config
+        hit = "cache hit" if res.cache_hit else "measured"
+        print(f"autotuned plan ({hit}): {res.best.name}")
+    plan, fwd, stepj = make_step(mesh, args.n, args.nu, args.dt,
+                                 plan_cfg=plan_cfg)
     u0 = jnp.asarray(taylor_green(args.n))
     vr, vi = fwd(u0, None)
 

@@ -11,14 +11,14 @@ import os
 os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
                            + os.environ.get("XLA_FLAGS", ""))
 
-import jax
+import jax  # noqa: F401  (device init)
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.fft3d import make_fft3d
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 N = (32, 32, 32)
 
 rng = np.random.RandomState(0)

@@ -1,0 +1,122 @@
+"""JAX version-compatibility shim.
+
+The codebase targets the modern sharding API (``jax.shard_map`` with
+``check_vma`` / ``axis_names``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``); older installs (e.g. JAX 0.4.x) ship the same
+machinery under ``jax.experimental.shard_map.shard_map`` with ``check_rep`` /
+``auto`` and a ``make_mesh`` without ``axis_types``. Every mesh/shard_map
+call site routes through this module so the rest of the tree stays written
+against one API.
+
+Public surface:
+
+* ``AxisType``            — ``jax.sharding.AxisType`` or an enum fallback.
+* ``axis_types_kwargs(n)``— kwargs dict for ``jax.make_mesh`` (``{}`` on old JAX).
+* ``make_mesh(shape, axis_names)`` — version-independent mesh constructor.
+* ``shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...,
+  axis_names=...)`` — the new-API signature on either JAX.
+"""
+
+from __future__ import annotations
+
+import enum
+
+import jax
+
+try:  # JAX >= 0.5: first-class axis types
+    AxisType = jax.sharding.AxisType
+    HAS_AXIS_TYPES = True
+except AttributeError:  # JAX 0.4.x: every mesh axis is implicitly "auto"
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPES = False
+
+HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def axis_types_kwargs(n_axes: int, kind=None) -> dict:
+    """``axis_types=`` kwargs for ``jax.make_mesh``; empty on old JAX."""
+    if not HAS_AXIS_TYPES:
+        return {}
+    return {"axis_types": ((kind or AxisType.Auto),) * n_axes}
+
+
+def make_mesh(axis_shapes, axis_names, **kwargs):
+    """``jax.make_mesh`` with Auto axis types where the install supports them."""
+    return jax.make_mesh(axis_shapes, axis_names,
+                         **axis_types_kwargs(len(tuple(axis_names))), **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on new JAX; on old JAX the ``Mesh`` object is itself the
+    context manager that establishes the thread-resource mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(name) -> int:
+    """``lax.axis_size`` (static int) inside shard_map on any supported JAX.
+
+    Old JAX lacks ``lax.axis_size``; there ``lax.psum(1, name)`` of a Python
+    literal is constant-folded to the bound axis size at trace time.
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    return lax.psum(1, name)
+
+
+def axes_size(axes) -> int:
+    """Product of the bound sizes of a tuple of mesh axis names (static)."""
+    out = 1
+    for a in axes:
+        out *= axis_size(a)
+    return out
+
+
+def flat_axis_index(axes):
+    """Row-major flat rank over a tuple of mesh axes (0 for the empty tuple).
+
+    The shared helper behind every multi-axis processor-grid dimension
+    (``u_axes``/``v_axes`` spanning e.g. ``("pod", "data")``).
+    """
+    from jax import lax
+    if not axes:
+        return 0
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, axis_names=None):
+    """New-API ``jax.shard_map`` signature on any supported JAX.
+
+    On old JAX, ``check_vma`` maps to ``check_rep`` and ``axis_names`` (the
+    set of *manual* axes) maps to its complement ``auto`` (the mesh axes left
+    automatic).
+    """
+    if HAS_JAX_SHARD_MAP:
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core.decomposition import PencilGrid
 from repro.core import transpose as tr
 from repro.kernels import ops as kops
@@ -215,13 +216,30 @@ def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
                real: bool = False, backend: str = "jnp",
                schedule: Schedule = "sequential", chunks: int = 1,
                net: str = "switched", components: int = 0,
-               vector_mode: VectorMode = "streaming", r2c_packed: bool = False):
+               vector_mode: VectorMode = "streaming", r2c_packed: bool = False,
+               autotune: bool = False, tune_kwargs: dict | None = None):
     """Build jitted (forward, inverse, plan) over globally-sharded arrays.
 
     Global input layout: X-pencil ``(Ny, Nz, Nx)`` sharded ``P(u, v, None)``
     (plus a leading component axis if ``components``); output Z-pencil
     ``(Kx, Ny, Nz)`` sharded the same way.
+
+    ``autotune=True`` ignores the explicit ``backend/schedule/chunks/net/
+    vector_mode/r2c_packed`` arguments and instead sweeps the plan space for
+    this ``(n, mesh, real, components)`` problem (see ``repro.tuning``),
+    reusing the persistent plan cache when a prior run already timed it.
+    ``tune_kwargs`` forwards extra options to ``repro.tuning.autotune``
+    (``cache_path``, ``max_candidates``, ``iters``, ...).
     """
+    if autotune:
+        from repro.tuning import autotune as _autotune
+        result = _autotune(mesh, n, real=real, components=components,
+                           u_axes=u_axes, v_axes=v_axes,
+                           **(tune_kwargs or {}))
+        cfg = result.best_config
+        backend, schedule = cfg["backend"], cfg["schedule"]
+        chunks, net = cfg["chunks"], cfg["net"]
+        vector_mode, r2c_packed = cfg["vector_mode"], cfg["r2c_packed"]
     grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
     plan = FFT3DPlan(n=tuple(n), grid=grid, real=real, backend=backend,
                      schedule=schedule, chunks=chunks, net=net,
@@ -240,17 +258,17 @@ def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
         return f(kr, ki)
 
     if real:
-        fwd = jax.jit(jax.shard_map(
+        fwd = jax.jit(compat.shard_map(
             lambda x: fwd_local(x, None), mesh=mesh,
             in_specs=spec, out_specs=(spec, spec), check_vma=False))
-        inv = jax.jit(jax.shard_map(
+        inv = jax.jit(compat.shard_map(
             inv_local, mesh=mesh, in_specs=(spec, spec), out_specs=spec,
             check_vma=False))
     else:
-        fwd = jax.jit(jax.shard_map(
+        fwd = jax.jit(compat.shard_map(
             fwd_local, mesh=mesh,
             in_specs=(spec, spec), out_specs=(spec, spec), check_vma=False))
-        inv = jax.jit(jax.shard_map(
+        inv = jax.jit(compat.shard_map(
             inv_local, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
             check_vma=False))
     return fwd, inv, plan

@@ -211,6 +211,70 @@ def table_5_7(mu: int = 1, r: int = 4, k: int = 1, f_hz: float = 180e6):
 
 
 # ---------------------------------------------------------------------------
+# Autotuner candidate scoring (paper Eq. 3.3–3.4, §5.5, §5.6)
+# ---------------------------------------------------------------------------
+
+#: Relative compute-cost weight of each software FFT engine in this repo,
+#: used only to *rank* autotuner candidates before real timing (the measured
+#: sweep decides; these just keep obviously-dominated configs out of it).
+#: ``jnp`` is XLA's native FFT; ``mxu`` the four-step matmul engine (~8.5×
+#: the arithmetic, on denser units); ``ref`` the pure-jnp radix-2 oracle;
+#: ``pallas`` the radix-2 kernel, interpreted off-TPU.
+BACKEND_COMPUTE_WEIGHT = {"jnp": 1.0, "mxu": 3.0, "ref": 10.0, "pallas": 30.0}
+
+
+def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
+                          schedule: str = "sequential", chunks: int = 1,
+                          net: str = "switched", mu: int = 1,
+                          r2c_packed: bool = False, r: int = 4,
+                          f_hz: float = 180e6,
+                          link_bytes_per_s: float = 25e9,
+                          s: int = S_BYTES) -> float:
+    """Analytic time estimate for one ``FFT3DPlan`` configuration.
+
+    This is the paper's model wearing an autotuner hat: compute follows the
+    task-organization forms of Ch. 4 (Eq. 4.14 sequential / Eq. 4.15
+    pipelined, as tabulated in §5.6), the per-fold traffic is V′ of Eq. 3.4,
+    and the torus penalty is the Eq. 5.5/5.6 required-bandwidth ratio
+    (B_torus/B_switched = √P/2 → ×q/2 time per fold over a q-rank dimension).
+    Absolute numbers are nominal-FPGA seconds; the autotuner only uses the
+    *ordering* to prune the sweep.
+    """
+    nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
+    p = max(pu, 1) * max(pv, 1)
+    mu = max(mu, 1)
+    vol = nx * ny * nz
+    k = max(chunks, 1)
+    if schedule == "pipelined":
+        # Eq. 4.15 with k=1: the k in the paper is *hardware engine
+        # replication* (doubled X engines); our software slab count adds no
+        # compute throughput — chunks only enter via the overlap/fill terms.
+        t_comp = (mu + 1.0) * vol / (4.0 * p * r) / f_hz
+    else:
+        t_comp = 2.0 * mu * vol / (2.0 * p * r) / f_hz          # Eq. 4.14
+    t_comp *= BACKEND_COMPUTE_WEIGHT.get(backend, 1.0)
+    if r2c_packed:
+        t_comp *= 5.0 / 6.0  # X phase runs an N/2-point engine (1 of 3 phases)
+
+    v_prime = mu * s * (vol + 2 * ny * nz) / p                  # Eq. 3.4
+
+    def fold_seconds(q: int) -> float:
+        if q <= 1:
+            return 0.0
+        t = v_prime * (q - 1) / q / link_bytes_per_s
+        if net == "torus":
+            t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
+        return t
+
+    t_net = fold_seconds(pu) + fold_seconds(pv)
+    if schedule == "pipelined":
+        # slab i+1's butterflies run under slab i's fold (Fig. 4.3): the
+        # longer of the two streams dominates, plus a 1/k pipeline-fill term.
+        return max(t_comp, t_net) + (t_comp + t_net) / k
+    return t_comp + t_net
+
+
+# ---------------------------------------------------------------------------
 # Required-RAM trend (paper Fig. 1.1)
 # ---------------------------------------------------------------------------
 

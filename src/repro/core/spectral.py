@@ -11,16 +11,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.core.fft3d import FFT3DPlan
 
 
-def _flat_index(axes):
-    if not axes:
-        return 0
-    idx = lax.axis_index(axes[0])
-    for a in axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
-    return idx
+_flat_index = compat.flat_axis_index
 
 
 def local_wavenumbers(plan: FFT3DPlan, dtype=jnp.float64):

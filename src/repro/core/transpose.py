@@ -15,24 +15,17 @@ All functions run *inside* ``shard_map`` over the FFT mesh axes.
 
 from __future__ import annotations
 
-import math
-
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 MODES = ("switched", "torus")
 
 
-def _flat_axis_index(axes: tuple[str, ...]):
-    idx = lax.axis_index(axes[0])
-    for a in axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
-    return idx
-
-
-def _axis_size(axes: tuple[str, ...]) -> int:
-    return math.prod(lax.axis_size(a) for a in axes)
+_flat_axis_index = compat.flat_axis_index
+_axis_size = compat.axes_size
 
 
 def all_to_all_blocks(x, axes: tuple[str, ...], *, split_axis: int,

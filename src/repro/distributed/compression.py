@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def quantize_int8(g):
     """Per-tensor symmetric int8; returns (q, scale)."""
@@ -53,7 +55,7 @@ def pod_sync_compressed(grads, residuals, axis: str = "pod"):
         q, s = quantize_int8(g32)
         deq = dequantize_int8(q, s)
         new_r = g32 - deq
-        tot = jax.lax.psum(deq, axis) / jax.lax.axis_size(axis)
+        tot = jax.lax.psum(deq, axis) / compat.axis_size(axis)
         return tot.astype(g.dtype), new_r
     out = jax.tree.map(one, grads, residuals)
     g2 = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))

@@ -21,6 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import REGISTRY, SHAPES, get_config, shape_applicable
 from repro.configs.base import count_active_params, count_params
 from repro.distributed import sharding as sh
@@ -132,7 +133,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     mesh = make_production_mesh(multi_pod=multi_pod)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fn, args = build_cell(arch, shape_name, mesh)
             lowered = fn.lower(*args)
             rec["lower_s"] = round(time.time() - t0, 2)
@@ -192,7 +193,7 @@ def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
     u_axes = ("pod", "data") if multi_pod else ("data",)
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fwd, inv, plan = make_fft3d(
                 mesh, (n, n, n), u_axes=u_axes, v_axes=("model",), real=True,
                 backend=backend, schedule=schedule, chunks=chunks, net=net,

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, Pipeline
@@ -88,7 +89,7 @@ def main(argv=None):
 
     losses = []
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for step in range(start, args.steps):
             batch = {k: jnp.asarray(v)
                      for k, v in pipe.batch_for_step(step).items()}

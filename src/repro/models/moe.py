@@ -16,6 +16,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models.layers import init_mlp
 from repro.models.common import shard_act
 
@@ -122,9 +123,7 @@ def moe_ep_local(xt, p, m: MoEDims, model_axes: tuple[str, ...]):
     from jax import lax
 
     t, d = xt.shape
-    msize = 1
-    for a in model_axes:
-        msize *= lax.axis_size(a)
+    msize = compat.axes_size(model_axes)
     name = model_axes if len(model_axes) > 1 else model_axes[0]
     e_loc = m.n_experts // msize
     k = m.top_k
@@ -201,7 +200,7 @@ def apply_moe_ep(p, m: MoEDims, x, mesh, *, data_axes=("data",),
         return jnp.concatenate(outs, axis=0).reshape(bl, s, d)
 
     w = p["experts"]
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dspec, None, None), P(), P(mspec, None, None),
                   P(mspec, None, None), P(mspec, None, None)),

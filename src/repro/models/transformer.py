@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.models import common as cm
 from repro.models import layers as L
@@ -530,11 +531,7 @@ def pad_cache(cfg: ArchConfig, cache, s: int, t_max: int):
     return out
 
 
-def _flat_rank(axes):
-    r = lax.axis_index(axes[0])
-    for a in axes[1:]:
-        r = r * lax.axis_size(a) + lax.axis_index(a)
-    return r
+_flat_rank = compat.flat_axis_index
 
 
 def _attn_decode(bp, cfg, run: RunCfg, h, ck, cv, clen, positions):
@@ -565,7 +562,7 @@ def _attn_decode(bp, cfg, run: RunCfg, h, ck, cv, clen, positions):
         return o, k2, v2
 
     kvspec = P(None, dspec, None, None)
-    o, ck2, cv2 = jax.shard_map(
+    o, ck2, cv2 = compat.shard_map(
         local, mesh=run.mesh,
         in_specs=(P(), kvspec, kvspec, P(), P(), P()),
         out_specs=(P(), kvspec, kvspec), check_vma=False)(

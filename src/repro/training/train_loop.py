@@ -11,6 +11,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.models.transformer import RunCfg, lm_loss
 from repro.optim import adamw
@@ -79,7 +80,7 @@ def make_train_step(cfg: ArchConfig, run: RunCfg, tcfg: TrainCfg):
                 tcfg.adamw, grads, opt_state, params)
             return new_params, new_opt, residuals, dict(metrics, loss=loss)
         rep = jax.tree.map(lambda _: P(), params)
-        return jax.shard_map(
+        return compat.shard_map(
             inner, mesh=run.mesh,
             in_specs=(rep, jax.tree.map(lambda _: P(), opt_state),
                       jax.tree.map(lambda _: P(), residuals),

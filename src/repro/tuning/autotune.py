@@ -1,0 +1,143 @@
+"""The autotuner: prune with the paper's model, time the survivors, cache.
+
+``autotune(mesh, n, ...)`` is the programmatic entry point (used by
+``make_fft3d(..., autotune=True)``); ``repro.tuning.cli`` wraps it for the
+command line.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import datetime
+import math
+
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.core.decomposition import PencilGrid
+from repro.tuning.cache import PlanCache, problem_fingerprint
+from repro.tuning.space import DEFAULT_CANDIDATE, Candidate, candidate_space
+from repro.tuning.timing import time_us
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    best_config: dict          # kwargs subset for make_fft3d / FFT3DPlan
+    best_us: float
+    cache_hit: bool
+    key: str
+    rows: list                 # [{"name", "us_per_call", "config"}] timed sweep
+
+    @property
+    def best(self) -> Candidate:
+        return Candidate.from_config(self.best_config)
+
+
+def _estimate(cand: Candidate, n, grid: PencilGrid, components: int) -> float:
+    return pm.estimate_plan_seconds(
+        n, grid.pu, grid.pv, backend=cand.backend, schedule=cand.schedule,
+        chunks=cand.chunks, net=cand.net, mu=max(components, 1),
+        r2c_packed=cand.r2c_packed)
+
+
+def time_candidate(mesh, n, cand: Candidate, *, real: bool = False,
+                   components: int = 0, dtype="float32",
+                   u_axes=("data",), v_axes=("model",), iters: int = 3) -> float:
+    """Measured µs/forward-transform for one candidate (compile excluded)."""
+    import jax.numpy as jnp
+
+    from repro.core.fft3d import make_fft3d
+
+    fwd, _inv, _plan = make_fft3d(
+        mesh, n, u_axes=u_axes, v_axes=v_axes, real=real,
+        components=components, backend=cand.backend, schedule=cand.schedule,
+        chunks=cand.chunks, net=cand.net, vector_mode=cand.vector_mode,
+        r2c_packed=cand.r2c_packed)
+    nx, ny, nz = n
+    shape = ((components,) if components else ()) + (ny, nz, nx)
+    rng = np.random.RandomState(0)
+    xr = jnp.asarray(rng.randn(*shape).astype(np.dtype(dtype)))
+    if real:
+        return time_us(fwd, xr, iters=iters)
+    xi = jnp.zeros_like(xr)
+    return time_us(fwd, xr, xi, iters=iters)
+
+
+def autotune(mesh, n, *, real: bool = False, components: int = 0,
+             dtype="float32", u_axes=("data",), v_axes=("model",),
+             cache_path: str | None = None, max_candidates: int = 8,
+             iters: int = 3, force: bool = False,
+             verbose: bool = False) -> TuneResult:
+    """Pick the fastest ``FFT3DPlan`` configuration for this problem.
+
+    The sweep is ranked by the paper's analytic model and only the top
+    ``max_candidates`` (plus the hardcoded default, which is always timed so
+    the winner is never slower than the status quo) are measured. Results
+    persist in the JSON plan cache; a repeat call with the same fingerprint
+    returns without timing anything. ``force=True`` re-times and overwrites.
+    """
+    import jax
+
+    n = (n, n, n) if isinstance(n, int) else tuple(n)
+    grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
+    grid.validate(n)
+    # fingerprint the dtype JAX will actually compute in (x64 disabled
+    # silently demotes float64 — the cache must not claim otherwise)
+    dtype = str(jax.dtypes.canonicalize_dtype(np.dtype(dtype)))
+    key, problem = problem_fingerprint(
+        n, grid.pu, grid.pv, real=real, components=components, dtype=dtype,
+        u_axes=u_axes, v_axes=v_axes)
+    cache = PlanCache(cache_path)
+    if not force:
+        entry = cache.get(key)
+        if entry is not None:
+            return TuneResult(best_config=entry["best"],
+                              best_us=entry["us_per_call"], cache_hit=True,
+                              key=key, rows=entry.get("rows", []))
+
+    cands = candidate_space(n, grid.pu, grid.pv, real=real,
+                            components=components)
+    cands.sort(key=lambda c: _estimate(c, n, grid, components))
+    keep = cands[:max(max_candidates, 1)]
+    if DEFAULT_CANDIDATE not in keep:
+        keep.append(DEFAULT_CANDIDATE)
+
+    rows = []
+    for cand in keep:
+        try:
+            us = time_candidate(mesh, n, cand, real=real,
+                                components=components, dtype=dtype,
+                                u_axes=u_axes, v_axes=v_axes, iters=iters)
+        except Exception as e:  # invalid on this substrate — drop, keep going
+            if verbose:
+                print(f"  tune {cand.name}: FAILED ({type(e).__name__}: {e})")
+            continue
+        rows.append({"name": cand.name, "us_per_call": round(us, 3),
+                     "config": cand.config()})
+        if verbose:
+            print(f"  tune {cand.name}: {us:.1f} us")
+    if not rows:
+        raise RuntimeError(f"autotune: no candidate ran for problem {key}")
+
+    best = min(rows, key=lambda r: r["us_per_call"])
+    entry = {
+        "problem": problem,
+        "best": best["config"],
+        "best_name": best["name"],
+        "us_per_call": best["us_per_call"],
+        "rows": rows,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
+    cache.put(key, entry)
+    return TuneResult(best_config=best["config"],
+                      best_us=best["us_per_call"], cache_hit=False, key=key,
+                      rows=rows)
+
+
+def speedup_vs_default(result: TuneResult) -> float:
+    """Measured default-plan time / best time (≥ 1.0 when the sweep timed
+    the default; ``nan`` on a cache hit whose rows were not stored)."""
+    for row in result.rows:
+        if Candidate.from_config(row["config"]) == DEFAULT_CANDIDATE:
+            return row["us_per_call"] / max(result.best_us, 1e-9)
+    return math.nan

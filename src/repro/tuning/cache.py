@@ -1,0 +1,93 @@
+"""Persistent JSON plan cache.
+
+Entries are keyed by a canonical *problem fingerprint* — the transform
+(n, Pu×Pv grid, real/complex, μ components, dtype) plus the software/hardware
+substrate (JAX version, platform, device kind) — so a cached winner is never
+replayed on a machine where the measurement would not transfer.
+
+File layout (one file, many problems)::
+
+    {"schema": "fft-plan-cache/v1",
+     "entries": {"<fingerprint>": {"problem": {...}, "best": {...},
+                                   "us_per_call": 123.4, "rows": [...],
+                                   "created": "..."}}}
+
+Writes are atomic (tmp file + ``os.replace``) so concurrent benchmark jobs
+cannot tear the file.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+SCHEMA = "fft-plan-cache/v1"
+ENV_VAR = "REPRO_PLAN_CACHE"
+
+
+def default_cache_path() -> str:
+    """``$REPRO_PLAN_CACHE`` if set, else ``~/.cache/repro/fft_plans.json``."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "fft_plans.json")
+
+
+def problem_fingerprint(n, pu: int, pv: int, *, real: bool = False,
+                        components: int = 0, dtype: str = "float32",
+                        u_axes=("data",), v_axes=("model",)) -> tuple[str, dict]:
+    """(key, payload): canonical id of a tuning problem on this substrate."""
+    import jax
+
+    dev = jax.devices()[0]
+    nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
+    payload = {
+        "schema": SCHEMA,
+        "n": [int(nx), int(ny), int(nz)],
+        "pu": int(pu), "pv": int(pv),
+        "u_axes": list(u_axes), "v_axes": list(v_axes),
+        "real": bool(real), "components": int(components),
+        "dtype": str(dtype),
+        "jax_version": jax.__version__,
+        "platform": dev.platform,
+        "device_kind": dev.device_kind,
+    }
+    digest = hashlib.sha256(
+        json.dumps(payload, sort_keys=True).encode()).hexdigest()[:16]
+    kind = ("r2c" if real else "c2c") + (f"_mu{components}" if components else "")
+    key = f"n{nx}x{ny}x{nz}_p{pu}x{pv}_{kind}_{payload['dtype']}_{digest}"
+    return key, payload
+
+
+class PlanCache:
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+
+    def _load(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return {"schema": SCHEMA, "entries": {}}
+        if data.get("schema") != SCHEMA:
+            return {"schema": SCHEMA, "entries": {}}
+        return data
+
+    def get(self, key: str) -> dict | None:
+        return self._load()["entries"].get(key)
+
+    def put(self, key: str, entry: dict) -> None:
+        data = self._load()
+        data["entries"][key] = entry
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = self.path + f".tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, self.path)
+
+    def keys(self) -> list[str]:
+        return sorted(self._load()["entries"])

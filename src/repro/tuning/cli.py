@@ -1,0 +1,127 @@
+"""Autotuner command line.
+
+    PYTHONPATH=src python -m repro.tuning.cli --n 64 --mesh 4x2
+
+Sweeps the ``FFT3DPlan`` space for the given problem on a Pu×Pv device mesh
+(host devices are faked to Pu·Pv when the machine has fewer — the flag is set
+before the XLA backend initializes), writes the winner to the persistent plan
+cache, and emits the measured sweep as ``BENCH_fft.json`` rows
+(``{name, us_per_call, config}``) for the CI perf-trajectory artifact.
+A second invocation with the same problem is a cache hit and times nothing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _parse_mesh(text: str) -> tuple[int, int]:
+    try:
+        pu, pv = (int(t) for t in text.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh must look like 4x2, got {text!r}")
+    return pu, pv
+
+
+def write_bench_json(path: str, rows: list, meta: dict) -> None:
+    """Write/merge ``BENCH_fft.json``: same-name rows are replaced in place."""
+    doc = {"schema": "bench-fft/v1", "meta": meta, "rows": []}
+    try:
+        with open(path) as f:
+            old = json.load(f)
+        if old.get("schema") == doc["schema"] and isinstance(old.get("rows"), list):
+            doc["rows"] = [r for r in old["rows"]
+                           if r.get("name") not in {x["name"] for x in rows}]
+            doc["meta"] = {**old.get("meta", {}), **meta}
+    except (FileNotFoundError, json.JSONDecodeError):
+        pass
+    doc["rows"].extend(rows)
+    tmp = path + f".tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tuning.cli",
+        description="Autotune the distributed 3D-FFT plan for one problem.")
+    ap.add_argument("--n", type=int, default=64, help="cubic grid extent N")
+    ap.add_argument("--mesh", default="4x2", help="Pu x Pv pencil grid, e.g. 4x2")
+    ap.add_argument("--real", action="store_true", help="real-to-complex input")
+    ap.add_argument("--components", type=int, default=0,
+                    help="μ vector components (0 = scalar field)")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--iters", type=int, default=3, help="timed calls/candidate")
+    ap.add_argument("--max-candidates", type=int, default=8,
+                    help="model-pruned sweep size (default plan always added)")
+    ap.add_argument("--cache", default=None,
+                    help="plan-cache path (default: $REPRO_PLAN_CACHE or "
+                         "~/.cache/repro/fft_plans.json)")
+    ap.add_argument("--json", dest="json_path", default="BENCH_fft.json",
+                    help="benchmark-rows output ('' disables)")
+    ap.add_argument("--force", action="store_true",
+                    help="ignore any cached plan and re-time")
+    args = ap.parse_args(argv)
+
+    pu, pv = _parse_mesh(args.mesh)
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={pu * pv} " + flags)
+
+    import jax
+
+    from repro import compat
+    from repro.tuning import autotune
+    from repro.tuning.autotune import speedup_vs_default
+
+    if len(jax.devices()) < pu * pv:
+        raise SystemExit(f"need {pu * pv} devices for mesh {args.mesh}, "
+                         f"have {len(jax.devices())}")
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    print(f"autotune: N={args.n}^3 mesh={pu}x{pv} real={args.real} "
+          f"components={args.components} dtype={args.dtype} "
+          f"[{jax.devices()[0].platform}:{len(jax.devices())} devices]",
+          flush=True)
+    try:
+        result = autotune(mesh, args.n, real=args.real,
+                          components=args.components, dtype=args.dtype,
+                          cache_path=args.cache,
+                          max_candidates=args.max_candidates,
+                          iters=args.iters, force=args.force, verbose=True)
+    except ValueError as e:  # e.g. N not divisible by the pencil grid
+        raise SystemExit(f"invalid problem for mesh {args.mesh}: {e}")
+
+    from repro.tuning.cache import PlanCache
+
+    src = "cache HIT (nothing re-timed)" if result.cache_hit else "measured sweep"
+    print(f"selected [{src}]: {result.best.name}  {result.best_us:.1f} us/call")
+    sp = speedup_vs_default(result)
+    if sp == sp:  # not nan
+        print(f"speedup vs default (jnp/seq/switched): {sp:.2f}x")
+    print(f"plan cache: {PlanCache(args.cache).path}  key={result.key}")
+
+    if args.json_path:
+        prefix = f"autotune/{result.key}"
+        rows = [{"name": f"{prefix}/{r['name']}",
+                 "us_per_call": r["us_per_call"], "config": r["config"]}
+                for r in result.rows]
+        rows.append({"name": f"{prefix}/selected",
+                     "us_per_call": result.best_us,
+                     "config": result.best_config})
+        meta = {"jax": jax.__version__,
+                "platform": jax.devices()[0].platform,
+                "device_kind": jax.devices()[0].device_kind,
+                "argv": list(argv) if argv is not None else sys.argv[1:]}
+        write_bench_json(args.json_path, rows, meta)
+        print(f"wrote {args.json_path} ({len(rows)} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

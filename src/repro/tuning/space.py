@@ -1,0 +1,76 @@
+"""Enumeration of the valid ``FFT3DPlan`` configuration space."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.ref import is_pow2
+
+CHUNK_CHOICES = (2, 4, 8)       # pipelined slab counts (1 = sequential)
+ALL_BACKENDS = ("jnp", "ref", "pallas", "mxu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One point of the plan space — exactly the tunable ``make_fft3d`` knobs."""
+
+    backend: str = "jnp"
+    schedule: str = "sequential"
+    chunks: int = 1
+    net: str = "switched"
+    vector_mode: str = "streaming"
+    r2c_packed: bool = False
+
+    @property
+    def name(self) -> str:
+        sched = "seq" if self.schedule == "sequential" else f"pipe{self.chunks}"
+        bits = [self.backend, sched, self.net, self.vector_mode]
+        if self.r2c_packed:
+            bits.append("packed")
+        return "/".join(bits)
+
+    def config(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_config(cls, cfg: dict) -> "Candidate":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in cfg.items() if k in fields})
+
+
+DEFAULT_CANDIDATE = Candidate()  # the hardcoded status quo every caller used
+
+
+def candidate_space(n, pu: int, pv: int, *, real: bool = False,
+                    components: int = 0,
+                    backends=None) -> list[Candidate]:
+    """All valid candidates for the problem.
+
+    Validity rules:
+
+    * ``ref``/``pallas``/``mxu`` are radix-2 / four-step engines — power-of-two
+      axis lengths only (``jnp`` delegates to XLA's general FFT).
+    * ``net="torus"`` is only distinct from ``"switched"`` when a fold
+      actually communicates (Pu > 1 or Pv > 1).
+    * ``vector_mode`` only matters for μ-component fields (``components>0``).
+    * ``r2c_packed`` needs a real transform with even power-of-two Nx.
+    """
+    nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
+    pow2 = all(is_pow2(d) for d in (nx, ny, nz))
+    if backends is None:
+        backends = [b for b in ALL_BACKENDS if b == "jnp" or pow2]
+    nets = ("switched", "torus") if (pu > 1 or pv > 1) else ("switched",)
+    schedules = [("sequential", 1)] + [("pipelined", c) for c in CHUNK_CHOICES]
+    vmodes = ("streaming", "parallel") if components else ("streaming",)
+    packed_opts = (False, True) if (real and pow2 and nx % 2 == 0) else (False,)
+
+    out = []
+    for backend in backends:
+        for schedule, chunks in schedules:
+            for net in nets:
+                for vm in vmodes:
+                    for packed in packed_opts:
+                        out.append(Candidate(
+                            backend=backend, schedule=schedule, chunks=chunks,
+                            net=net, vector_mode=vm, r2c_packed=packed))
+    return out

@@ -1,0 +1,23 @@
+"""Wall-clock timing with compile/warm-up discipline.
+
+One call compiles and warms the function (excluded from the measurement),
+then the timed loop runs ``iters`` calls back-to-back and blocks once at the
+end — the same discipline as ``benchmarks/run.py`` (which now imports this).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def time_us(fn, *args, iters: int = 5) -> float:
+    """Mean wall time per call of ``fn(*args)`` in microseconds."""
+    import jax
+
+    jax.block_until_ready(fn(*args))  # compile + warm
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6

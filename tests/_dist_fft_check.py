@@ -18,6 +18,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.core.fft3d import make_fft3d  # noqa: E402
 
 
@@ -31,8 +32,7 @@ def expected_c2c(g):
 
 
 def run():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     n = (16, 16, 16)
     ny, nz, nx = 16, 16, 16
     rng = np.random.RandomState(0)
@@ -97,8 +97,7 @@ def run():
     print("CHECK vector_modes OK", flush=True)
 
     # multi-axis u (multi-pod style): u over both axes of a (2,2,2) mesh
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh3 = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
     fwd, inv, plan = make_fft3d(mesh3, n, u_axes=("pod", "data"), v_axes=("model",))
     kr, ki = fwd(xr, xi)
     assert rel(np.asarray(kr) + 1j * np.asarray(ki), want) < 1e-9

@@ -1,0 +1,81 @@
+"""Multi-device pencil-transpose equivalence checks (subprocess: the fake
+device-count XLA flag must be set before jax initializes).
+
+Usage: python tests/_dist_transpose_check.py PUxPV   (expects PYTHONPATH=src)
+Asserts, for a non-trivial Pu×Pv grid:
+
+* ``net="torus"`` (ring of ppermutes, Eq. 5.6 routing) is **bit-identical**
+  to ``net="switched"`` (single all_to_all, Eq. 5.5) for both folds, and
+* ``xy/yz unfold∘fold`` round-trips to the input exactly.
+
+Prints CHECK <name> OK per property, then ALL_OK.
+"""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.core import transpose as tr  # noqa: E402
+from repro.core.decomposition import PencilGrid  # noqa: E402
+
+
+def run(pu: int, pv: int) -> None:
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    grid = PencilGrid.from_mesh(mesh)
+    n = (16, 16, 16)
+    grid.validate(n)
+    spec = grid.pencil_spec()
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(*n))  # X-pencil global (Ny, Nz, Nx)
+
+    def sm(f, out_spec=spec):
+        return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(spec,),
+                                        out_specs=out_spec, check_vma=False))
+
+    for fold, unfold, axes, name in [
+        (tr.xy_fold, tr.xy_unfold, grid.u_axes, "xy"),
+        (tr.yz_fold, tr.yz_unfold, grid.v_axes, "yz"),
+    ]:
+        folded = {}
+        for mode in ("switched", "torus"):
+            folded[mode] = np.asarray(
+                sm(lambda a, m=mode: fold(a, axes, mode=m))(x))
+            back = sm(lambda a, m=mode: unfold(fold(a, axes, mode=m), axes,
+                                               mode=m))(x)
+            assert np.array_equal(np.asarray(back), np.asarray(x)), \
+                (name, mode, "roundtrip")
+            print(f"CHECK {name}_roundtrip_{mode} OK", flush=True)
+        assert np.array_equal(folded["switched"], folded["torus"]), \
+            (name, "torus != switched")
+        print(f"CHECK {name}_torus_bitexact OK", flush=True)
+
+    # both folds composed (the full forward relayout), leading batch axis
+    xb = jnp.asarray(rng.randn(2, *n))
+    bspec = P(None, *spec)
+    outs = {}
+    for mode in ("switched", "torus"):
+        f = jax.jit(compat.shard_map(
+            lambda a, m=mode: tr.yz_fold(tr.xy_fold(a, grid.u_axes, mode=m),
+                                         grid.v_axes, mode=m),
+            mesh=mesh, in_specs=(bspec,), out_specs=bspec, check_vma=False))
+        outs[mode] = np.asarray(f(xb))
+    assert np.array_equal(outs["switched"], outs["torus"])
+    print("CHECK composed_folds_bitexact OK", flush=True)
+    print("ALL_OK", flush=True)
+
+
+if __name__ == "__main__":
+    pu, pv = (int(t) for t in sys.argv[1].lower().split("x"))
+    run(pu, pv)

@@ -76,7 +76,8 @@ from jax.sharding import PartitionSpec as P
 from repro.models import layers as L
 
 a = L.AttnDims(d_model=64, n_heads=8, n_kv_heads=2, head_dim=8)
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
 B, T = 1, 64
 q = jax.random.normal(jax.random.PRNGKey(0), (B, 1, 8, 8))
 k = jax.random.normal(jax.random.PRNGKey(1), (B, T, 2, 8))
@@ -92,7 +93,7 @@ def local(qq, ks, vs):
     valid = jnp.broadcast_to(valid, (qq.shape[0], tl))
     return L.decode_attention_seqsharded(qq, ks, vs, valid, "data")
 
-got = jax.jit(jax.shard_map(local, mesh=mesh,
+got = jax.jit(shard_map(local, mesh=mesh,
     in_specs=(P(), P(None, "data", None, None), P(None, "data", None, None)),
     out_specs=P(), check_vma=False))(q, k, v)
 np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-5, atol=2e-5)

@@ -14,8 +14,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.models.moe import MoEDims, init_moe, apply_moe, apply_moe_ep
 from repro.models.common import Initializer
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 m = MoEDims(d_model=32, n_experts=8, top_k=2, d_ff_expert=16,
             capacity_factor=8.0, router_norm_topk=True)
 ini = Initializer(key=jax.random.PRNGKey(0), dtype=jnp.float32)

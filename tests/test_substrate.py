@@ -111,8 +111,8 @@ def test_checkpoint_reshard_restore(tmp_path):
     mgr = CheckpointManager(d)
     tree = {"w": jnp.arange(8.0)}
     mgr.save(3, tree, block=True)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("data",))
     shard = {"w": NamedSharding(mesh, P("data"))}
     got, _ = mgr.restore(tree, shardings=shard)
     np.testing.assert_allclose(np.asarray(got["w"]), np.arange(8.0))
