@@ -1,0 +1,156 @@
+"""Bench regression gate: diff two ``bench-fft/v1`` JSON documents.
+
+    PYTHONPATH=src python -m benchmarks.compare BASELINE.json NEW.json \
+        [--threshold 0.15] [--strict]
+
+Compares ``us_per_call`` of *measured* rows (``us_per_call > 0``; analytic
+model rows carry 0 and are skipped) that appear in both documents, matched
+by ``name``. Timings only transfer within one substrate: when the two
+documents' ``meta`` disagree on platform / device kind / device count /
+JAX version, the gate soft-passes rather than comparing apples to oranges
+(e.g. the baseline artifact predates a CI environment change). Exit codes:
+
+* ``0`` — no row regressed beyond the threshold, or soft-pass (baseline
+  file missing / no overlapping rows / substrate mismatch) when
+  ``--strict`` is not given — CI's first run has no previous artifact to
+  compare against.
+* ``1`` — at least one row regressed by more than ``--threshold``
+  (default 0.15 = +15% time per call).
+* ``2`` — unreadable/invalid input, or soft-pass conditions under
+  ``--strict``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+
+SCHEMA = "bench-fft/v1"
+
+#: meta keys that must agree for timings to be comparable at all
+SUBSTRATE_KEYS = ("platform", "device_kind", "devices", "jax")
+
+
+def load_doc(path: str) -> tuple[dict, dict]:
+    """``({name: us_per_call}, meta)`` for the measured rows of a document."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: expected schema {SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    out = {}
+    for row in doc.get("rows", []):
+        name, us = row.get("name"), row.get("us_per_call")
+        if isinstance(name, str) and isinstance(us, (int, float)) and us > 0:
+            out[name] = float(us)
+    return out, doc.get("meta", {})
+
+
+def substrate_mismatch(base_meta: dict, new_meta: dict) -> str:
+    """Non-empty reason string when the two measurement substrates differ."""
+    for key in SUBSTRATE_KEYS:
+        if base_meta.get(key) != new_meta.get(key):
+            return (f"{key}: baseline={base_meta.get(key)!r} "
+                    f"vs new={new_meta.get(key)!r}")
+    return ""
+
+
+def compare(base: dict, new: dict, threshold: float):
+    """(regressions, improvements, n_common): rows beyond ±threshold."""
+    regressions, improvements = [], []
+    common = sorted(set(base) & set(new))
+    for name in common:
+        ratio = new[name] / base[name]
+        if ratio > 1.0 + threshold:
+            regressions.append((name, base[name], new[name], ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, base[name], new[name], ratio))
+    regressions.sort(key=lambda r: -r[3])
+    improvements.sort(key=lambda r: r[3])
+    return regressions, improvements, len(common)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.compare",
+        description="Fail when BENCH_fft.json regressed vs a baseline run.")
+    ap.add_argument("baseline", help="previous run's bench-fft/v1 JSON")
+    ap.add_argument("new", help="this run's bench-fft/v1 JSON")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative us_per_call increase that fails the gate "
+                         "(default 0.15 = +15%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing baseline / empty overlap is an error "
+                         "instead of a soft pass")
+    ap.add_argument("--ignore", action="append", default=[], metavar="GLOB",
+                    help="row-name glob to exclude from the gate "
+                         "(repeatable; e.g. 'autotune/*' for low-iteration "
+                         "sweep diagnostics too noisy to gate on)")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="gate only rows whose baseline us_per_call is at "
+                         "least this (sub-threshold timings are scheduler "
+                         "jitter on shared runners, not signal)")
+    args = ap.parse_args(argv)
+
+    def soft(msg: str) -> int:
+        print(f"bench-compare: {msg}")
+        if args.strict:
+            return 2
+        print("bench-compare: soft pass (no baseline to gate against)")
+        return 0
+
+    try:
+        base, base_meta = load_doc(args.baseline)
+    except FileNotFoundError:
+        return soft(f"baseline {args.baseline!r} not found")
+    except (json.JSONDecodeError, ValueError) as e:
+        return soft(f"unreadable baseline: {e}")
+    try:
+        new, new_meta = load_doc(args.new)
+    except (FileNotFoundError, json.JSONDecodeError, ValueError) as e:
+        print(f"bench-compare: unreadable new document: {e}")
+        return 2
+
+    mismatch = substrate_mismatch(base_meta, new_meta)
+    if mismatch:
+        return soft(f"measurement substrate changed ({mismatch}) — "
+                    f"timings are not comparable")
+
+    if args.ignore:
+        def keep(name):
+            return not any(fnmatch.fnmatch(name, pat) for pat in args.ignore)
+        dropped = sorted(n for n in (set(base) | set(new)) if not keep(n))
+        base = {k: v for k, v in base.items() if keep(k)}
+        new = {k: v for k, v in new.items() if keep(k)}
+        if dropped:
+            print(f"bench-compare: ignoring {len(dropped)} row(s) matching "
+                  f"{args.ignore}")
+    if args.min_us > 0:
+        fast = [k for k, v in base.items() if v < args.min_us]
+        if fast:
+            print(f"bench-compare: skipping {len(fast)} row(s) under "
+                  f"{args.min_us:g} us (below the noise floor)")
+            base = {k: v for k, v in base.items() if k not in set(fast)}
+
+    regressions, improvements, n_common = compare(base, new, args.threshold)
+    if not n_common:
+        return soft("no measured rows in common")
+
+    print(f"bench-compare: {n_common} measured rows in common, "
+          f"threshold +{args.threshold:.0%}")
+    for name, b, n, ratio in improvements:
+        print(f"  improved  {name}: {b:.1f} -> {n:.1f} us ({ratio:.2f}x)")
+    for name, b, n, ratio in regressions:
+        print(f"  REGRESSED {name}: {b:.1f} -> {n:.1f} us ({ratio:.2f}x)")
+    if regressions:
+        print(f"bench-compare: FAIL — {len(regressions)} row(s) regressed "
+              f"more than {args.threshold:.0%}")
+        return 1
+    print("bench-compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

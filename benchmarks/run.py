@@ -169,6 +169,37 @@ def bench_fft_wallclock():
 
 
 # ---------------------------------------------------------------------------
+# Measured: distributed 3D FFT per TransposeEngine (the engine axis of the
+# plan space — fft_overlap_ring rows are the perf trajectory of the fused
+# compute/communication ring vs the serial fabrics)
+# ---------------------------------------------------------------------------
+
+def bench_fft_engines(n: int = 16):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core.comm import ENGINE_NAMES
+    from repro.core.fft3d import make_fft3d
+
+    ndev = len(jax.devices())
+    pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    rng = np.random.RandomState(0)
+    xr = jnp.asarray(rng.randn(n, n, n).astype(np.float32))
+    xi = jnp.zeros_like(xr)
+    for engine in ENGINE_NAMES:
+        fwd, inv, plan = make_fft3d(mesh, (n, n, n), comm_engine=engine)
+        cfg = {"comm_engine": engine, "net": plan.net, "n": n,
+               "mesh": f"{pu}x{pv}", "backend": plan.backend}
+        us = _time(fwd, xr, xi)
+        _row(f"fft_{engine}/N{n}/mesh{pu}x{pv}/fwd", us, "", config=cfg)
+        kr, ki = fwd(xr, xi)
+        us = _time(inv, kr, ki)
+        _row(f"fft_{engine}/N{n}/mesh{pu}x{pv}/inv", us, "", config=cfg)
+
+
+# ---------------------------------------------------------------------------
 # Measured: autotuned vs default 3D-FFT plan (single device, Pu=Pv=1)
 # ---------------------------------------------------------------------------
 
@@ -198,6 +229,7 @@ BENCHES = {
     "network_bw": bench_network_bw,
     "fig_1_1": bench_fig_1_1,
     "fft_wallclock": bench_fft_wallclock,
+    "fft_engines": bench_fft_engines,
     "fft_autotune": bench_fft_autotune,
 }
 
@@ -220,6 +252,7 @@ def main() -> None:
                          {"jax": jax.__version__,
                           "platform": jax.devices()[0].platform,
                           "device_kind": jax.devices()[0].device_kind,
+                          "devices": len(jax.devices()),
                           "benches": names})
 
 

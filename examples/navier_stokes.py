@@ -32,8 +32,10 @@ from repro.core.fft3d import FFT3DPlan, fft3d_vector_local, ifft3d_vector_local
 def make_step(mesh, n, nu, dt, chunks=2, plan_cfg=None, vector_mode="streaming"):
     grid = PencilGrid.from_mesh(mesh)
     cfg = dict(schedule="pipelined", chunks=chunks, backend="jnp",
-               net="switched", r2c_packed=False)
+               comm_engine="switched", r2c_packed=False)
     if plan_cfg:
+        from repro.tuning.space import normalize_config
+        plan_cfg = normalize_config(plan_cfg)
         cfg.update({k: plan_cfg[k] for k in cfg if k in plan_cfg})
         vector_mode = plan_cfg.get("vector_mode", vector_mode)
     plan = FFT3DPlan(n=(n, n, n), grid=grid, real=True, **cfg)

@@ -1,0 +1,291 @@
+"""TransposeEngine — pluggable fold-communication layer (paper §4.2–4.3).
+
+The paper's central architectural claim is that the fold communications
+(hardware tasks C and G) must be *pipelined against* the butterfly engines,
+not barriered between phases (Fig. 4.3): the NIC streams blocks while the
+FFT engines keep computing. This module makes that scheduling decision a
+first-class, pluggable object with three implementations:
+
+* ``SwitchedEngine``    — one ``lax.all_to_all`` per fold (the 2D switched
+  fabric of Fig. 5.10, Eq. 5.5). Overlap across ``chunks`` slabs is left to
+  XLA's latency-hiding scheduler.
+* ``TorusEngine``       — P−1 ``lax.ppermute`` ring rounds per fold (the 2D
+  torus of Fig. 5.9, Eq. 5.6), same slab-level scheduling as switched.
+* ``OverlapRingEngine`` — fuses the 1D FFT *into* the ring: while each of
+  the P−1 ppermute rounds ships one block, another block's butterflies are
+  emitted between the rounds, so compute and ``lax.ppermute`` interleave at
+  block granularity instead of phase granularity — the TPU rendition of the
+  paper's task C/G ↔ engine overlap.
+
+Engines expose two surfaces:
+
+* **relayout primitives** ``fold_xy / unfold_xy / fold_yz / unfold_yz`` —
+  pure data movement over the shared block-exchange primitives of
+  ``core.transpose``; every engine computes the identical relayout, and
+  ``unfold ∘ fold`` is the identity (property-tested).
+* **the scheduling contract** ``fold_phase / unfold_phase`` — a full FFT
+  phase (butterflies then fold, or unfold then butterflies) that the engine
+  is free to chunk, stream, or fuse. ``fft3d_local``/``ifft3d_local`` are
+  written against this contract only; the old ``_run_chunked`` slab loop
+  lives here as the base engine's schedule.
+
+All engine methods run *inside* ``shard_map`` over the FFT mesh axes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import transpose as tr
+
+
+# ---------------------------------------------------------------------------
+# slab scheduling (the paper's Fig. 4.2/4.3 chunking, ex fft3d._run_chunked)
+# ---------------------------------------------------------------------------
+
+def run_chunked(fn, arrs, axis: int, chunks: int):
+    """Apply ``fn`` per slab along ``axis`` (same axis in/out), concat results.
+
+    Emitting independent per-slab chains is what lets XLA overlap slab i's
+    collective with slab i+1's compute (paper Fig. 4.3 timeline).
+    """
+    if chunks == 1:
+        return fn(*arrs)
+    axis = axis % arrs[0].ndim
+    size = arrs[0].shape[axis]
+    c = min(chunks, size)
+    while size % c:
+        c -= 1
+    outs = []
+    step = size // c
+    for i in range(c):
+        sl = [jax.lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis)
+              for a in arrs]
+        outs.append(fn(*sl))
+    if isinstance(outs[0], tuple):
+        return tuple(jnp.concatenate([o[j] for o in outs], axis=axis)
+                     for j in range(len(outs[0])))
+    return jnp.concatenate(outs, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+ENGINES: dict[str, type] = {}
+
+
+def _register(cls):
+    ENGINES[cls.name] = cls
+    return cls
+
+
+def make_engine(name: str, grid, chunks: int = 1) -> "TransposeEngine":
+    """Instantiate a registered engine for a ``PencilGrid``."""
+    try:
+        cls = ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown comm engine {name!r}; have {sorted(ENGINES)}") from None
+    return cls(grid, chunks=chunks)
+
+
+def engine_fabric(name: str) -> str:
+    """The §5.5 network fabric an engine needs sizing for."""
+    try:
+        return ENGINES[name].fabric
+    except KeyError:
+        raise ValueError(
+            f"unknown comm engine {name!r}; have {sorted(ENGINES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# base engine: phase = compute + fold, scheduled at slab granularity
+# ---------------------------------------------------------------------------
+
+class TransposeEngine:
+    """Interface + slab-granular base schedule shared by switched/torus."""
+
+    name = "base"
+    mode = "switched"    # wire format of the shared block-exchange primitives
+    fabric = "switched"  # §5.5 network the engine maps onto
+
+    def __init__(self, grid, chunks: int = 1):
+        self.grid = grid
+        self.chunks = max(int(chunks), 1)
+
+    # ---- relayout primitives (pure data movement) ------------------------
+    def fold_xy(self, a):
+        return tr.xy_fold(a, self.grid.u_axes, mode=self.mode)
+
+    def unfold_xy(self, a):
+        return tr.xy_unfold(a, self.grid.u_axes, mode=self.mode)
+
+    def fold_yz(self, a):
+        return tr.yz_fold(a, self.grid.v_axes, mode=self.mode)
+
+    def unfold_yz(self, a):
+        return tr.yz_unfold(a, self.grid.v_axes, mode=self.mode)
+
+    def fold(self, which: str, a):
+        return self.fold_xy(a) if which == "xy" else self.fold_yz(a)
+
+    def unfold(self, which: str, a):
+        return self.unfold_xy(a) if which == "xy" else self.unfold_yz(a)
+
+    def _axes(self, which: str):
+        return self.grid.u_axes if which == "xy" else self.grid.v_axes
+
+    def _ranks(self, which: str) -> int:
+        return self.grid.pu if which == "xy" else self.grid.pv
+
+    # ---- scheduling contract ---------------------------------------------
+    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        """Forward phase: butterflies (``compute``) then the ``fold`` relayout.
+
+        ``compute(*slab) -> tuple`` runs the 1D FFT of the phase; ``slab_axis``
+        is a local axis untouched by the fold, along which the engine may
+        slice the volume without changing the result.
+        """
+        def phase(*sl):
+            return tuple(self.fold(fold, o) for o in compute(*sl))
+        return run_chunked(phase, arrs, axis=slab_axis, chunks=self.chunks)
+
+    def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        """Inverse phase: the ``unfold`` relayout then butterflies."""
+        def phase(*sl):
+            return compute(*(self.unfold(fold, a) for a in sl))
+        return run_chunked(phase, arrs, axis=slab_axis, chunks=self.chunks)
+
+
+@_register
+class SwitchedEngine(TransposeEngine):
+    """Single ``lax.all_to_all`` per fold — Fig. 5.10 / Eq. 5.5."""
+
+    name = "switched"
+    mode = "switched"
+    fabric = "switched"
+
+
+@_register
+class TorusEngine(TransposeEngine):
+    """P−1 ``lax.ppermute`` ring rounds per fold — Fig. 5.9 / Eq. 5.6."""
+
+    name = "torus"
+    mode = "torus"
+    fabric = "torus"
+
+
+# ---------------------------------------------------------------------------
+# overlap ring: the ring with butterflies emitted between its rounds
+# ---------------------------------------------------------------------------
+
+# (split_axis, concat_axis, post-transpose) of each fold's block exchange,
+# as offsets from ndim — mirrors transpose.xy_fold / yz_fold exactly.
+_FOLD_GEOM = {"xy": (-1, -3, tr._swap_last3), "yz": (-1, -2, tr._swap_last2)}
+# (pre-transpose, split_axis, concat_axis) of each unfold
+_UNFOLD_GEOM = {"xy": (tr._swap_last3, -3, -1), "yz": (tr._swap_last2, -2, -1)}
+
+
+def _ring_pair(axes, ar, ai, *, split_axis: int, concat_axis: int,
+               interleave=None):
+    """Tiled ring all-to-all of a planar (re, im) pair with fused compute.
+
+    A thin wrapper over ``transpose.ring_exchange`` — the exact primitive the
+    plain torus fold uses, so the overlapped ring's relayout is the other
+    engines' by construction. ``interleave()`` is the fused butterfly work
+    (see ``ring_exchange``). Returns ``((re, im), interleave_result)``.
+    """
+    outs, follow = tr.ring_exchange((ar, ai), axes, split_axis=split_axis,
+                                    concat_axis=concat_axis,
+                                    interleave=interleave)
+    return (outs[0], outs[1]), follow
+
+
+@_register
+class OverlapRingEngine(TorusEngine):
+    """The ring with the 1D FFT fused into it (paper Fig. 4.3, tasks C/G).
+
+    Forward: the local volume is cut into slabs along ``slab_axis`` (one per
+    ring rank by default, so compute granularity matches block granularity);
+    slab i+1's butterflies are emitted between slab i's ppermute rounds.
+    Inverse: slab i−1's butterflies (on blocks already received) run between
+    slab i's rounds — "ship one block while the previously-received block's
+    butterflies run". The relayout itself is the TorusEngine ring, so results
+    match the other engines' (same blocks, same order).
+    """
+
+    name = "overlap_ring"
+    mode = "torus"
+    fabric = "torus"
+
+    def _n_slabs(self, size: int, ranks: int) -> int:
+        ns = self.chunks if self.chunks > 1 else max(ranks, 2)
+        ns = min(ns, size)
+        while size % ns:
+            ns -= 1
+        return max(ns, 1)
+
+    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        p = self._ranks(fold)
+        if p <= 1:  # fold never communicates — nothing to overlap
+            return super().fold_phase(compute, arrs, fold=fold,
+                                      slab_axis=slab_axis)
+        axis = slab_axis % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        ns = self._n_slabs(size, p)
+        step = size // ns
+        split_off, concat_off, post = _FOLD_GEOM[fold]
+        axes = self._axes(fold)
+
+        def slab(i):
+            return tuple(lax.slice_in_dim(a, i * step, (i + 1) * step,
+                                          axis=axis) for a in arrs)
+
+        cur = compute(*slab(0))
+        outs = []
+        for i in range(ns):
+            nxt = (lambda j=i + 1: compute(*slab(j))) if i + 1 < ns else None
+            d = cur[0].ndim
+            (fr, fi), follow = _ring_pair(
+                axes, cur[0], cur[1], split_axis=d + split_off,
+                concat_axis=d + concat_off, interleave=nxt)
+            outs.append((post(fr), post(fi)))
+            cur = follow
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(2))
+
+    def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        p = self._ranks(fold)
+        if p <= 1:
+            return super().unfold_phase(compute, arrs, fold=fold,
+                                        slab_axis=slab_axis)
+        axis = slab_axis % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        ns = self._n_slabs(size, p)
+        step = size // ns
+        pre, split_off, concat_off = _UNFOLD_GEOM[fold]
+        axes = self._axes(fold)
+
+        outs = []
+        prev = None
+        for i in range(ns):
+            sl = [lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis)
+                  for a in arrs]
+            br, bi = pre(sl[0]), pre(sl[1])
+            d = br.ndim
+            thunk = (lambda c=prev: compute(*c)) if prev is not None else None
+            (ur, ui), done = _ring_pair(
+                axes, br, bi, split_axis=d + split_off,
+                concat_axis=d + concat_off, interleave=thunk)
+            if done is not None:
+                outs.append(done)
+            prev = (ur, ui)
+        outs.append(compute(*prev))
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(len(outs[0])))
+
+
+ENGINE_NAMES = tuple(ENGINES)  # ("switched", "torus", "overlap_ring")

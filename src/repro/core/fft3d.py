@@ -15,8 +15,12 @@ FFT → Y↔Z fold → local Z FFT, with the task-organization models of Chapter
   processed either simultaneously (leading component axis, ~μ× live memory;
   §4.4.1) or as a per-dimension stream (unrolled loop, §4.4.2/Fig. 4.6).
 
-Network model: ``net="switched"`` (single all-to-all, Fig. 5.10) or
-``net="torus"`` (ppermute ring, Fig. 5.9) — see ``core.transpose``.
+Communication: every fold phase goes through a pluggable **TransposeEngine**
+(``core.comm``): ``comm_engine="switched"`` (single all-to-all, Fig. 5.10),
+``"torus"`` (ppermute ring, Fig. 5.9) or ``"overlap_ring"`` (the ring with
+the 1D FFT fused between its rounds — block-granular compute/communication
+overlap, the paper's task C/G ↔ engine pipelining of Fig. 4.3). ``net`` is
+the derived §5.5 fabric ("switched" | "torus") the chosen engine runs on.
 
 Real-to-complex: the X phase uses the general complex engine on real input
 and keeps N/2+1 bins (padded to a Pu-divisible length), exactly the paper's
@@ -38,8 +42,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro.core import comm
 from repro.core.decomposition import PencilGrid
-from repro.core import transpose as tr
 from repro.kernels import ops as kops
 
 Schedule = Literal["sequential", "pipelined"]
@@ -54,14 +58,25 @@ class FFT3DPlan:
     backend: str = "jnp"             # "pallas" | "ref" | "jnp"
     schedule: Schedule = "sequential"
     chunks: int = 1                  # pipelined slab count (1 = sequential)
-    net: str = "switched"            # "switched" | "torus"
+    net: str = "switched"            # fabric: "switched" | "torus" (derived)
     r2c_packed: bool = False         # beyond-paper packed real FFT
+    comm_engine: str = ""            # "" -> engine named by ``net``
 
     def __post_init__(self):
         self.grid.validate(self.n)
         if self.schedule == "sequential":
             object.__setattr__(self, "chunks", 1)
         assert self.chunks >= 1
+        engine = self.comm_engine or self.net
+        if engine not in comm.ENGINES:
+            raise ValueError(f"unknown comm_engine {engine!r}; "
+                             f"have {sorted(comm.ENGINES)}")
+        object.__setattr__(self, "comm_engine", engine)
+        object.__setattr__(self, "net", comm.engine_fabric(engine))
+
+    def engine(self) -> comm.TransposeEngine:
+        """The TransposeEngine instance scheduling this plan's fold phases."""
+        return comm.make_engine(self.comm_engine, self.grid, chunks=self.chunks)
 
     @property
     def kx(self) -> int:
@@ -71,33 +86,6 @@ class FFT3DPlan:
     @property
     def kx_keep(self) -> int:
         return self.n[0] // 2 + 1 if self.real else self.n[0]
-
-
-# ---------------------------------------------------------------------------
-# chunked phase runner
-# ---------------------------------------------------------------------------
-
-def _run_chunked(fn, arrs, axis: int, chunks: int):
-    """Apply ``fn`` per slab along ``axis`` (same axis in/out), concat results.
-
-    Emitting independent per-slab chains is what lets XLA overlap slab i's
-    collective with slab i+1's compute (paper Fig. 4.3 timeline).
-    """
-    if chunks == 1:
-        return fn(*arrs)
-    size = arrs[0].shape[axis]
-    c = min(chunks, size)
-    while size % c:
-        c -= 1
-    outs = []
-    step = size // c
-    for i in range(c):
-        sl = [jax.lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis) for a in arrs]
-        outs.append(fn(*sl))
-    if isinstance(outs[0], tuple):
-        return tuple(jnp.concatenate([o[j] for o in outs], axis=axis)
-                     for j in range(len(outs[0])))
-    return jnp.concatenate(outs, axis=axis)
 
 
 def _fftx(plan, xr, xi):
@@ -129,25 +117,21 @@ def fft3d_local(plan: FFT3DPlan, xr, xi=None):
     In : X-pencil ``(..., Ny/Pu, Nz/Pv, Nx)`` (xi may be None for real input)
     Out: Z-pencil ``(..., Kx/Pu, Ny/Pv, Nz)`` planar complex, natural order.
     """
-    g, net = plan.grid, plan.net
+    eng = plan.engine()
     if xi is None:
         xi = jnp.zeros_like(xr)
 
-    # Phase X + X↔Y fold (hardware tasks A–D), slabbed along local z (axis -2)
-    def phase_x(cr, ci):
-        yr, yi = _fftx(plan, cr, ci)
-        return (tr.xy_fold(yr, g.u_axes, mode=net),
-                tr.xy_fold(yi, g.u_axes, mode=net))
+    # Phase X + X↔Y fold (hardware tasks A–D), slabbable along local z (-2)
+    def butterflies_x(cr, ci):
+        return _fftx(plan, cr, ci)
 
-    yr, yi = _run_chunked(phase_x, (xr, xi), axis=xr.ndim - 2, chunks=plan.chunks)
+    yr, yi = eng.fold_phase(butterflies_x, (xr, xi), fold="xy", slab_axis=-2)
 
-    # Phase Y + Y↔Z fold (tasks E–H), slabbed along local kx (axis -3)
-    def phase_y(cr, ci):
-        zr, zi = kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
-        return (tr.yz_fold(zr, g.v_axes, mode=net),
-                tr.yz_fold(zi, g.v_axes, mode=net))
+    # Phase Y + Y↔Z fold (tasks E–H), slabbable along local kx (-3)
+    def butterflies_y(cr, ci):
+        return kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
 
-    yr, yi = _run_chunked(phase_y, (yr, yi), axis=yr.ndim - 3, chunks=plan.chunks)
+    yr, yi = eng.fold_phase(butterflies_y, (yr, yi), fold="yz", slab_axis=-3)
 
     # Phase Z (tasks I–K)
     return kops.fft1d(yr, yi, axis=-1, backend=plan.backend)
@@ -158,24 +142,22 @@ def ifft3d_local(plan: FFT3DPlan, kr, ki):
 
     Returns real array if ``plan.real`` else a planar (re, im) pair.
     """
-    g, net = plan.grid, plan.net
+    eng = plan.engine()
     yr, yi = kops.fft1d(kr, ki, axis=-1, backend=plan.backend, inverse=True)
 
-    def phase_y_inv(cr, ci):
-        ur = tr.yz_unfold(cr, g.v_axes, mode=net)
-        ui = tr.yz_unfold(ci, g.v_axes, mode=net)
+    def butterflies_y_inv(ur, ui):
         return kops.fft1d(ur, ui, axis=-1, backend=plan.backend, inverse=True)
 
-    yr, yi = _run_chunked(phase_y_inv, (yr, yi), axis=yr.ndim - 3, chunks=plan.chunks)
+    yr, yi = eng.unfold_phase(butterflies_y_inv, (yr, yi), fold="yz",
+                              slab_axis=-3)
 
-    def phase_x_inv(cr, ci):
-        ur = tr.xy_unfold(cr, g.u_axes, mode=net)
-        ui = tr.xy_unfold(ci, g.u_axes, mode=net)
+    def butterflies_x_inv(ur, ui):
         if plan.real:
             return (_ifftx(plan, ur, ui),)
         return _ifftx(plan, ur, ui)
 
-    out = _run_chunked(phase_x_inv, (yr, yi), axis=yr.ndim - 2, chunks=plan.chunks)
+    out = eng.unfold_phase(butterflies_x_inv, (yr, yi), fold="xy",
+                           slab_axis=-2)
     if plan.real:
         return out[0] if isinstance(out, tuple) and len(out) == 1 else out
     return out
@@ -217,6 +199,7 @@ def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
                schedule: Schedule = "sequential", chunks: int = 1,
                net: str = "switched", components: int = 0,
                vector_mode: VectorMode = "streaming", r2c_packed: bool = False,
+               comm_engine: str = "",
                autotune: bool = False, tune_kwargs: dict | None = None):
     """Build jitted (forward, inverse, plan) over globally-sharded arrays.
 
@@ -224,26 +207,33 @@ def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
     (plus a leading component axis if ``components``); output Z-pencil
     ``(Kx, Ny, Nz)`` sharded the same way.
 
-    ``autotune=True`` ignores the explicit ``backend/schedule/chunks/net/
-    vector_mode/r2c_packed`` arguments and instead sweeps the plan space for
-    this ``(n, mesh, real, components)`` problem (see ``repro.tuning``),
-    reusing the persistent plan cache when a prior run already timed it.
-    ``tune_kwargs`` forwards extra options to ``repro.tuning.autotune``
-    (``cache_path``, ``max_candidates``, ``iters``, ...).
+    ``comm_engine`` selects the TransposeEngine scheduling the fold phases
+    (``"switched"``/``"torus"``/``"overlap_ring"``); when empty, the engine
+    named by the legacy ``net`` knob is used.
+
+    ``autotune=True`` ignores the explicit ``backend/schedule/chunks/
+    comm_engine/vector_mode/r2c_packed`` arguments and instead sweeps the
+    plan space for this ``(n, mesh, real, components)`` problem (see
+    ``repro.tuning``), reusing the persistent plan cache when a prior run
+    already timed it. ``tune_kwargs`` forwards extra options to
+    ``repro.tuning.autotune`` (``cache_path``, ``max_candidates``,
+    ``iters``, ``fwd_weight``, ``inv_weight``, ...).
     """
+    n = (n, n, n) if isinstance(n, int) else tuple(n)
     if autotune:
         from repro.tuning import autotune as _autotune
+        from repro.tuning.space import Candidate
         result = _autotune(mesh, n, real=real, components=components,
                            u_axes=u_axes, v_axes=v_axes,
                            **(tune_kwargs or {}))
-        cfg = result.best_config
-        backend, schedule = cfg["backend"], cfg["schedule"]
-        chunks, net = cfg["chunks"], cfg["net"]
-        vector_mode, r2c_packed = cfg["vector_mode"], cfg["r2c_packed"]
+        best = Candidate.from_config(result.best_config)  # legacy-net aware
+        backend, schedule = best.backend, best.schedule
+        chunks, comm_engine = best.chunks, best.comm_engine
+        vector_mode, r2c_packed = best.vector_mode, best.r2c_packed
     grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
-    plan = FFT3DPlan(n=tuple(n), grid=grid, real=real, backend=backend,
+    plan = FFT3DPlan(n=n, grid=grid, real=real, backend=backend,
                      schedule=schedule, chunks=chunks, net=net,
-                     r2c_packed=r2c_packed)
+                     r2c_packed=r2c_packed, comm_engine=comm_engine)
     base = grid.pencil_spec()
     spec = P(*((None,) + tuple(base))) if components else base
 

@@ -223,9 +223,16 @@ def table_5_7(mu: int = 1, r: int = 4, k: int = 1, f_hz: float = 180e6):
 BACKEND_COMPUTE_WEIGHT = {"jnp": 1.0, "mxu": 3.0, "ref": 10.0, "pallas": 30.0}
 
 
+#: Which §5.5 fabric each TransposeEngine's traffic is priced on (kept in
+#: sync with ``core.comm`` — validated by tests to avoid a jax import here).
+ENGINE_FABRIC = {"switched": "switched", "torus": "torus",
+                 "overlap_ring": "torus"}
+
+
 def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
                           schedule: str = "sequential", chunks: int = 1,
-                          net: str = "switched", mu: int = 1,
+                          net: str = "switched", comm_engine: str = "",
+                          mu: int = 1,
                           r2c_packed: bool = False, r: int = 4,
                           f_hz: float = 180e6,
                           link_bytes_per_s: float = 25e9,
@@ -237,10 +244,22 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     pipelined, as tabulated in §5.6), the per-fold traffic is V′ of Eq. 3.4,
     and the torus penalty is the Eq. 5.5/5.6 required-bandwidth ratio
     (B_torus/B_switched = √P/2 → ×q/2 time per fold over a q-rank dimension).
-    Absolute numbers are nominal-FPGA seconds; the autotuner only uses the
-    *ordering* to prune the sweep.
+
+    ``comm_engine`` makes the estimate overlap-aware: serial engines
+    (``switched``/``torus``) pay compute + communication back-to-back per
+    phase (only the ``pipelined`` schedule's slab overlap helps them), while
+    ``overlap_ring`` interleaves butterflies with every ppermute round, so
+    the longer of the two streams dominates — ``max(T_comp, T_net)`` plus a
+    pipeline-fill term that shrinks with the ring-round count (the Fig. 4.3
+    steady-state timeline). Absolute numbers are nominal-FPGA seconds; the
+    autotuner only uses the *ordering* to prune the sweep.
     """
     nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
+    engine = comm_engine or net
+    if engine not in ENGINE_FABRIC:
+        raise ValueError(f"unknown comm engine {engine!r}; "
+                         f"have {sorted(ENGINE_FABRIC)}")
+    fabric = ENGINE_FABRIC[engine]
     p = max(pu, 1) * max(pv, 1)
     mu = max(mu, 1)
     vol = nx * ny * nz
@@ -262,11 +281,22 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
         if q <= 1:
             return 0.0
         t = v_prime * (q - 1) / q / link_bytes_per_s
-        if net == "torus":
+        if fabric == "torus":
             t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
         return t
 
     t_net = fold_seconds(pu) + fold_seconds(pv)
+    if engine == "overlap_ring" and (pu > 1 or pv > 1):
+        # block-granular overlap: every ppermute round's latency hides under
+        # another block's butterflies (Fig. 4.3), so the longer stream
+        # dominates and only a pipeline-fill fraction of the shorter one
+        # remains exposed. The engine cuts each fold into one slab per ring
+        # rank (or ``chunks``), so the fill shrinks with the total slab
+        # count — and the estimate can never exceed the serial sum, since
+        # overlapping identical work cannot be slower. On a 1×1 grid nothing
+        # communicates and the engine degenerates to the serial forms below.
+        slabs = max(max(pu, 1) + max(pv, 1), k, 2)
+        return max(t_comp, t_net) + min(t_comp, t_net) / slabs
     if schedule == "pipelined":
         # slab i+1's butterflies run under slab i's fold (Fig. 4.3): the
         # longer of the two streams dominates, plus a 1/k pipeline-fill term.

@@ -16,6 +16,12 @@ from repro.core import perfmodel as pm
 LINK_CAPS_GBPS = (100.0, 200.0, 400.0)      # thesis reference lines
 FREQS_MHZ = (180.0, 250.0, 380.0)           # slow / standard / very fast engine
 
+#: TransposeEngine → fabric it must be sized for: the switched engine needs
+#: the full-bisection row/column switches of Fig. 5.10; both ring engines
+#: (plain torus and the compute-overlapped ring) ride the 2D torus links of
+#: Fig. 5.9 — overlap changes *when* blocks move, not how many links exist.
+ENGINE_FABRIC = pm.ENGINE_FABRIC
+
 
 @dataclasses.dataclass(frozen=True)
 class NetworkPlan:
@@ -24,6 +30,17 @@ class NetworkPlan:
     p: int
     r: int
     f_mhz: float
+
+    @classmethod
+    def for_engine(cls, engine: str, p: int, r: int,
+                   f_mhz: float) -> "NetworkPlan":
+        """Fabric sizing for a ``core.comm`` TransposeEngine choice."""
+        try:
+            topo = ENGINE_FABRIC[engine]
+        except KeyError:
+            raise ValueError(f"unknown comm engine {engine!r}; "
+                             f"have {sorted(ENGINE_FABRIC)}") from None
+        return cls(topology=topo, p=p, r=r, f_mhz=f_mhz)
 
     @property
     def nics_per_node(self) -> int:

@@ -10,7 +10,9 @@ Two network models, mirroring §5.5:
   collective-permute is routed over r ICI hops, reproducing the multi-hop
   degradation of Eq. 5.6 / Fig. 5.12 (APEnet-style DOR routing).
 
-All functions run *inside* ``shard_map`` over the FFT mesh axes.
+All functions run *inside* ``shard_map`` over the FFT mesh axes. This module
+is the shared block-exchange layer; scheduling (chunking, compute overlap)
+belongs to the TransposeEngine implementations in ``core.comm``.
 """
 
 from __future__ import annotations
@@ -45,32 +47,63 @@ def all_to_all_blocks(x, axes: tuple[str, ...], *, split_axis: int,
                             concat_axis=concat_axis)
 
 
-def _ring_all_to_all(x, axes, *, split_axis: int, concat_axis: int):
-    """P−1 ppermute rounds; round r ships the block for rank (me+r) mod P."""
+def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
+                  interleave=None):
+    """P−1 ppermute rounds over same-shaped ``arrs``; round r ships the block
+    for rank (me+r) mod P. The single ring primitive every ring engine shares
+    (``torus`` and ``overlap_ring`` in ``core.comm`` — one implementation, so
+    their relayouts cannot drift apart).
+
+    ``interleave()`` — compute that is data-independent of the in-flight
+    blocks — is emitted right after the first round's sends, so XLA's
+    scheduler can run it underneath the remaining P−2 rounds (the
+    block-granular overlap of paper Fig. 4.3). Returns
+    ``(outs, interleave_result)``; the result is None when no callback ran.
+    """
     p = _axis_size(axes)
     me = _flat_axis_index(axes)
-    n = x.shape[split_axis]
-    assert n % p == 0, (n, p)
-    blk = n // p
-    # stack blocks on a fresh leading axis: (P, ..., blk, ...)
-    xs = x.reshape(x.shape[:split_axis] + (p, blk) + x.shape[split_axis + 1:])
-    xs = jnp.moveaxis(xs, split_axis, 0)
-    out = jnp.zeros_like(xs)
-    # own block stays local
-    own = lax.dynamic_index_in_dim(xs, me, axis=0, keepdims=True)
-    out = lax.dynamic_update_index_in_dim(out, own, me, axis=0)
     name = axes if len(axes) > 1 else axes[0]
+
+    def blocks(x):
+        n = x.shape[split_axis]
+        assert n % p == 0, (n, p)
+        # stack blocks on a fresh leading axis: (P, ..., blk, ...)
+        xs = x.reshape(x.shape[:split_axis] + (p, n // p)
+                       + x.shape[split_axis + 1:])
+        return jnp.moveaxis(xs, split_axis, 0)
+
+    xss = [blocks(x) for x in arrs]
+    # own block stays local
+    outs = [lax.dynamic_update_index_in_dim(
+        jnp.zeros_like(xs),
+        lax.dynamic_index_in_dim(xs, me, axis=0, keepdims=True), me, axis=0)
+        for xs in xss]
+    follow = None
     for r in range(1, p):
-        send = lax.dynamic_index_in_dim(xs, (me + r) % p, axis=0, keepdims=True)
         perm = [(i, (i + r) % p) for i in range(p)]
-        recv = lax.ppermute(send, name, perm)
-        out = lax.dynamic_update_index_in_dim(out, recv, (me - r) % p, axis=0)
-    out = jnp.moveaxis(out, 0, concat_axis)
-    # merge the rank axis with the original concat dim (rank-major block order,
-    # matching tiled all_to_all semantics)
-    return out.reshape(out.shape[:concat_axis]
-                       + (p * out.shape[concat_axis + 1],)
-                       + out.shape[concat_axis + 2:])
+        recvs = [lax.ppermute(
+            lax.dynamic_index_in_dim(xs, (me + r) % p, axis=0, keepdims=True),
+            name, perm) for xs in xss]
+        if follow is None and interleave is not None:
+            follow = interleave()
+        outs = [lax.dynamic_update_index_in_dim(o, recv, (me - r) % p, axis=0)
+                for o, recv in zip(outs, recvs)]
+
+    def merge(o):
+        o = jnp.moveaxis(o, 0, concat_axis)
+        # merge the rank axis with the original concat dim (rank-major block
+        # order, matching tiled all_to_all semantics)
+        return o.reshape(o.shape[:concat_axis]
+                         + (p * o.shape[concat_axis + 1],)
+                         + o.shape[concat_axis + 2:])
+
+    return [merge(o) for o in outs], follow
+
+
+def _ring_all_to_all(x, axes, *, split_axis: int, concat_axis: int):
+    outs, _ = ring_exchange((x,), axes, split_axis=split_axis,
+                            concat_axis=concat_axis)
+    return outs[0]
 
 
 # ---------------------------------------------------------------------------

@@ -66,10 +66,17 @@ def rfft1d(x, *, axis: int = -1, backend: str = "pallas", packed: bool = False):
 
     ``packed=True`` enables the beyond-paper even/odd packing (one N/2-point
     complex FFT instead of an N-point one). The faithful default mirrors the
-    thesis: run the general complex engine on (x, 0).
+    thesis: run the general complex engine on (x, 0). Packing requires an
+    even length — the even/odd split assumes ``n % 2 == 0``; odd lengths
+    raise at trace time rather than silently mangling the spectrum.
     """
     xr = _move_last(x, axis)
     n = xr.shape[-1]
+    if packed and n % 2:
+        raise ValueError(
+            f"rfft1d(packed=True) requires an even transform length (the "
+            f"even/odd packing splits n into two n/2 streams), got n={n}; "
+            f"use packed=False for odd lengths")
     if packed:
         yr, yi = _ref.rfft_packed_planar(xr) if backend != "pallas" else _rfft_packed_pallas(xr)
     else:

@@ -177,7 +177,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
 
 def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
                  schedule: str = "pipelined", chunks: int = 4,
-                 net: str = "switched", r2c_packed: bool = False,
+                 net: str = "switched", comm_engine: str = "",
+                 r2c_packed: bool = False,
                  backend: str = "jnp", tag: str = "") -> dict:
     """Dry-run the paper's own workload: N³ real 3D FFT on the production
     mesh (pencil grid = (pod·data, model))."""
@@ -186,7 +187,7 @@ def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
     from repro.core.fft3d import make_fft3d
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
-    rec = {"arch": f"fft{n}{tag}", "shape": f"{schedule}_{net}"
+    rec = {"arch": f"fft{n}{tag}", "shape": f"{schedule}_{comm_engine or net}"
            + ("_packed" if r2c_packed else ""),
            "mesh": mesh_name, "chips": 512 if multi_pod else 256}
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -197,7 +198,7 @@ def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
             fwd, inv, plan = make_fft3d(
                 mesh, (n, n, n), u_axes=u_axes, v_axes=("model",), real=True,
                 backend=backend, schedule=schedule, chunks=chunks, net=net,
-                r2c_packed=r2c_packed)
+                comm_engine=comm_engine, r2c_packed=r2c_packed)
             x = jax.ShapeDtypeStruct(
                 (n, n, n), jnp.float32,
                 sharding=plan.grid.sharding(mesh))
@@ -249,6 +250,9 @@ def main():
     ap.add_argument("--fft-n", type=int, default=0)
     ap.add_argument("--fft-schedule", default="pipelined")
     ap.add_argument("--fft-net", default="switched")
+    ap.add_argument("--fft-engine", default="",
+                    help="TransposeEngine (switched/torus/overlap_ring); "
+                         "empty = the engine named by --fft-net")
     ap.add_argument("--fft-chunks", type=int, default=4)
     ap.add_argument("--fft-packed", action="store_true")
     ap.add_argument("--out", default=OUT_DIR)
@@ -265,6 +269,7 @@ def main():
                 rec = run_fft_cell(n, mp, args.out,
                                    schedule=args.fft_schedule,
                                    chunks=args.fft_chunks, net=args.fft_net,
+                                   comm_engine=args.fft_engine,
                                    r2c_packed=args.fft_packed)
                 path = os.path.join(
                     args.out, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")

@@ -1,29 +1,34 @@
 """FFT plan autotuning (paper Ch. 4 + §5.5 as a search problem).
 
 The paper's thesis is that *configuration* — task organization (sequential
-vs. pipelined, Ch. 4), network model (switched vs. torus, §5.5) and vector
-mode (§4.4) — decides end-to-end 3D-FFT time. ``FFT3DPlan`` exposes all of
-those knobs; this package picks them automatically for a concrete
+vs. pipelined, Ch. 4), communication engine (switched all-to-all, torus
+ring, or the compute-overlapped ring of ``core.comm``, §4.3/§5.5) and
+vector mode (§4.4) — decides end-to-end 3D-FFT time. ``FFT3DPlan`` exposes
+all of those knobs; this package picks them automatically for a concrete
 ``(n, mesh, real, components, dtype)`` problem:
 
 1. enumerate the valid plan space        (``space.candidate_space``),
-2. prune it with the paper's analytic model (``perfmodel.estimate_plan_seconds``),
+2. prune it with the paper's analytic model (``perfmodel.estimate_plan_seconds``,
+   overlap-aware for the ``overlap_ring`` engine),
 3. time the survivors with compile/warm-up discipline (``timing.time_us``),
+   scoring ``fwd_weight·t_fwd + inv_weight·t_inv`` (default 1:1 — a
+   spectral solver runs both directions every step),
 4. persist the winner in a JSON plan cache keyed by a canonical problem
-   fingerprint including JAX version and device kind (``cache.PlanCache``),
-   so repeat runs are free.
+   fingerprint including JAX version, device kind, and the objective
+   weights (``cache.PlanCache``), so repeat runs are free.
 
 Entry points: ``autotune(...)``, ``make_fft3d(..., autotune=True)``, and
 ``python -m repro.tuning.cli --n 64 --mesh 4x2``.
 """
 
-from repro.tuning.autotune import TuneResult, autotune, time_candidate
+from repro.tuning.autotune import (TuneResult, autotune, time_candidate,
+                                   time_candidate_pair)
 from repro.tuning.cache import PlanCache, default_cache_path, problem_fingerprint
 from repro.tuning.space import DEFAULT_CANDIDATE, Candidate, candidate_space
 from repro.tuning.timing import time_us
 
 __all__ = [
-    "autotune", "time_candidate", "TuneResult",
+    "autotune", "time_candidate", "time_candidate_pair", "TuneResult",
     "Candidate", "DEFAULT_CANDIDATE", "candidate_space",
     "PlanCache", "default_cache_path", "problem_fingerprint",
     "time_us",

@@ -3,6 +3,11 @@
 ``autotune(mesh, n, ...)`` is the programmatic entry point (used by
 ``make_fft3d(..., autotune=True)``); ``repro.tuning.cli`` wraps it for the
 command line.
+
+The objective is inverse-aware: ``w_fwd·t_fwd + w_inv·t_inv`` (default 1:1 —
+a spectral solver's time step runs both directions, Fig. 3.3). Set
+``inv_weight=0`` to tune the forward transform alone; the weights are part
+of the cache fingerprint, so differently-weighted tunings never collide.
 """
 
 from __future__ import annotations
@@ -23,10 +28,11 @@ from repro.tuning.timing import time_us
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
     best_config: dict          # kwargs subset for make_fft3d / FFT3DPlan
-    best_us: float
+    best_us: float             # weighted objective of the winner (µs)
     cache_hit: bool
     key: str
-    rows: list                 # [{"name", "us_per_call", "config"}] timed sweep
+    rows: list                 # [{"name", "us_per_call", "us_fwd", "us_inv",
+                               #   "config"}] timed sweep
 
     @property
     def best(self) -> Candidate:
@@ -36,48 +42,73 @@ class TuneResult:
 def _estimate(cand: Candidate, n, grid: PencilGrid, components: int) -> float:
     return pm.estimate_plan_seconds(
         n, grid.pu, grid.pv, backend=cand.backend, schedule=cand.schedule,
-        chunks=cand.chunks, net=cand.net, mu=max(components, 1),
-        r2c_packed=cand.r2c_packed)
+        chunks=cand.chunks, comm_engine=cand.comm_engine,
+        mu=max(components, 1), r2c_packed=cand.r2c_packed)
 
 
-def time_candidate(mesh, n, cand: Candidate, *, real: bool = False,
-                   components: int = 0, dtype="float32",
-                   u_axes=("data",), v_axes=("model",), iters: int = 3) -> float:
-    """Measured µs/forward-transform for one candidate (compile excluded)."""
+def time_candidate_pair(mesh, n, cand: Candidate, *, real: bool = False,
+                        components: int = 0, dtype="float32",
+                        u_axes=("data",), v_axes=("model",), iters: int = 3,
+                        time_inverse: bool = True) -> tuple[float, float]:
+    """Measured ``(us_fwd, us_inv)`` for one candidate (compile excluded).
+
+    The plan is built and jitted once; the inverse is timed on the spectral
+    field the forward warm-up already produced (``us_inv = 0.0`` when
+    ``time_inverse`` is off).
+    """
     import jax.numpy as jnp
 
     from repro.core.fft3d import make_fft3d
 
-    fwd, _inv, _plan = make_fft3d(
+    fwd, inv, _plan = make_fft3d(
         mesh, n, u_axes=u_axes, v_axes=v_axes, real=real,
         components=components, backend=cand.backend, schedule=cand.schedule,
-        chunks=cand.chunks, net=cand.net, vector_mode=cand.vector_mode,
-        r2c_packed=cand.r2c_packed)
+        chunks=cand.chunks, comm_engine=cand.comm_engine,
+        vector_mode=cand.vector_mode, r2c_packed=cand.r2c_packed)
     nx, ny, nz = n
     shape = ((components,) if components else ()) + (ny, nz, nx)
     rng = np.random.RandomState(0)
     xr = jnp.asarray(rng.randn(*shape).astype(np.dtype(dtype)))
-    if real:
-        return time_us(fwd, xr, iters=iters)
-    xi = jnp.zeros_like(xr)
-    return time_us(fwd, xr, xi, iters=iters)
+    args = (xr,) if real else (xr, jnp.zeros_like(xr))
+    us_fwd = time_us(fwd, *args, iters=iters)
+    us_inv = 0.0
+    if time_inverse:
+        us_inv = time_us(inv, *fwd(*args), iters=iters)
+    return us_fwd, us_inv
+
+
+def time_candidate(mesh, n, cand: Candidate, *, inverse: bool = False,
+                   **kw) -> float:
+    """Measured µs/transform in one direction (see ``time_candidate_pair``)."""
+    us_fwd, us_inv = time_candidate_pair(mesh, n, cand, time_inverse=inverse,
+                                         **kw)
+    return us_inv if inverse else us_fwd
 
 
 def autotune(mesh, n, *, real: bool = False, components: int = 0,
              dtype="float32", u_axes=("data",), v_axes=("model",),
              cache_path: str | None = None, max_candidates: int = 8,
              iters: int = 3, force: bool = False,
+             fwd_weight: float = 1.0, inv_weight: float = 1.0,
              verbose: bool = False) -> TuneResult:
     """Pick the fastest ``FFT3DPlan`` configuration for this problem.
 
     The sweep is ranked by the paper's analytic model and only the top
     ``max_candidates`` (plus the hardcoded default, which is always timed so
-    the winner is never slower than the status quo) are measured. Results
+    the winner is never slower than the status quo) are measured. Each
+    survivor is scored ``fwd_weight·t_fwd + inv_weight·t_inv`` (µs; the
+    inverse timing is skipped entirely when ``inv_weight == 0``). Results
     persist in the JSON plan cache; a repeat call with the same fingerprint
-    returns without timing anything. ``force=True`` re-times and overwrites.
+    — which includes the weights — returns without timing anything.
+    ``force=True`` re-times and overwrites.
     """
     import jax
 
+    if fwd_weight < 0 or inv_weight < 0 or fwd_weight + inv_weight <= 0:
+        raise ValueError(f"weights must be non-negative and not both zero, "
+                         f"got fwd={fwd_weight} inv={inv_weight}")
+    if iters < 1:  # fail before the sweep, not inside every candidate
+        raise ValueError(f"iters must be >= 1, got {iters}")
     n = (n, n, n) if isinstance(n, int) else tuple(n)
     grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
     grid.validate(n)
@@ -86,7 +117,8 @@ def autotune(mesh, n, *, real: bool = False, components: int = 0,
     dtype = str(jax.dtypes.canonicalize_dtype(np.dtype(dtype)))
     key, problem = problem_fingerprint(
         n, grid.pu, grid.pv, real=real, components=components, dtype=dtype,
-        u_axes=u_axes, v_axes=v_axes)
+        u_axes=u_axes, v_axes=v_axes,
+        fwd_weight=fwd_weight, inv_weight=inv_weight)
     cache = PlanCache(cache_path)
     if not force:
         entry = cache.get(key)
@@ -105,17 +137,21 @@ def autotune(mesh, n, *, real: bool = False, components: int = 0,
     rows = []
     for cand in keep:
         try:
-            us = time_candidate(mesh, n, cand, real=real,
-                                components=components, dtype=dtype,
-                                u_axes=u_axes, v_axes=v_axes, iters=iters)
+            us_fwd, us_inv = time_candidate_pair(
+                mesh, n, cand, real=real, components=components, dtype=dtype,
+                u_axes=u_axes, v_axes=v_axes, iters=iters,
+                time_inverse=inv_weight > 0)
         except Exception as e:  # invalid on this substrate — drop, keep going
             if verbose:
                 print(f"  tune {cand.name}: FAILED ({type(e).__name__}: {e})")
             continue
-        rows.append({"name": cand.name, "us_per_call": round(us, 3),
+        objective = fwd_weight * us_fwd + inv_weight * us_inv
+        rows.append({"name": cand.name, "us_per_call": round(objective, 3),
+                     "us_fwd": round(us_fwd, 3), "us_inv": round(us_inv, 3),
                      "config": cand.config()})
         if verbose:
-            print(f"  tune {cand.name}: {us:.1f} us")
+            print(f"  tune {cand.name}: {objective:.1f} us "
+                  f"(fwd {us_fwd:.1f} + inv {us_inv:.1f})")
     if not rows:
         raise RuntimeError(f"autotune: no candidate ran for problem {key}")
 
@@ -135,8 +171,8 @@ def autotune(mesh, n, *, real: bool = False, components: int = 0,
 
 
 def speedup_vs_default(result: TuneResult) -> float:
-    """Measured default-plan time / best time (≥ 1.0 when the sweep timed
-    the default; ``nan`` on a cache hit whose rows were not stored)."""
+    """Measured default-plan objective / best objective (≥ 1.0 when the sweep
+    timed the default; ``nan`` on a cache hit whose rows were not stored)."""
     for row in result.rows:
         if Candidate.from_config(row["config"]) == DEFAULT_CANDIDATE:
             return row["us_per_call"] / max(result.best_us, 1e-9)

@@ -37,8 +37,15 @@ def default_cache_path() -> str:
 
 def problem_fingerprint(n, pu: int, pv: int, *, real: bool = False,
                         components: int = 0, dtype: str = "float32",
-                        u_axes=("data",), v_axes=("model",)) -> tuple[str, dict]:
-    """(key, payload): canonical id of a tuning problem on this substrate."""
+                        u_axes=("data",), v_axes=("model",),
+                        fwd_weight: float = 1.0,
+                        inv_weight: float = 1.0) -> tuple[str, dict]:
+    """(key, payload): canonical id of a tuning problem on this substrate.
+
+    The objective weights (``w_fwd·t_fwd + w_inv·t_inv``) are part of the
+    fingerprint: a forward-only winner must never be replayed for a solver
+    that pays for both directions.
+    """
     import jax
 
     dev = jax.devices()[0]
@@ -50,6 +57,7 @@ def problem_fingerprint(n, pu: int, pv: int, *, real: bool = False,
         "u_axes": list(u_axes), "v_axes": list(v_axes),
         "real": bool(real), "components": int(components),
         "dtype": str(dtype),
+        "fwd_weight": float(fwd_weight), "inv_weight": float(inv_weight),
         "jax_version": jax.__version__,
         "platform": dev.platform,
         "device_kind": dev.device_kind,

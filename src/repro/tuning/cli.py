@@ -57,6 +57,11 @@ def main(argv=None) -> int:
                     help="μ vector components (0 = scalar field)")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--iters", type=int, default=3, help="timed calls/candidate")
+    ap.add_argument("--fwd-weight", type=float, default=1.0,
+                    help="objective weight of the forward transform time")
+    ap.add_argument("--inv-weight", type=float, default=1.0,
+                    help="objective weight of the inverse transform time "
+                         "(0 = forward-only tuning)")
     ap.add_argument("--max-candidates", type=int, default=8,
                     help="model-pruned sweep size (default plan always added)")
     ap.add_argument("--cache", default=None,
@@ -86,6 +91,7 @@ def main(argv=None) -> int:
     mesh = compat.make_mesh((pu, pv), ("data", "model"))
     print(f"autotune: N={args.n}^3 mesh={pu}x{pv} real={args.real} "
           f"components={args.components} dtype={args.dtype} "
+          f"objective={args.fwd_weight:g}*t_fwd+{args.inv_weight:g}*t_inv "
           f"[{jax.devices()[0].platform}:{len(jax.devices())} devices]",
           flush=True)
     try:
@@ -93,7 +99,9 @@ def main(argv=None) -> int:
                           components=args.components, dtype=args.dtype,
                           cache_path=args.cache,
                           max_candidates=args.max_candidates,
-                          iters=args.iters, force=args.force, verbose=True)
+                          iters=args.iters, force=args.force,
+                          fwd_weight=args.fwd_weight,
+                          inv_weight=args.inv_weight, verbose=True)
     except ValueError as e:  # e.g. N not divisible by the pencil grid
         raise SystemExit(f"invalid problem for mesh {args.mesh}: {e}")
 
@@ -117,6 +125,7 @@ def main(argv=None) -> int:
         meta = {"jax": jax.__version__,
                 "platform": jax.devices()[0].platform,
                 "device_kind": jax.devices()[0].device_kind,
+                "devices": len(jax.devices()),
                 "argv": list(argv) if argv is not None else sys.argv[1:]}
         write_bench_json(args.json_path, rows, meta)
         print(f"wrote {args.json_path} ({len(rows)} rows)")

@@ -4,10 +4,12 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.perfmodel import ENGINE_FABRIC
 from repro.kernels.ref import is_pow2
 
 CHUNK_CHOICES = (2, 4, 8)       # pipelined slab counts (1 = sequential)
 ALL_BACKENDS = ("jnp", "ref", "pallas", "mxu")
+ALL_ENGINES = tuple(ENGINE_FABRIC)  # kept in sync with core.comm.ENGINE_NAMES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,25 +19,46 @@ class Candidate:
     backend: str = "jnp"
     schedule: str = "sequential"
     chunks: int = 1
-    net: str = "switched"
+    comm_engine: str = "switched"
     vector_mode: str = "streaming"
     r2c_packed: bool = False
 
     @property
+    def net(self) -> str:
+        """The §5.5 fabric the engine runs on (legacy knob name)."""
+        return ENGINE_FABRIC[self.comm_engine]
+
+    @property
     def name(self) -> str:
         sched = "seq" if self.schedule == "sequential" else f"pipe{self.chunks}"
-        bits = [self.backend, sched, self.net, self.vector_mode]
+        bits = [self.backend, sched, self.comm_engine, self.vector_mode]
         if self.r2c_packed:
             bits.append("packed")
         return "/".join(bits)
 
     def config(self) -> dict:
-        return dataclasses.asdict(self)
+        cfg = dataclasses.asdict(self)
+        cfg["net"] = self.net  # derived fabric, kept for older readers
+        return cfg
 
     @classmethod
     def from_config(cls, cfg: dict) -> "Candidate":
+        cfg = normalize_config(cfg)
         fields = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in cfg.items() if k in fields})
+
+
+def normalize_config(cfg: dict) -> dict:
+    """Copy of ``cfg`` with legacy knobs mapped onto the current ones.
+
+    The one place that knows pre-engine configs (``net`` only, e.g. cache
+    entries or bench rows written before the TransposeEngine layer) name
+    their engine through the fabric knob.
+    """
+    cfg = dict(cfg)
+    if not cfg.get("comm_engine") and "net" in cfg:
+        cfg["comm_engine"] = cfg["net"]
+    return cfg
 
 
 DEFAULT_CANDIDATE = Candidate()  # the hardcoded status quo every caller used
@@ -50,8 +73,8 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
 
     * ``ref``/``pallas``/``mxu`` are radix-2 / four-step engines — power-of-two
       axis lengths only (``jnp`` delegates to XLA's general FFT).
-    * ``net="torus"`` is only distinct from ``"switched"`` when a fold
-      actually communicates (Pu > 1 or Pv > 1).
+    * the ``torus``/``overlap_ring`` engines are only distinct from
+      ``switched`` when a fold actually communicates (Pu > 1 or Pv > 1).
     * ``vector_mode`` only matters for μ-component fields (``components>0``).
     * ``r2c_packed`` needs a real transform with even power-of-two Nx.
     """
@@ -59,7 +82,7 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
     pow2 = all(is_pow2(d) for d in (nx, ny, nz))
     if backends is None:
         backends = [b for b in ALL_BACKENDS if b == "jnp" or pow2]
-    nets = ("switched", "torus") if (pu > 1 or pv > 1) else ("switched",)
+    engines = ALL_ENGINES if (pu > 1 or pv > 1) else ("switched",)
     schedules = [("sequential", 1)] + [("pipelined", c) for c in CHUNK_CHOICES]
     vmodes = ("streaming", "parallel") if components else ("streaming",)
     packed_opts = (False, True) if (real and pow2 and nx % 2 == 0) else (False,)
@@ -67,10 +90,11 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
     out = []
     for backend in backends:
         for schedule, chunks in schedules:
-            for net in nets:
+            for engine in engines:
                 for vm in vmodes:
                     for packed in packed_opts:
                         out.append(Candidate(
                             backend=backend, schedule=schedule, chunks=chunks,
-                            net=net, vector_mode=vm, r2c_packed=packed))
+                            comm_engine=engine, vector_mode=vm,
+                            r2c_packed=packed))
     return out

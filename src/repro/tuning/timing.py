@@ -14,6 +14,8 @@ def time_us(fn, *args, iters: int = 5) -> float:
     """Mean wall time per call of ``fn(*args)`` in microseconds."""
     import jax
 
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
     jax.block_until_ready(fn(*args))  # compile + warm
     t0 = time.perf_counter()
     out = None

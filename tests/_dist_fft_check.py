@@ -47,6 +47,7 @@ def run():
     for name, kw in [
         ("switched_seq", dict()),
         ("torus", dict(net="torus")),
+        ("overlap_ring", dict(comm_engine="overlap_ring")),
         ("pipelined4", dict(schedule="pipelined", chunks=4)),
         ("pallas_backend", dict(backend="pallas")),
         ("ref_backend", dict(backend="ref")),

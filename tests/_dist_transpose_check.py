@@ -1,12 +1,18 @@
-"""Multi-device pencil-transpose equivalence checks (subprocess: the fake
+"""Multi-device TransposeEngine equivalence checks (subprocess: the fake
 device-count XLA flag must be set before jax initializes).
 
 Usage: python tests/_dist_transpose_check.py PUxPV   (expects PYTHONPATH=src)
-Asserts, for a non-trivial Pu×Pv grid:
+Asserts, for a non-trivial Pu×Pv grid and every registered engine
+(``switched`` all-to-all / ``torus`` ring / ``overlap_ring`` fused ring):
 
-* ``net="torus"`` (ring of ppermutes, Eq. 5.6 routing) is **bit-identical**
-  to ``net="switched"`` (single all_to_all, Eq. 5.5) for both folds, and
-* ``xy/yz unfold∘fold`` round-trips to the input exactly.
+* every engine's ``fold_xy``/``fold_yz`` relayout is **bit-identical** to the
+  ``switched`` reference (the two fabrics and the overlapped schedule compute
+  the same data movement, §5.5),
+* ``unfold ∘ fold`` is the identity for every engine (randomized over several
+  inputs — the property the whole pipeline rests on), and
+* the full distributed 3D FFT built on each engine is allclose (fp64,
+  1e-10) to the ``switched`` build for forward and forward∘inverse,
+  including the real and pipelined overlap-ring paths.
 
 Prints CHECK <name> OK per property, then ALL_OK.
 """
@@ -27,8 +33,16 @@ import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import compat  # noqa: E402
-from repro.core import transpose as tr  # noqa: E402
+from repro.core import comm  # noqa: E402
 from repro.core.decomposition import PencilGrid  # noqa: E402
+from repro.core.fft3d import make_fft3d  # noqa: E402
+
+TOL = 1e-10
+
+
+def rel(a, b):
+    a, b = np.asarray(a, np.complex128), np.asarray(b, np.complex128)
+    return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30)
 
 
 def run(pu: int, pv: int) -> None:
@@ -44,35 +58,75 @@ def run(pu: int, pv: int) -> None:
         return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(spec,),
                                         out_specs=out_spec, check_vma=False))
 
-    for fold, unfold, axes, name in [
-        (tr.xy_fold, tr.xy_unfold, grid.u_axes, "xy"),
-        (tr.yz_fold, tr.yz_unfold, grid.v_axes, "yz"),
-    ]:
+    # ---- relayout primitives: per-engine roundtrip + bit-exactness --------
+    for which in ("xy", "yz"):
         folded = {}
-        for mode in ("switched", "torus"):
-            folded[mode] = np.asarray(
-                sm(lambda a, m=mode: fold(a, axes, mode=m))(x))
-            back = sm(lambda a, m=mode: unfold(fold(a, axes, mode=m), axes,
-                                               mode=m))(x)
-            assert np.array_equal(np.asarray(back), np.asarray(x)), \
-                (name, mode, "roundtrip")
-            print(f"CHECK {name}_roundtrip_{mode} OK", flush=True)
-        assert np.array_equal(folded["switched"], folded["torus"]), \
-            (name, "torus != switched")
-        print(f"CHECK {name}_torus_bitexact OK", flush=True)
+        roundtrips = {}
+        for name in comm.ENGINE_NAMES:
+            eng = comm.make_engine(name, grid)
+            folded[name] = sm(lambda a, e=eng, w=which: e.fold(w, a))
+            roundtrips[name] = sm(
+                lambda a, e=eng, w=which: e.unfold(w, e.fold(w, a)))
+            # property: fold∘unfold is the identity, over several inputs
+            for seed in range(3):
+                xs = jnp.asarray(np.random.RandomState(100 + seed).randn(*n))
+                back = roundtrips[name](xs)
+                assert np.array_equal(np.asarray(back), np.asarray(xs)), \
+                    (which, name, "roundtrip", seed)
+            print(f"CHECK {which}_roundtrip_{name} OK", flush=True)
+        ref = np.asarray(folded["switched"](x))
+        for name in comm.ENGINE_NAMES[1:]:
+            got = np.asarray(folded[name](x))
+            assert np.array_equal(got, ref), (which, name, "relayout")
+            print(f"CHECK {which}_relayout_bitexact_{name} OK", flush=True)
 
     # both folds composed (the full forward relayout), leading batch axis
     xb = jnp.asarray(rng.randn(2, *n))
     bspec = P(None, *spec)
     outs = {}
-    for mode in ("switched", "torus"):
+    for name in comm.ENGINE_NAMES:
+        eng = comm.make_engine(name, grid)
         f = jax.jit(compat.shard_map(
-            lambda a, m=mode: tr.yz_fold(tr.xy_fold(a, grid.u_axes, mode=m),
-                                         grid.v_axes, mode=m),
+            lambda a, e=eng: e.fold_yz(e.fold_xy(a)),
             mesh=mesh, in_specs=(bspec,), out_specs=bspec, check_vma=False))
-        outs[mode] = np.asarray(f(xb))
-    assert np.array_equal(outs["switched"], outs["torus"])
+        outs[name] = np.asarray(f(xb))
+    for name in comm.ENGINE_NAMES[1:]:
+        assert np.array_equal(outs[name], outs["switched"]), name
     print("CHECK composed_folds_bitexact OK", flush=True)
+
+    # ---- full distributed FFT per engine vs the switched reference --------
+    xr = jnp.asarray(rng.randn(*n))
+    xi = jnp.asarray(rng.randn(*n))
+    fwd0, inv0, _ = make_fft3d(mesh, n, comm_engine="switched")
+    kr0, ki0 = fwd0(xr, xi)
+    want = np.asarray(kr0) + 1j * np.asarray(ki0)
+    for name in comm.ENGINE_NAMES[1:]:
+        fwd, inv, plan = make_fft3d(mesh, n, comm_engine=name)
+        kr, ki = fwd(xr, xi)
+        got = np.asarray(kr) + 1j * np.asarray(ki)
+        assert rel(got, want) < TOL, (name, rel(got, want))
+        br, bi = inv(kr, ki)
+        back = np.asarray(br) + 1j * np.asarray(bi)
+        assert rel(back, np.asarray(xr) + 1j * np.asarray(xi)) < TOL, name
+        print(f"CHECK fft_{name}_allclose OK", flush=True)
+
+    # overlap ring with the pipelined schedule and the real (r2c) data model
+    fwdp, invp, _ = make_fft3d(mesh, n, comm_engine="overlap_ring",
+                               schedule="pipelined", chunks=2)
+    krp, kip = fwdp(xr, xi)
+    assert rel(np.asarray(krp) + 1j * np.asarray(kip), want) < TOL
+    print("CHECK fft_overlap_ring_pipelined OK", flush=True)
+
+    fwdr0, invr0, _ = make_fft3d(mesh, n, real=True, comm_engine="switched")
+    fwdr, invr, _ = make_fft3d(mesh, n, real=True, comm_engine="overlap_ring")
+    krr0, kir0 = fwdr0(xr)
+    krr, kir = fwdr(xr)
+    assert rel(np.asarray(krr) + 1j * np.asarray(kir),
+               np.asarray(krr0) + 1j * np.asarray(kir0)) < TOL
+    backr = invr(krr, kir)
+    assert rel(np.asarray(backr), np.asarray(xr)) < TOL
+    print("CHECK fft_overlap_ring_real OK", flush=True)
+
     print("ALL_OK", flush=True)
 
 

@@ -23,16 +23,22 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # ---------------------------------------------------------------------------
 
 def test_space_validity_rules():
-    # single-rank grid: no torus (identical to switched), no vector modes
+    # single-rank grid: no ring engines (identical to switched), no vector modes
     cands = candidate_space(16, 1, 1)
+    assert all(c.comm_engine == "switched" for c in cands)
     assert all(c.net == "switched" for c in cands)
     assert all(c.vector_mode == "streaming" for c in cands)
     assert all(not c.r2c_packed for c in cands)  # complex problem
     assert DEFAULT_CANDIDATE in cands
 
-    # distributed grid: both nets; real pow2 problem: packed appears
+    # distributed grid: all three engines; real pow2 problem: packed appears
     cands = candidate_space(16, 4, 2, real=True)
+    assert {c.comm_engine for c in cands} == {"switched", "torus",
+                                              "overlap_ring"}
+    # both ring engines ride the torus fabric (legacy net view)
     assert {c.net for c in cands} == {"switched", "torus"}
+    assert all(c.net == ("switched" if c.comm_engine == "switched"
+                         else "torus") for c in cands)
     assert any(c.r2c_packed for c in cands)
 
     # vector problem sweeps both vector modes
@@ -48,9 +54,15 @@ def test_space_validity_rules():
 
 
 def test_candidate_roundtrip():
-    c = Candidate(backend="mxu", schedule="pipelined", chunks=4, net="torus")
+    c = Candidate(backend="mxu", schedule="pipelined", chunks=4,
+                  comm_engine="overlap_ring")
+    assert c.config()["net"] == "torus"  # derived fabric rides along
     assert Candidate.from_config(c.config()) == c
     assert Candidate.from_config(json.loads(json.dumps(c.config()))) == c
+    # pre-engine cache entries (net only) map onto the engine axis
+    legacy = {"backend": "jnp", "schedule": "sequential", "chunks": 1,
+              "net": "torus", "vector_mode": "streaming", "r2c_packed": False}
+    assert Candidate.from_config(legacy).comm_engine == "torus"
 
 
 # ---------------------------------------------------------------------------
@@ -64,6 +76,15 @@ def test_estimate_orderings():
     assert est(net="torus") >= est(net="switched")
     # pipelined overlap helps at equal engine count (Table 4.1, mu=1: (mu+1)/2 < 2mu)
     assert est(schedule="pipelined", chunks=4) < est(schedule="sequential")
+    # block-granular ring overlap beats the serial ring it rides on — on
+    # every communicating mesh, including the small ones (2x2, 2x1) where a
+    # naive fill term would penalize the overlap below the serial sum
+    for pu, pv in [(4, 2), (2, 2), (2, 1), (8, 8)]:
+        e = lambda **kw: pm.estimate_plan_seconds(64, pu, pv, **kw)
+        assert e(comm_engine="overlap_ring") < e(comm_engine="torus"), (pu, pv)
+        assert np.isfinite(e(comm_engine="overlap_ring"))
+    # comm_engine="torus" is the same point as the legacy net="torus"
+    assert est(comm_engine="torus") == pytest.approx(est(net="torus"))
     # heavier engines rank behind jnp
     assert est(backend="pallas") > est(backend="ref") > est(backend="jnp")
     # single-rank grids pay no network time
@@ -94,10 +115,16 @@ def test_fingerprint_distinguishes_problems():
     k2, _ = problem_fingerprint(16, 2, 2, real=True)
     k3, _ = problem_fingerprint(16, 4, 1)
     k4, _ = problem_fingerprint(16, 2, 2, dtype="float64")
-    assert len({k1, k2, k3, k4}) == 4
+    # the inverse-aware objective weights are part of the problem identity:
+    # a forward-only winner must not be replayed for a fwd+inv solver
+    k5, p5 = problem_fingerprint(16, 2, 2, fwd_weight=1.0, inv_weight=0.0)
+    k6, _ = problem_fingerprint(16, 2, 2, fwd_weight=2.0, inv_weight=1.0)
+    assert len({k1, k2, k3, k4, k5, k6}) == 6
+    assert p5["fwd_weight"] == 1.0 and p5["inv_weight"] == 0.0
     assert p1["jax_version"] == jax.__version__ and p1["device_kind"]
-    # stable across calls (canonical serialization)
+    # stable across calls (canonical serialization); 1:1 is the default
     assert problem_fingerprint(16, 2, 2)[0] == k1
+    assert problem_fingerprint(16, 2, 2, fwd_weight=1.0, inv_weight=1.0)[0] == k1
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +149,7 @@ def test_autotune_end_to_end(tmp_path, monkeypatch):
         raise AssertionError("cache hit must not re-time candidates")
     import importlib
     autotune_mod = importlib.import_module("repro.tuning.autotune")
-    monkeypatch.setattr(autotune_mod, "time_candidate", boom)
+    monkeypatch.setattr(autotune_mod, "time_candidate_pair", boom)
     res2 = autotune(mesh, 8, cache_path=path, max_candidates=2, iters=1)
     assert res2.cache_hit and res2.best_config == res.best_config
 
@@ -132,6 +159,47 @@ def test_autotune_end_to_end(tmp_path, monkeypatch):
         autotune(mesh, 8, real=True, cache_path=path, max_candidates=1, iters=1)
 
 
+def test_inverse_aware_objective(tmp_path, monkeypatch):
+    """Objective = w_fwd·t_fwd + w_inv·t_inv, and weights key the cache."""
+    import importlib
+    autotune_mod = importlib.import_module("repro.tuning.autotune")
+
+    # deterministic fake timer: forward 100us; inverse 10us, except the
+    # default candidate whose inverse is catastrophically slow (300us)
+    def fake_pair(mesh, n, cand, *, time_inverse=True, **kw):
+        if not time_inverse:
+            return 100.0, 0.0
+        return 100.0, (300.0 if cand == DEFAULT_CANDIDATE else 10.0)
+    monkeypatch.setattr(autotune_mod, "time_candidate_pair", fake_pair)
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    path = str(tmp_path / "plans.json")
+    # forward-only tuning: every candidate ties at 100us; inverse not timed
+    res_fwd = autotune(mesh, 8, cache_path=path, max_candidates=2, iters=1,
+                       inv_weight=0.0)
+    assert all(r["us_per_call"] == 100.0 and r["us_inv"] == 0.0
+               for r in res_fwd.rows)
+    # 1:1 objective: default scores 400, everything else 110 — the slow
+    # inverse disqualifies the default plan
+    res = autotune(mesh, 8, cache_path=path, max_candidates=2, iters=1)
+    assert res.key != res_fwd.key  # weights fingerprint separately
+    assert not res.cache_hit
+    default_rows = [r for r in res.rows
+                    if Candidate.from_config(r["config"]) == DEFAULT_CANDIDATE]
+    assert default_rows[0]["us_per_call"] == pytest.approx(400.0)
+    assert res.best_us == pytest.approx(110.0)
+    assert Candidate.from_config(res.best_config) != DEFAULT_CANDIDATE
+    # reweighting is a different problem -> re-tuned, not replayed
+    res_w = autotune(mesh, 8, cache_path=path, max_candidates=2, iters=1,
+                     fwd_weight=2.0, inv_weight=1.0)
+    assert res_w.key not in (res.key, res_fwd.key)
+    assert res_w.best_us == pytest.approx(210.0)
+    with pytest.raises(ValueError, match="weights"):
+        autotune(mesh, 8, cache_path=path, fwd_weight=0.0, inv_weight=0.0)
+    with pytest.raises(ValueError, match="iters"):
+        autotune(mesh, 8, cache_path=path, iters=0, force=True)
+
+
 def test_make_fft3d_autotune_integration(tmp_path):
     import jax.numpy as jnp
 
@@ -139,9 +207,11 @@ def test_make_fft3d_autotune_integration(tmp_path):
 
     mesh = compat.make_mesh((1, 1), ("data", "model"))
     path = str(tmp_path / "plans.json")
-    fwd, inv, plan = make_fft3d(mesh, (8, 8, 8), autotune=True,
+    # int n is accepted like autotune() itself accepts it
+    fwd, inv, plan = make_fft3d(mesh, 8, autotune=True,
                                 tune_kwargs=dict(cache_path=path,
                                                  max_candidates=2, iters=1))
+    assert plan.n == (8, 8, 8)
     rng = np.random.RandomState(0)
     xr = jnp.asarray(rng.randn(8, 8, 8))
     xi = jnp.asarray(rng.randn(8, 8, 8))

@@ -1,0 +1,138 @@
+"""The bench regression gate (``benchmarks/compare.py``): row matching,
+threshold semantics, exit codes, and the soft-pass path CI relies on for
+the first run (no baseline artifact yet)."""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _doc(rows, meta=None):
+    return {"schema": "bench-fft/v1", "meta": meta or {}, "rows": rows}
+
+
+def _write(path, rows, meta=None):
+    with open(path, "w") as f:
+        json.dump(_doc(rows, meta), f)
+    return str(path)
+
+
+def _run(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.compare", *args],
+        cwd=REPO, capture_output=True, text=True, timeout=120)
+
+
+def test_pass_and_regression_exit_codes(tmp_path):
+    base = _write(tmp_path / "base.json", [
+        {"name": "fft_overlap_ring/N16/fwd", "us_per_call": 100.0, "config": {}},
+        {"name": "fft_switched/N16/fwd", "us_per_call": 50.0, "config": {}},
+        {"name": "table4.1/analytic", "us_per_call": 0.0, "config": {}},
+        {"name": "only_in_base", "us_per_call": 10.0, "config": {}},
+    ])
+    ok = _write(tmp_path / "ok.json", [
+        {"name": "fft_overlap_ring/N16/fwd", "us_per_call": 110.0, "config": {}},
+        {"name": "fft_switched/N16/fwd", "us_per_call": 30.0, "config": {}},
+        {"name": "table4.1/analytic", "us_per_call": 0.0, "config": {}},
+        {"name": "only_in_new", "us_per_call": 10.0, "config": {}},
+    ])
+    out = _run(base, ok, "--threshold", "0.15")
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "improved" in out.stdout and "OK" in out.stdout
+
+    bad = _write(tmp_path / "bad.json", [
+        {"name": "fft_overlap_ring/N16/fwd", "us_per_call": 120.0, "config": {}},
+        {"name": "fft_switched/N16/fwd", "us_per_call": 50.0, "config": {}},
+    ])
+    out = _run(base, bad, "--threshold", "0.15")
+    assert out.returncode == 1
+    assert "REGRESSED fft_overlap_ring/N16/fwd" in out.stdout
+    # a looser gate lets the same diff through
+    assert _run(base, bad, "--threshold", "0.25").returncode == 0
+
+
+def test_analytic_rows_never_gate(tmp_path):
+    # us_per_call == 0 rows are model-derived, not measurements
+    base = _write(tmp_path / "base.json",
+                  [{"name": "table5.7/N512", "us_per_call": 0.0, "config": {}}])
+    new = _write(tmp_path / "new.json",
+                 [{"name": "table5.7/N512", "us_per_call": 0.0, "config": {}}])
+    out = _run(base, new)
+    assert out.returncode == 0
+    assert "no measured rows in common" in out.stdout
+
+
+def test_ignore_globs_exclude_noisy_rows(tmp_path):
+    # low-iteration autotune sweep rows are excluded from the gate by glob
+    base = _write(tmp_path / "base.json", [
+        {"name": "autotune/key/jnp/seq", "us_per_call": 10.0, "config": {}},
+        {"name": "fft_switched/fwd", "us_per_call": 50.0, "config": {}},
+    ])
+    new = _write(tmp_path / "new.json", [
+        {"name": "autotune/key/jnp/seq", "us_per_call": 100.0, "config": {}},
+        {"name": "fft_switched/fwd", "us_per_call": 50.0, "config": {}},
+    ])
+    assert _run(base, new).returncode == 1  # gated without --ignore
+    out = _run(base, new, "--ignore", "autotune/*")
+    assert out.returncode == 0, out.stdout
+    assert "ignoring 1 row" in out.stdout
+    # ignoring everything leaves no overlap -> soft pass
+    out = _run(base, new, "--ignore", "autotune/*", "--ignore", "fft_*")
+    assert out.returncode == 0
+    assert "no measured rows in common" in out.stdout
+
+
+def test_min_us_noise_floor(tmp_path):
+    # sub-floor baseline rows are scheduler jitter, not signal
+    base = _write(tmp_path / "base.json", [
+        {"name": "tiny", "us_per_call": 100.0, "config": {}},
+        {"name": "big", "us_per_call": 5000.0, "config": {}},
+    ])
+    new = _write(tmp_path / "new.json", [
+        {"name": "tiny", "us_per_call": 200.0, "config": {}},
+        {"name": "big", "us_per_call": 5100.0, "config": {}},
+    ])
+    assert _run(base, new).returncode == 1  # tiny row gates by default
+    out = _run(base, new, "--min-us", "500")
+    assert out.returncode == 0, out.stdout
+    assert "below the noise floor" in out.stdout
+    # the floor never exempts rows that are actually slow
+    slow = _write(tmp_path / "slow.json", [
+        {"name": "big", "us_per_call": 9000.0, "config": {}}])
+    assert _run(base, slow, "--min-us", "500").returncode == 1
+
+
+def test_substrate_change_soft_passes(tmp_path):
+    # a 10x "regression" measured on a different substrate (device count,
+    # platform, jax version...) is not comparable — soft pass, not failure
+    rows_base = [{"name": "fft_switched/fwd", "us_per_call": 10.0, "config": {}}]
+    rows_new = [{"name": "fft_switched/fwd", "us_per_call": 100.0, "config": {}}]
+    meta = {"platform": "cpu", "device_kind": "cpu", "devices": 8, "jax": "x"}
+    base = _write(tmp_path / "base.json", rows_base, meta)
+    new = _write(tmp_path / "new.json", rows_new, {**meta, "devices": 1})
+    out = _run(base, new)
+    assert out.returncode == 0
+    assert "substrate changed" in out.stdout and "soft pass" in out.stdout
+    assert _run(base, new, "--strict").returncode == 2
+    # same substrate: the regression gates as usual
+    same = _write(tmp_path / "same.json", rows_new, meta)
+    assert _run(base, same).returncode == 1
+
+
+def test_missing_baseline_soft_pass_and_strict(tmp_path):
+    new = _write(tmp_path / "new.json",
+                 [{"name": "a", "us_per_call": 1.0, "config": {}}])
+    missing = str(tmp_path / "nope.json")
+    out = _run(missing, new)
+    assert out.returncode == 0
+    assert "soft pass" in out.stdout
+    assert _run(missing, new, "--strict").returncode == 2
+
+    # unreadable/wrong-schema new document is always an error
+    garbage = str(tmp_path / "garbage.json")
+    with open(garbage, "w") as f:
+        f.write("{not json")
+    assert _run(new, garbage).returncode == 2

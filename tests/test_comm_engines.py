@@ -1,0 +1,111 @@
+"""TransposeEngine layer unit tests: registry, plan wiring, fabric mapping.
+
+(Distributed numerical equivalence of the engines lives in the subprocess
+checks of ``test_transpose_dist.py``; this file covers the in-process
+plumbing every layer above relies on.)
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core import perfmodel as pm
+from repro.core import topology as topo
+from repro.core.decomposition import PencilGrid
+from repro.core.fft3d import FFT3DPlan
+
+
+def test_registry_names_and_fabrics():
+    assert comm.ENGINE_NAMES == ("switched", "torus", "overlap_ring")
+    assert comm.engine_fabric("switched") == "switched"
+    assert comm.engine_fabric("torus") == "torus"
+    # the overlapped ring is still ring traffic — it sizes the torus fabric
+    assert comm.engine_fabric("overlap_ring") == "torus"
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        comm.engine_fabric("carrier_pigeon")
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        comm.make_engine("carrier_pigeon", PencilGrid(pu=1, pv=1))
+
+
+def test_fabric_maps_consistent_across_layers():
+    # perfmodel keeps a jax-free copy of the engine→fabric map; topology,
+    # the candidate space, and Candidate.net all derive from it, and it must
+    # stay in lockstep with the engine registry in core.comm
+    from repro.tuning.space import ALL_ENGINES, Candidate
+
+    assert set(pm.ENGINE_FABRIC) == set(comm.ENGINE_NAMES)
+    assert ALL_ENGINES == comm.ENGINE_NAMES
+    for name in comm.ENGINE_NAMES:
+        assert pm.ENGINE_FABRIC[name] == comm.engine_fabric(name)
+        assert topo.ENGINE_FABRIC[name] == comm.engine_fabric(name)
+        assert Candidate(comm_engine=name).net == comm.engine_fabric(name)
+    # the analytic model is as strict as every other layer
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        pm.estimate_plan_seconds(64, 2, 2, comm_engine="carrier_pigeon")
+
+
+def test_network_plan_for_engine():
+    for name in comm.ENGINE_NAMES:
+        plan = topo.NetworkPlan.for_engine(name, p=64, r=4, f_mhz=180.0)
+        assert plan.topology == comm.engine_fabric(name)
+        assert plan.required_bw_gbit_s > 0
+    # both ring engines need the 4-link torus NICs, the switched engine 2
+    assert topo.NetworkPlan.for_engine("overlap_ring", 64, 4, 180.0).nics_per_node == 4
+    assert topo.NetworkPlan.for_engine("switched", 64, 4, 180.0).nics_per_node == 2
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        topo.NetworkPlan.for_engine("carrier_pigeon", 64, 4, 180.0)
+
+
+def test_plan_engine_field_derivation():
+    grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    # legacy net-only construction names the engine
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, net="torus")
+    assert plan.comm_engine == "torus" and plan.net == "torus"
+    # engine choice overrides/derives the fabric
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, comm_engine="overlap_ring")
+    assert plan.net == "torus"
+    assert isinstance(plan.engine(), comm.OverlapRingEngine)
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid)
+    assert plan.comm_engine == "switched" and plan.net == "switched"
+    assert isinstance(plan.engine(), comm.SwitchedEngine)
+    with pytest.raises(ValueError, match="unknown comm_engine"):
+        FFT3DPlan(n=(8, 8, 8), grid=grid, comm_engine="carrier_pigeon")
+
+
+def test_engine_chunks_follow_plan_schedule():
+    grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, schedule="pipelined", chunks=4,
+                     comm_engine="overlap_ring")
+    assert plan.engine().chunks == 4
+    # sequential plans collapse to one slab (base engines) — the overlap
+    # ring still slices at ring-block granularity internally
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, schedule="sequential", chunks=4)
+    assert plan.chunks == 1 and plan.engine().chunks == 1
+
+
+def test_overlap_estimate_hides_communication():
+    # at a scale where fold traffic dominates, the overlapped ring's estimate
+    # approaches max(T_comp, T_net) instead of the serial sum
+    kw = dict(backend="jnp", schedule="sequential", chunks=1)
+    serial = pm.estimate_plan_seconds(256, 8, 8, net="torus", **kw)
+    overlap = pm.estimate_plan_seconds(256, 8, 8, comm_engine="overlap_ring",
+                                       **kw)
+    assert overlap < serial
+    # degenerate grid: no communication, engines estimate identically
+    assert pm.estimate_plan_seconds(64, 1, 1, comm_engine="overlap_ring") == \
+        pytest.approx(pm.estimate_plan_seconds(64, 1, 1))
+
+
+def test_run_chunked_matches_unchunked():
+    import jax.numpy as jnp
+
+    x = jnp.asarray(np.random.RandomState(0).randn(6, 4, 8))
+    fn = lambda a: (a * 2.0, a - 1.0)
+    whole = fn(x)
+    for chunks in (1, 2, 3, 5):  # 5 does not divide 6 -> falls back to 3
+        out = comm.run_chunked(fn, (x,), axis=0, chunks=chunks)
+        for got, want in zip(out, whole):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # negative axis is normalized
+    out = comm.run_chunked(fn, (x,), axis=-3, chunks=2)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(whole[0]))

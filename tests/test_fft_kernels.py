@@ -88,6 +88,19 @@ def test_rfft_and_inverse(backend, packed):
     assert rel_l2(back, x) < 1e-10
 
 
+@pytest.mark.parametrize("backend", ["pallas", "ref", "jnp"])
+def test_rfft_packed_rejects_odd_length(backend):
+    # even/odd packing assumes n % 2 == 0; odd lengths must fail loudly at
+    # trace time, not silently mangle the spectrum
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 9), dtype=jnp.float64)
+    with pytest.raises(ValueError, match="even transform length"):
+        rfft1d(x, backend=backend, packed=True)
+    # the faithful unpacked path still handles odd lengths (jnp engine)
+    yr, yi = rfft1d(x, backend="jnp", packed=False)
+    z = np.fft.rfft(np.asarray(x, np.float64))
+    assert rel_l2(yr, z.real) < 1e-10 and rel_l2(yi, z.imag) < 1e-10
+
+
 def test_pick_batch_tile_respects_vmem():
     for n in [512, 1024, 4096, 8192]:
         tb = pick_batch_tile(n, 4096, 4)

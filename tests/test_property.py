@@ -8,6 +8,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.core import comm
 from repro.core.decomposition import PencilGrid
 from repro.core import perfmodel as pm
 from repro.data.pipeline import DataConfig, Pipeline
@@ -76,6 +77,21 @@ def test_pencil_shapes_tile_volume(pu, pv, n):
         assert np.prod(shape) * g.p == n ** 3
     kxp = g.padded_r2c_len(n)
     assert kxp >= n // 2 + 1 and kxp % pu == 0
+
+
+@given(engine=st.sampled_from(comm.ENGINE_NAMES),
+       fold=st.sampled_from(["xy", "yz"]),
+       n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2 ** 16))
+@settings(**SET)
+def test_engine_fold_unfold_identity(engine, fold, n, seed):
+    # any engine's unfold∘fold is the identity (here on the degenerate 1×1
+    # grid, where folds reduce to pure local transposes — the distributed
+    # version of the same property runs in tests/_dist_transpose_check.py)
+    g = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    eng = comm.make_engine(engine, g)
+    x = jnp.asarray(np.random.RandomState(seed).randn(n, n, n))
+    back = eng.unfold(fold, eng.fold(fold, x))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
 
 
 @given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 1000),
