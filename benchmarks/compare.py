@@ -16,7 +16,8 @@ JAX version, the gate soft-passes rather than comparing apples to oranges
   compare against.
 * ``1`` — at least one row regressed by more than ``--threshold``
   (default 0.15 = +15% time per call).
-* ``2`` — unreadable/invalid input, or soft-pass conditions under
+* ``2`` — unreadable/invalid input, a ``--expect GLOB`` with no matching
+  measured row in the new document, or soft-pass conditions under
   ``--strict``.
 """
 
@@ -88,6 +89,12 @@ def main(argv=None) -> int:
                     help="row-name glob to exclude from the gate "
                          "(repeatable; e.g. 'autotune/*' for low-iteration "
                          "sweep diagnostics too noisy to gate on)")
+    ap.add_argument("--expect", action="append", default=[], metavar="GLOB",
+                    help="row-name glob that must match at least one "
+                         "measured row of the NEW document (repeatable; "
+                         "e.g. 'solver_*' keeps the solver workloads on "
+                         "the perf trajectory — a bench that silently "
+                         "stops emitting them fails here, exit 2)")
     ap.add_argument("--min-us", type=float, default=0.0,
                     help="gate only rows whose baseline us_per_call is at "
                          "least this (sub-threshold timings are scheduler "
@@ -102,16 +109,26 @@ def main(argv=None) -> int:
         return 0
 
     try:
+        new, new_meta = load_doc(args.new)
+    except (FileNotFoundError, json.JSONDecodeError, ValueError) as e:
+        print(f"bench-compare: unreadable new document: {e}")
+        return 2
+
+    # --expect guards the new document alone, so it binds even on the first
+    # run when there is no baseline to diff against
+    for pat in args.expect:
+        if not any(fnmatch.fnmatch(name, pat) for name in new):
+            print(f"bench-compare: FAIL — no measured row in {args.new!r} "
+                  f"matches expected glob {pat!r} (workload fell off the "
+                  f"perf trajectory)")
+            return 2
+
+    try:
         base, base_meta = load_doc(args.baseline)
     except FileNotFoundError:
         return soft(f"baseline {args.baseline!r} not found")
     except (json.JSONDecodeError, ValueError) as e:
         return soft(f"unreadable baseline: {e}")
-    try:
-        new, new_meta = load_doc(args.new)
-    except (FileNotFoundError, json.JSONDecodeError, ValueError) as e:
-        print(f"bench-compare: unreadable new document: {e}")
-        return 2
 
     mismatch = substrate_mismatch(base_meta, new_meta)
     if mismatch:

@@ -200,6 +200,31 @@ def bench_fft_engines(n: int = 16):
 
 
 # ---------------------------------------------------------------------------
+# Measured: per-solver step latency (the repro.solvers workloads — each row
+# is one full FFT→spectral→iFFT→local cycle on the largest pencil mesh the
+# host's devices allow)
+# ---------------------------------------------------------------------------
+
+def bench_solvers(n: int = 16):
+    import jax
+
+    from repro import compat
+    from repro.solvers import SOLVERS, make_solver
+
+    ndev = len(jax.devices())
+    pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    # float32: benches run without x64 and timing doesn't need f64 validation
+    for case in sorted(SOLVERS):
+        solver = make_solver(case, mesh, (n, n, n), dtype="float32")
+        state = solver.init_state()
+        us = _time(solver._stepj, state.fields, iters=3)
+        _row(f"solver_{case}/N{n}/mesh{pu}x{pv}/us_per_step", us, "",
+             config={"case": case, "n": n, "mesh": f"{pu}x{pv}",
+                     **solver.plan_config()})
+
+
+# ---------------------------------------------------------------------------
 # Measured: autotuned vs default 3D-FFT plan (single device, Pu=Pv=1)
 # ---------------------------------------------------------------------------
 
@@ -231,6 +256,7 @@ BENCHES = {
     "fft_wallclock": bench_fft_wallclock,
     "fft_engines": bench_fft_engines,
     "fft_autotune": bench_fft_autotune,
+    "solvers": bench_solvers,
 }
 
 

@@ -1,108 +1,20 @@
-"""End-to-end driver: pseudo-spectral incompressible Navier–Stokes — the
-paper's case study (§1.2). Each time step is exactly Fig. 3.3's cycle:
-forward 3D FFT -> spectral computation -> inverse 3D FFT -> local
-computation, on the 2D pencil grid with the pipelined schedule.
+"""Pseudo-spectral incompressible Navier–Stokes — the paper's case study
+(§1.2). Thin CLI wrapper over the ``repro.solvers`` subsystem: the solver
+itself lives in ``repro.solvers.navier_stokes`` (every time step is the
+Fig. 3.3 cycle: forward 3D FFT -> spectral computation -> inverse 3D FFT ->
+local computation, on the 2D pencil grid), the driver loop in
+``repro.solvers.cli``.
 
     PYTHONPATH=src python examples/navier_stokes.py [--n 32] [--steps 10]
 
 Taylor–Green vortex on a 2pi^3 box; prints kinetic energy decay (viscous
 dissipation => monotone decrease) and checks divergence-free-ness.
+Equivalent to:
+
+    python -m repro.solvers.cli --case navier_stokes --mesh 4x2 ...
 """
 
-import os
-
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 import argparse
-import functools
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
-from repro.core import spectral as sp
-from repro.core.decomposition import PencilGrid
-from repro.core.fft3d import FFT3DPlan, fft3d_vector_local, ifft3d_vector_local
-
-
-def make_step(mesh, n, nu, dt, chunks=2, plan_cfg=None, vector_mode="streaming"):
-    grid = PencilGrid.from_mesh(mesh)
-    cfg = dict(schedule="pipelined", chunks=chunks, backend="jnp",
-               comm_engine="switched", r2c_packed=False)
-    if plan_cfg:
-        from repro.tuning.space import normalize_config
-        plan_cfg = normalize_config(plan_cfg)
-        cfg.update({k: plan_cfg[k] for k in cfg if k in plan_cfg})
-        vector_mode = plan_cfg.get("vector_mode", vector_mode)
-    plan = FFT3DPlan(n=(n, n, n), grid=grid, real=True, **cfg)
-    spec = P(None, *grid.pencil_spec())
-
-    def rhs(vr, vi):
-        """Spectral RHS: -P(u.grad u)^ - nu k^2 v^ (rotational form)."""
-        # velocity to physical
-        u = ifft3d_vector_local(plan, vr, vi, vector_mode=vector_mode)
-        # vorticity w = curl u in spectral, to physical
-        kx, ky, kz = sp.local_wavenumbers(plan, jnp.float64)
-        def cross_spec(ar, ai):
-            cr = jnp.stack([ky * ar[2] - kz * ar[1],
-                            kz * ar[0] - kx * ar[2],
-                            kx * ar[1] - ky * ar[0]])
-            ci = jnp.stack([ky * ai[2] - kz * ai[1],
-                            kz * ai[0] - kx * ai[2],
-                            kx * ai[1] - ky * ai[0]])
-            # i*k x v: (i k) x (vr + i vi) = -k x vi + i k x vr
-            return -ci, cr
-        wr, wi = cross_spec(vr, vi)
-        w = ifft3d_vector_local(plan, wr, wi, vector_mode=vector_mode)
-        # nonlinear term u x w in physical space
-        uxw = jnp.stack([u[1] * w[2] - u[2] * w[1],
-                         u[2] * w[0] - u[0] * w[2],
-                         u[0] * w[1] - u[1] * w[0]])
-        nr, ni = fft3d_vector_local(plan, uxw, None, vector_mode=vector_mode)
-        mask = sp.dealias_mask(plan)
-        nr, ni = nr * mask, ni * mask
-        nr, ni = sp.project_divergence_free(plan, nr, ni)
-        k2 = sp.k_squared(plan)
-        return nr - nu * k2 * vr, ni - nu * k2 * vi
-
-    def step(vr, vi):
-        # RK2 (Heun)
-        ar, ai = rhs(vr, vi)
-        pr, pi = vr + dt * ar, vi + dt * ai
-        br, bi = rhs(pr, pi)
-        vr = vr + 0.5 * dt * (ar + br)
-        vi = vi + 0.5 * dt * (ai + bi)
-        vr, vi = sp.project_divergence_free(plan, vr, vi)
-        e = sp.energy_spectrum_total(plan, vr, vi)
-        # divergence diagnostic: max |k.v|
-        kx, ky, kz = sp.local_wavenumbers(plan, jnp.float64)
-        div = jnp.max(jnp.abs(kx * vr[0] + ky * vr[1] + kz * vr[2])) + \
-            jnp.max(jnp.abs(kx * vi[0] + ky * vi[1] + kz * vi[2]))
-        axes = tuple(grid.u_axes) + tuple(grid.v_axes)
-        div = jax.lax.pmax(div, axes)
-        return vr, vi, e, div
-
-    fwd = jax.jit(compat.shard_map(
-        functools.partial(fft3d_vector_local, plan, vector_mode=vector_mode),
-        mesh=mesh, in_specs=(spec, None), out_specs=(spec, spec),
-        check_vma=False))
-    stepj = jax.jit(compat.shard_map(step, mesh=mesh, in_specs=(spec, spec),
-                                  out_specs=(spec, spec, P(), P()),
-                                  check_vma=False))
-    return plan, fwd, stepj
-
-
-def taylor_green(n):
-    x = np.linspace(0, 2 * np.pi, n, endpoint=False)
-    Y, Z, X = np.meshgrid(x, x, x, indexing="ij")  # (y, z, x) pencil layout
-    u = np.cos(X) * np.sin(Y) * np.sin(Z)
-    v = -np.sin(X) * np.cos(Y) * np.sin(Z)
-    w = np.zeros_like(u)
-    return np.stack([u, v, w])
 
 
 def main(argv=None):
@@ -112,38 +24,18 @@ def main(argv=None):
     ap.add_argument("--nu", type=float, default=0.1)
     ap.add_argument("--dt", type=float, default=2e-3)
     ap.add_argument("--autotune", action="store_true",
-                    help="pick the FFT plan via repro.tuning instead of the "
-                         "hardcoded pipelined/switched default")
+                    help="pick the FFT plan by autotuning the whole "
+                         "Navier–Stokes step (see repro.tuning.solver)")
     args = ap.parse_args(argv)
 
-    mesh = compat.make_mesh((4, 2), ("data", "model"))
-    plan_cfg = None
+    from repro.solvers.cli import main as solver_main
+    forwarded = ["--case", "navier_stokes", "--mesh", "4x2",
+                 "--n", str(args.n), "--steps", str(args.steps),
+                 "--nu", str(args.nu), "--dt", str(args.dt)]
     if args.autotune:
-        from repro.tuning import autotune
-        res = autotune(mesh, args.n, real=True, components=3,
-                       dtype="float64", verbose=True)
-        plan_cfg = res.best_config
-        hit = "cache hit" if res.cache_hit else "measured"
-        print(f"autotuned plan ({hit}): {res.best.name}")
-    plan, fwd, stepj = make_step(mesh, args.n, args.nu, args.dt,
-                                 plan_cfg=plan_cfg)
-    u0 = jnp.asarray(taylor_green(args.n))
-    vr, vi = fwd(u0, None)
-
-    energies = []
-    t0 = time.time()
-    for i in range(args.steps):
-        vr, vi, e, div = stepj(vr, vi)
-        energies.append(float(e))
-        print(f"step {i:3d}  E = {float(e):.6f}  max|k.v| = {float(div):.2e}",
-              flush=True)
-        assert float(div) < 1e-8, "velocity left the divergence-free manifold"
-    dt_wall = (time.time() - t0) / args.steps
-    drops = all(b <= a * (1 + 1e-9) for a, b in zip(energies, energies[1:]))
-    print(f"energy monotone decay: {drops}   {dt_wall * 1e3:.1f} ms/step")
-    assert drops, "viscous flow must dissipate energy"
-    return energies
+        forwarded.append("--autotune")
+    return solver_main(forwarded)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

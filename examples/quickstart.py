@@ -7,10 +7,9 @@ pipelined schedule on every TransposeEngine (switched all-to-all, torus
 ring, compute-overlapped ring), and checks against numpy.
 """
 
-import os
+from repro.launch.mesh import ensure_host_devices
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+ensure_host_devices(8)
 
 import jax  # noqa: F401  (device init)
 import jax.numpy as jnp

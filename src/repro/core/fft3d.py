@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import comm
+from repro.core import comm, precision
 from repro.core.decomposition import PencilGrid
 from repro.kernels import ops as kops
 
@@ -61,9 +61,15 @@ class FFT3DPlan:
     net: str = "switched"            # fabric: "switched" | "torus" (derived)
     r2c_packed: bool = False         # beyond-paper packed real FFT
     comm_engine: str = ""            # "" -> engine named by ``net``
+    dtype: str = ""                  # "" -> caller-supplied arrays decide
 
     def __post_init__(self):
         self.grid.validate(self.n)
+        if self.dtype:
+            # refuse the silent f64→f32 demotion JAX performs with x64 off —
+            # a plan that claims float64 must actually compute in it
+            canonical = precision.require_dtype(self.dtype, who="FFT3DPlan")
+            object.__setattr__(self, "dtype", canonical.name)
         if self.schedule == "sequential":
             object.__setattr__(self, "chunks", 1)
         assert self.chunks >= 1

@@ -1,0 +1,63 @@
+"""Centralized precision policy: x64 enablement and dtype resolution.
+
+JAX silently canonicalizes 64-bit dtypes down to 32-bit unless
+``jax_enable_x64`` is on, which used to make ``core.spectral``'s float64
+defaults a quiet precision loss. Every place that *requests* a dtype
+(``FFT3DPlan``, solver construction, the autotuner fingerprint) now goes
+through :func:`require_dtype`, which refuses to downcast silently, and the
+spectral operators default to :func:`default_real_dtype` — the widest dtype
+this process can actually compute in.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def x64_enabled() -> bool:
+    """True when this process computes in 64-bit (``jax_enable_x64``)."""
+    import jax
+
+    return bool(jax.config.jax_enable_x64)
+
+
+def enable_x64() -> None:
+    """Turn on 64-bit computation for this process (idempotent).
+
+    Safe to call after ``import jax``; entry points that want f64 (tests,
+    the solver CLI) call this once instead of each setting the flag.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+
+def default_real_dtype():
+    """The widest real dtype JAX will actually compute in right now."""
+    import jax.numpy as jnp
+
+    return jnp.float64 if x64_enabled() else jnp.float32
+
+
+def require_dtype(dtype, *, allow_downcast: bool = False,
+                  who: str = "FFT3DPlan") -> np.dtype:
+    """Resolve ``dtype`` to what JAX will compute in; never downcast silently.
+
+    Returns the canonical dtype. When the request would lose precision
+    (e.g. float64 with x64 off) raises ``ValueError`` with the fix, unless
+    ``allow_downcast=True`` makes the demotion explicit.
+    """
+    import jax
+
+    want = np.dtype(dtype)
+    got = np.dtype(jax.dtypes.canonicalize_dtype(want))
+    if got != want:
+        if allow_downcast:
+            return got
+        raise ValueError(
+            f"{who}: requested dtype {want.name} but JAX would silently "
+            f"compute in {got.name} (jax_enable_x64 is off). Call "
+            f"repro.core.precision.enable_x64() / set JAX_ENABLE_X64=1, "
+            f"request a 32-bit dtype, or pass allow_downcast=True for an "
+            f"explicit demotion.")
+    return got

@@ -1,29 +1,43 @@
-"""Spectral-space operators for the pseudo-spectral CFD case study (§1.2).
+"""Spectral-space operators for FFT-based pseudo-spectral solvers (§1.2).
 
 All functions operate on Z-pencil spectral fields — local shape
 ``(..., Kx/Pu, Ny/Pv, Nz)`` inside ``shard_map`` — and therefore need the
 *local* wavenumber slabs, which depend on the rank's (u, v) grid coordinates.
+
+Complex spectral fields are carried as planar ``(re, im)`` array pairs.
+``dtype=None`` arguments resolve to :func:`repro.core.precision
+.default_real_dtype` — the widest real dtype this process actually computes
+in — instead of silently demoting a hardcoded float64.
+
+These operators are the shared vocabulary of ``repro.solvers``: every
+concrete solver's "spectral computation" stage (the middle of the paper's
+FFT → spectral → iFFT → local cycle) is built from them.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
-from repro.core.fft3d import FFT3DPlan
+from repro.core import precision
+from repro.core.fft3d import FFT3DPlan, fft3d_vector_local, ifft3d_vector_local
 
 
 _flat_index = compat.flat_axis_index
 
 
-def local_wavenumbers(plan: FFT3DPlan, dtype=jnp.float64):
+def _dtype(dtype):
+    return precision.default_real_dtype() if dtype is None else dtype
+
+
+def local_wavenumbers(plan: FFT3DPlan, dtype=None):
     """(kx, ky, kz) integer wavenumbers for this rank's Z-pencil slab.
 
     kx: slab of the padded spectral X axis (r2c keeps 0..N/2 then zeros);
     ky: slab of fftfreq-ordered Ny; kz: full fftfreq-ordered Nz.
     """
+    dtype = _dtype(dtype)
     nx, ny, nz = plan.n
     g = plan.grid
     u = _flat_index(g.u_axes)
@@ -48,8 +62,9 @@ def local_wavenumbers(plan: FFT3DPlan, dtype=jnp.float64):
     return kx[:, None, None], ky[None, :, None], kz[None, None, :]
 
 
-def pad_mask(plan: FFT3DPlan, dtype=jnp.float64):
+def pad_mask(plan: FFT3DPlan, dtype=None):
     """1 on significant kx bins, 0 on the r2c shard padding."""
+    dtype = _dtype(dtype)
     g = plan.grid
     u = _flat_index(g.u_axes)
     lx = plan.kx // g.pu
@@ -57,8 +72,9 @@ def pad_mask(plan: FFT3DPlan, dtype=jnp.float64):
     return (idx < plan.kx_keep).astype(dtype)[:, None, None]
 
 
-def dealias_mask(plan: FFT3DPlan, dtype=jnp.float64):
+def dealias_mask(plan: FFT3DPlan, dtype=None):
     """2/3-rule mask for the pseudo-spectral nonlinear term."""
+    dtype = _dtype(dtype)
     kx, ky, kz = local_wavenumbers(plan, dtype)
     nx, ny, nz = plan.n
     m = ((jnp.abs(kx) < nx / 3.0)
@@ -70,18 +86,37 @@ def dealias_mask(plan: FFT3DPlan, dtype=jnp.float64):
     return out
 
 
-def k_squared(plan: FFT3DPlan, dtype=jnp.float64):
-    kx, ky, kz = local_wavenumbers(plan, dtype)
+def k_squared(plan: FFT3DPlan, dtype=None):
+    kx, ky, kz = local_wavenumbers(plan, _dtype(dtype))
     return kx * kx + ky * ky + kz * kz
 
 
-def poisson_solve(plan: FFT3DPlan, fr, fi):
-    """∇²φ = f  ⇒  φ̂ = −f̂ / k² (zero-mean gauge; k=0 mode zeroed)."""
+def invert_laplacian(plan: FFT3DPlan, fr, fi, *, mean: float = 0.0):
+    """Solve ∇²φ = f in spectral space: φ̂ = −f̂ / k².
+
+    The inverse Laplacian is defined only up to a constant — the k=0 mode
+    carries the domain mean, and −f̂/k² is singular there. ``mean`` fixes
+    the gauge: the returned field's mean is set to it (``0.0`` reproduces
+    the classic zero-mean Poisson gauge). Only the rank owning the k=0 bin
+    touches it, expressed uniformly via the local ``k² == 0`` mask.
+    """
     k2 = k_squared(plan, fr.dtype)
     inv = jnp.where(k2 > 0, -1.0 / jnp.maximum(k2, 1e-30), 0.0)
     if plan.real:
         inv = inv * pad_mask(plan, fr.dtype)
-    return fr * inv, fi * inv
+    pr, pi = fr * inv, fi * inv
+    if mean:
+        ntot = plan.n[0] * plan.n[1] * plan.n[2]  # unnormalized forward FFT
+        zero_mode = (k2 == 0)
+        if plan.real:
+            zero_mode = zero_mode & (pad_mask(plan, fr.dtype) > 0)
+        pr = jnp.where(zero_mode, jnp.asarray(mean * ntot, pr.dtype), pr)
+    return pr, pi
+
+
+def poisson_solve(plan: FFT3DPlan, fr, fi):
+    """∇²φ = f  ⇒  φ̂ = −f̂ / k² (zero-mean gauge; k=0 mode zeroed)."""
+    return invert_laplacian(plan, fr, fi, mean=0.0)
 
 
 def gradient(plan: FFT3DPlan, fr, fi):
@@ -93,11 +128,23 @@ def gradient(plan: FFT3DPlan, fr, fi):
     return outs
 
 
+def curl(plan: FFT3DPlan, vr, vi):
+    """Vorticity ω̂ = i k × v̂ for a planar (3, ...) spectral field."""
+    kx, ky, kz = local_wavenumbers(plan, vr.dtype)
+
+    def cross_k(ar):
+        return jnp.stack([ky * ar[2] - kz * ar[1],
+                          kz * ar[0] - kx * ar[2],
+                          kx * ar[1] - ky * ar[0]])
+
+    # i*(k × v): (i k) × (vr + i vi) = -(k × vi) + i (k × vr)
+    return -cross_k(vi), cross_k(vr)
+
+
 def project_divergence_free(plan: FFT3DPlan, vr, vi):
     """Leray projection: v̂ ← v̂ − k (k·v̂)/k² for a 3-component field.
 
-    vr/vi: (3, ...) planar spectral velocity. Used by the Navier–Stokes
-    driver to enforce incompressibility.
+    Used by the Navier–Stokes solver to enforce incompressibility.
     """
     kx, ky, kz = local_wavenumbers(plan, vr.dtype)
     ks = (kx, ky, kz)
@@ -110,11 +157,57 @@ def project_divergence_free(plan: FFT3DPlan, vr, vi):
     return pr, pi
 
 
-def energy_spectrum_total(plan: FFT3DPlan, vr, vi):
-    """Total kinetic energy Σ|v̂|² over local slab (psum over the grid)."""
+def rotational_nonlinear_term(plan: FFT3DPlan, vr, vi, *,
+                              vector_mode="streaming", project=True):
+    """Dealiased rotational-form convection term \\widehat{u × ω}.
+
+    The pseudo-spectral nonlinear stage shared by the incompressible
+    Navier–Stokes solver (and any rotational-form momentum equation):
+    inverse-transform velocity and vorticity, form u × ω pointwise in
+    physical space, forward-transform, 2/3-dealias, and (optionally) Leray
+    project. Exactly one forward + two inverse vector transforms — the cost
+    model the tuning objective prices.
+    """
+    u = ifft3d_vector_local(plan, vr, vi, vector_mode=vector_mode)
+    wr, wi = curl(plan, vr, vi)
+    w = ifft3d_vector_local(plan, wr, wi, vector_mode=vector_mode)
+    uxw = jnp.stack([u[1] * w[2] - u[2] * w[1],
+                     u[2] * w[0] - u[0] * w[2],
+                     u[0] * w[1] - u[1] * w[0]])
+    nr, ni = fft3d_vector_local(plan, uxw, None, vector_mode=vector_mode)
+    mask = dealias_mask(plan, nr.dtype)
+    nr, ni = nr * mask, ni * mask
+    if project:
+        nr, ni = project_divergence_free(plan, nr, ni)
+    return nr, ni
+
+
+def grid_sum(plan: FFT3DPlan, x):
+    """Sum of local scalar ``x`` over the whole Pu×Pv processor grid."""
     g = plan.grid
-    e = jnp.sum(vr * vr + vi * vi)
     axes = tuple(g.u_axes) + tuple(g.v_axes)
     if axes:
-        e = lax.psum(e, axes if len(axes) > 1 else axes[0])
-    return e
+        x = lax.psum(x, axes if len(axes) > 1 else axes[0])
+    return x
+
+
+def grid_max(plan: FFT3DPlan, x):
+    """Max of local scalar ``x`` over the whole Pu×Pv processor grid."""
+    g = plan.grid
+    axes = tuple(g.u_axes) + tuple(g.v_axes)
+    if axes:
+        x = lax.pmax(x, axes if len(axes) > 1 else axes[0])
+    return x
+
+
+def energy_spectrum_total(plan: FFT3DPlan, vr, vi):
+    """Total kinetic energy Σ|v̂|² over local slab (psum over the grid)."""
+    return grid_sum(plan, jnp.sum(vr * vr + vi * vi))
+
+
+def max_divergence(plan: FFT3DPlan, vr, vi):
+    """max |k·v̂| over the grid — the divergence-free diagnostic."""
+    kx, ky, kz = local_wavenumbers(plan, vr.dtype)
+    div = jnp.max(jnp.abs(kx * vr[0] + ky * vr[1] + kz * vr[2])) + \
+        jnp.max(jnp.abs(kx * vi[0] + ky * vi[1] + kz * vi[2]))
+    return grid_max(plan, div)

@@ -1,6 +1,6 @@
-import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+from repro.launch.mesh import ensure_host_devices
+
+ensure_host_devices(512)
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes, record memory/cost/collective analysis for §Roofline.
@@ -14,6 +14,7 @@ incrementally, so an interrupted sweep resumes with --skip-existing.
 
 import argparse
 import json
+import os
 import re
 import time
 import traceback

@@ -1,4 +1,4 @@
-"""Production mesh builders.
+"""Production mesh builders and the fake host-device bootstrap.
 
 Single pod: 16×16 = 256 chips (data, model). Multi-pod: 2×16×16 = 512 chips
 (pod, data, model). The FFT pencil grid maps (Pu, Pv) = (data, model), or
@@ -8,7 +8,40 @@ this module never touches jax device state.
 
 from __future__ import annotations
 
+import os
+
 from repro import compat
+
+_FORCE_FLAG = "xla_force_host_platform_device_count"
+
+
+def parse_mesh_arg(text: str) -> tuple[int, int]:
+    """Parse a CLI ``--mesh PUxPV`` string (e.g. ``4x2``) into ``(pu, pv)``.
+
+    Shared by the tuning and solver CLIs; raises ``SystemExit`` with a
+    usage message on malformed input.
+    """
+    try:
+        pu, pv = (int(t) for t in text.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh must look like 4x2, got {text!r}")
+    return pu, pv
+
+
+def ensure_host_devices(n: int) -> None:
+    """Make the CPU backend expose ``n`` fake devices (idempotent).
+
+    The one shared implementation of the ``XLA_FLAGS`` dance every example,
+    test subprocess, and CLI used to copy-paste. Must run before the XLA
+    backend initializes (i.e. before the first ``jax.devices()``-like call;
+    merely importing jax is fine); an existing
+    ``--xla_force_host_platform_device_count`` in the environment wins, so
+    CI/outer drivers can pin their own count.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG in flags:
+        return
+    os.environ["XLA_FLAGS"] = f"--{_FORCE_FLAG}={int(n)} {flags}".rstrip()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

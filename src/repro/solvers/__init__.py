@@ -1,0 +1,49 @@
+"""``repro.solvers`` — FFT-based simulation workloads over ``FFT3DPlan``.
+
+The paper builds its multi-FPGA 3D-FFT machine *for numerical simulations*
+(§1.2); this package is that simulation layer. Every solver implements the
+:class:`~repro.solvers.base.SpectralSolver` contract (``init_state / step /
+observables``, each step the FFT → spectral → iFFT → local cycle) on top of
+the distributed transform, sharing the spectral operator vocabulary of
+``repro.core.spectral`` and the time integrators of
+:mod:`repro.solvers.integrators`.
+
+Registered cases:
+
+* ``poisson``       — manufactured-solution Poisson benchmark (bare cycle),
+* ``heat``          — 3D diffusion, exact exponential spectral propagator,
+* ``navier_stokes`` — incompressible pseudo-spectral NS (Taylor–Green),
+* ``nls``           — split-step nonlinear Schrödinger / Gross–Pitaevskii.
+
+``python -m repro.solvers.cli --case <name>`` runs any case on any mesh;
+``repro.tuning.autotune_solver_step`` tunes the FFT plan against a case's
+whole step; ``benchmarks.run --only solvers`` puts per-step latencies on
+the perf trajectory.
+"""
+
+from __future__ import annotations
+
+from repro.solvers.base import SolverState, SpectralSolver
+from repro.solvers.heat import HeatSolver
+from repro.solvers.navier_stokes import NavierStokesSolver
+from repro.solvers.nls import NLSSolver
+from repro.solvers.poisson import PoissonSolver
+
+SOLVERS: dict[str, type[SpectralSolver]] = {
+    cls.case: cls
+    for cls in (PoissonSolver, HeatSolver, NavierStokesSolver, NLSSolver)
+}
+
+
+def make_solver(case: str, mesh, n, **kwargs) -> SpectralSolver:
+    """Instantiate a registered solver case (``kwargs`` → its constructor)."""
+    try:
+        cls = SOLVERS[case]
+    except KeyError:
+        raise ValueError(f"unknown solver case {case!r}; "
+                         f"have {sorted(SOLVERS)}") from None
+    return cls(mesh, n, **kwargs)
+
+
+__all__ = ["SOLVERS", "SolverState", "SpectralSolver", "HeatSolver",
+           "NavierStokesSolver", "NLSSolver", "PoissonSolver", "make_solver"]

@@ -1,0 +1,155 @@
+"""The ``SpectralSolver`` contract — the paper's simulation cycle as a class.
+
+§1.2 frames the machine's purpose as the pseudo-spectral loop
+
+    forward 3D FFT → spectral computation → inverse 3D FFT → local computation
+
+over a distributed ``FFT3DPlan``. A :class:`SpectralSolver` packages one
+such workload:
+
+* ``init_state(plan)``   — build the t=0 :class:`SolverState`;
+* ``step(state)``        — advance one Δt (one or more FFT cycles), jitted
+  through ``shard_map`` over the plan's pencil grid;
+* ``observables(state)`` — grid-reduced scalar diagnostics (energy, error
+  norms, conserved quantities) as a ``{name: float}`` dict.
+
+Concrete solvers implement the *local* hooks (``initial_fields`` /
+``step_fields`` / ``observables_fields``) plus a ``validate`` check against
+an analytic or NumPy reference; the base class owns plan construction
+(including the x64/dtype gate), shard_map compilation, and the run loop.
+
+The FFT plan knobs (backend / schedule / chunks / comm_engine /
+vector_mode / r2c_packed) come either from ``plan_cfg`` — e.g. the winner
+of ``repro.tuning.autotune_solver_step``, which times *this class's whole
+step* per candidate — or from the same pipelined/switched default the
+Navier–Stokes example always used.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import functools
+from typing import Any, ClassVar
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import precision
+from repro.core.decomposition import PencilGrid
+from repro.core.fft3d import FFT3DPlan
+
+
+@dataclasses.dataclass
+class SolverState:
+    """Evolving solver state: sharded field pytree + host-side clock."""
+
+    fields: Any                # pytree of (possibly sharded) jax arrays
+    t: float = 0.0             # physical time
+    n_steps: int = 0
+
+
+class SpectralSolver(abc.ABC):
+    """Common contract every FFT-cycle simulation workload implements."""
+
+    case: ClassVar[str]            # registry name (``--case`` on the CLI)
+    real: ClassVar[bool] = True    # r2c transform (False: planar complex)
+    components: ClassVar[int] = 0  # leading vector axis (0 = scalar field)
+
+    def __init__(self, mesh, n, *, dt: float = 1e-2, dtype="float64",
+                 plan_cfg: dict | None = None):
+        self.mesh = mesh
+        self.n = (n, n, n) if isinstance(n, int) else tuple(n)
+        self.dt = float(dt)
+        self.dtype = np.dtype(precision.require_dtype(
+            dtype, who=f"solvers.{self.case}"))
+        grid = PencilGrid.from_mesh(mesh)
+        cfg = dict(schedule="pipelined", chunks=2, backend="jnp",
+                   comm_engine="switched", r2c_packed=False)
+        self.vector_mode = "streaming"
+        if plan_cfg:
+            from repro.tuning.space import normalize_config
+            plan_cfg = normalize_config(plan_cfg)
+            cfg.update({k: plan_cfg[k] for k in cfg if k in plan_cfg})
+            self.vector_mode = plan_cfg.get("vector_mode", self.vector_mode)
+        self.plan = FFT3DPlan(n=self.n, grid=grid, real=self.real,
+                              dtype=self.dtype.name, **cfg)
+        self._compile()
+
+    # ---- solver-specific hooks ------------------------------------------
+    @abc.abstractmethod
+    def initial_fields(self):
+        """Global t=0 field pytree (host-side; base shards it on first use)."""
+
+    @abc.abstractmethod
+    def step_fields(self, plan: FFT3DPlan, fields):
+        """One Δt of the FFT→spectral→iFFT→local cycle (inside shard_map)."""
+
+    @abc.abstractmethod
+    def observables_fields(self, plan: FFT3DPlan, fields) -> dict:
+        """Grid-reduced scalar diagnostics (inside shard_map)."""
+
+    @abc.abstractmethod
+    def validate(self, history: list[dict]) -> tuple[bool, list[str]]:
+        """(ok, report lines) judging a run against the analytic reference.
+
+        ``history[i]`` is ``observables`` after i steps (``history[0]`` is
+        t=0), each dict augmented with ``"t"``.
+        """
+
+    def params(self) -> dict:
+        """Physics parameters identifying this problem (cache fingerprint)."""
+        return {"dt": self.dt}
+
+    # ---- compiled machinery ---------------------------------------------
+    def field_spec(self) -> P:
+        """PartitionSpec prefix applied to every leaf of ``fields``."""
+        base = self.plan.grid.pencil_spec()
+        return P(None, *base) if self.components else base
+
+    def _compile(self):
+        plan, mesh, spec = self.plan, self.mesh, self.field_spec()
+        self._stepj = jax.jit(compat.shard_map(
+            functools.partial(self.step_fields, plan), mesh=mesh,
+            in_specs=(spec,), out_specs=spec, check_vma=False))
+        self._obsj = jax.jit(compat.shard_map(
+            functools.partial(self.observables_fields, plan), mesh=mesh,
+            in_specs=(spec,), out_specs=P(), check_vma=False))
+
+    # ---- public contract -------------------------------------------------
+    def init_state(self, plan: FFT3DPlan | None = None) -> SolverState:
+        assert plan is None or plan == self.plan, \
+            "a solver steps the plan it was compiled for"
+        return SolverState(fields=self.initial_fields(), t=0.0, n_steps=0)
+
+    def step(self, state: SolverState) -> SolverState:
+        return SolverState(fields=self._stepj(state.fields),
+                           t=state.t + self.dt, n_steps=state.n_steps + 1)
+
+    def observables(self, state: SolverState) -> dict:
+        obs = {k: float(v) for k, v in self._obsj(state.fields).items()}
+        obs["t"] = state.t
+        return obs
+
+    def run(self, steps: int, *, callback=None):
+        """Advance ``steps`` Δt from t=0; returns (state, observable history)."""
+        state = self.init_state()
+        history = [self.observables(state)]
+        if callback:
+            callback(state, history[-1])
+        for _ in range(steps):
+            state = self.step(state)
+            history.append(self.observables(state))
+            if callback:
+                callback(state, history[-1])
+        return state, history
+
+    def plan_config(self) -> dict:
+        """The FFT-plan knobs this solver compiled against (bench metadata)."""
+        p = self.plan
+        return {"backend": p.backend, "schedule": p.schedule,
+                "chunks": p.chunks, "comm_engine": p.comm_engine,
+                "net": p.net, "vector_mode": self.vector_mode,
+                "r2c_packed": p.r2c_packed, "dtype": p.dtype}

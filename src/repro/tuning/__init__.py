@@ -24,11 +24,13 @@ Entry points: ``autotune(...)``, ``make_fft3d(..., autotune=True)``, and
 from repro.tuning.autotune import (TuneResult, autotune, time_candidate,
                                    time_candidate_pair)
 from repro.tuning.cache import PlanCache, default_cache_path, problem_fingerprint
+from repro.tuning.solver import autotune_solver_step, time_solver_step
 from repro.tuning.space import DEFAULT_CANDIDATE, Candidate, candidate_space
 from repro.tuning.timing import time_us
 
 __all__ = [
     "autotune", "time_candidate", "time_candidate_pair", "TuneResult",
+    "autotune_solver_step", "time_solver_step",
     "Candidate", "DEFAULT_CANDIDATE", "candidate_space",
     "PlanCache", "default_cache_path", "problem_fingerprint",
     "time_us",

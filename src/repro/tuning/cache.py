@@ -39,12 +39,17 @@ def problem_fingerprint(n, pu: int, pv: int, *, real: bool = False,
                         components: int = 0, dtype: str = "float32",
                         u_axes=("data",), v_axes=("model",),
                         fwd_weight: float = 1.0,
-                        inv_weight: float = 1.0) -> tuple[str, dict]:
+                        inv_weight: float = 1.0,
+                        case: str = "",
+                        solver_params: dict | None = None) -> tuple[str, dict]:
     """(key, payload): canonical id of a tuning problem on this substrate.
 
     The objective weights (``w_fwd·t_fwd + w_inv·t_inv``) are part of the
     fingerprint: a forward-only winner must never be replayed for a solver
-    that pays for both directions.
+    that pays for both directions. For the solver-step objective, ``case``
+    (the registered solver name) and its physics ``solver_params`` join the
+    fingerprint too — a plan tuned against a bare transform or a different
+    workload is never replayed for another case.
     """
     import jax
 
@@ -62,10 +67,15 @@ def problem_fingerprint(n, pu: int, pv: int, *, real: bool = False,
         "platform": dev.platform,
         "device_kind": dev.device_kind,
     }
+    if case:
+        payload["case"] = str(case)
+        payload["solver_params"] = dict(solver_params or {})
     digest = hashlib.sha256(
         json.dumps(payload, sort_keys=True).encode()).hexdigest()[:16]
     kind = ("r2c" if real else "c2c") + (f"_mu{components}" if components else "")
-    key = f"n{nx}x{ny}x{nz}_p{pu}x{pv}_{kind}_{payload['dtype']}_{digest}"
+    prefix = f"solver_{case}_" if case else ""
+    key = (f"{prefix}n{nx}x{ny}x{nz}_p{pu}x{pv}_{kind}_"
+           f"{payload['dtype']}_{digest}")
     return key, payload
 
 

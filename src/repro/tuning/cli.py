@@ -1,6 +1,8 @@
 """Autotuner command line.
 
     PYTHONPATH=src python -m repro.tuning.cli --n 64 --mesh 4x2
+    PYTHONPATH=src python -m repro.tuning.cli --n 16 --mesh 4x2 \\
+        --case navier_stokes --dtype float64
 
 Sweeps the ``FFT3DPlan`` space for the given problem on a Pu×Pv device mesh
 (host devices are faked to Pu·Pv when the machine has fewer — the flag is set
@@ -8,6 +10,11 @@ before the XLA backend initializes), writes the winner to the persistent plan
 cache, and emits the measured sweep as ``BENCH_fft.json`` rows
 (``{name, us_per_call, config}``) for the CI perf-trajectory artifact.
 A second invocation with the same problem is a cache hit and times nothing.
+
+``--case <solver>`` switches the objective from the bare transform to a
+registered ``repro.solvers`` case's *whole step* (µs/step; the real/
+components shape then comes from the solver class, and ``--fwd-weight/
+--inv-weight`` don't apply).
 """
 
 from __future__ import annotations
@@ -16,14 +23,6 @@ import argparse
 import json
 import os
 import sys
-
-
-def _parse_mesh(text: str) -> tuple[int, int]:
-    try:
-        pu, pv = (int(t) for t in text.lower().split("x"))
-    except ValueError:
-        raise SystemExit(f"--mesh must look like 4x2, got {text!r}")
-    return pu, pv
 
 
 def write_bench_json(path: str, rows: list, meta: dict) -> None:
@@ -52,6 +51,10 @@ def main(argv=None) -> int:
         description="Autotune the distributed 3D-FFT plan for one problem.")
     ap.add_argument("--n", type=int, default=64, help="cubic grid extent N")
     ap.add_argument("--mesh", default="4x2", help="Pu x Pv pencil grid, e.g. 4x2")
+    ap.add_argument("--case", default="",
+                    help="tune a repro.solvers case's whole step instead of "
+                         "the bare transform (poisson | heat | "
+                         "navier_stokes | nls)")
     ap.add_argument("--real", action="store_true", help="real-to-complex input")
     ap.add_argument("--components", type=int, default=0,
                     help="μ vector components (0 = scalar field)")
@@ -73,42 +76,55 @@ def main(argv=None) -> int:
                     help="ignore any cached plan and re-time")
     args = ap.parse_args(argv)
 
-    pu, pv = _parse_mesh(args.mesh)
-    flags = os.environ.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in flags:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={pu * pv} " + flags)
+    from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
+    pu, pv = parse_mesh_arg(args.mesh)
+    ensure_host_devices(pu * pv)
 
     import jax
 
     from repro import compat
+    from repro.core import precision
     from repro.tuning import autotune
     from repro.tuning.autotune import speedup_vs_default
 
     if len(jax.devices()) < pu * pv:
         raise SystemExit(f"need {pu * pv} devices for mesh {args.mesh}, "
                          f"have {len(jax.devices())}")
+    if args.case:
+        import numpy as np
+        if np.dtype(args.dtype).itemsize >= 8:
+            precision.enable_x64()  # solver construction refuses silent f32
     mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    objective = (f"{args.case} step" if args.case else
+                 f"{args.fwd_weight:g}*t_fwd+{args.inv_weight:g}*t_inv")
     print(f"autotune: N={args.n}^3 mesh={pu}x{pv} real={args.real} "
           f"components={args.components} dtype={args.dtype} "
-          f"objective={args.fwd_weight:g}*t_fwd+{args.inv_weight:g}*t_inv "
+          f"objective={objective} "
           f"[{jax.devices()[0].platform}:{len(jax.devices())} devices]",
           flush=True)
     try:
-        result = autotune(mesh, args.n, real=args.real,
-                          components=args.components, dtype=args.dtype,
-                          cache_path=args.cache,
-                          max_candidates=args.max_candidates,
-                          iters=args.iters, force=args.force,
-                          fwd_weight=args.fwd_weight,
-                          inv_weight=args.inv_weight, verbose=True)
+        if args.case:
+            from repro.tuning.solver import autotune_solver_step
+            result = autotune_solver_step(
+                mesh, args.case, args.n, dtype=args.dtype,
+                cache_path=args.cache, max_candidates=args.max_candidates,
+                iters=args.iters, force=args.force, verbose=True)
+        else:
+            result = autotune(mesh, args.n, real=args.real,
+                              components=args.components, dtype=args.dtype,
+                              cache_path=args.cache,
+                              max_candidates=args.max_candidates,
+                              iters=args.iters, force=args.force,
+                              fwd_weight=args.fwd_weight,
+                              inv_weight=args.inv_weight, verbose=True)
     except ValueError as e:  # e.g. N not divisible by the pencil grid
         raise SystemExit(f"invalid problem for mesh {args.mesh}: {e}")
 
     from repro.tuning.cache import PlanCache
 
     src = "cache HIT (nothing re-timed)" if result.cache_hit else "measured sweep"
-    print(f"selected [{src}]: {result.best.name}  {result.best_us:.1f} us/call")
+    unit = "us/step" if args.case else "us/call"
+    print(f"selected [{src}]: {result.best.name}  {result.best_us:.1f} {unit}")
     sp = speedup_vs_default(result)
     if sp == sp:  # not nan
         print(f"speedup vs default (jnp/seq/switched): {sp:.2f}x")

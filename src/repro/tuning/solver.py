@@ -1,0 +1,126 @@
+"""Solver-step autotuning: pick the FFT plan by timing the *whole* step.
+
+The bare-transform objective (``tuning.autotune``) weights forward and
+inverse times, but a real workload's step also contains the spectral and
+local stages, runs a case-specific mix of transforms (Navier–Stokes: three
+vector transforms per RK substage; Poisson: one round trip), and exposes
+different overlap opportunities to XLA. ``autotune_solver_step`` therefore
+scores each candidate plan by building the actual
+:class:`repro.solvers.SpectralSolver` on it and timing its jitted
+``step`` — closing the ROADMAP item "tune the Navier–Stokes step
+end-to-end rather than the bare transform".
+
+Winners persist in the same plan cache, fingerprinted with the solver
+``case`` and its physics params, so a step-tuned plan is never confused
+with a bare-transform one (or another case's).
+"""
+
+from __future__ import annotations
+
+import datetime
+
+from repro.core.decomposition import PencilGrid
+from repro.tuning.autotune import TuneResult, _estimate
+from repro.tuning.cache import PlanCache, problem_fingerprint
+from repro.tuning.space import DEFAULT_CANDIDATE, Candidate, candidate_space
+from repro.tuning.timing import time_us
+
+
+def time_solver_step(mesh, case: str, n, cand: Candidate, *,
+                     dtype="float64", params: dict | None = None,
+                     iters: int = 3) -> float:
+    """Measured µs per solver step for one candidate plan (compile excluded).
+
+    Builds the solver on the candidate's plan config, initializes state
+    once, and times the jitted step function on the sharded fields.
+    """
+    from repro.solvers import make_solver
+
+    solver = make_solver(case, mesh, n, dtype=dtype,
+                         plan_cfg=cand.config(), **(params or {}))
+    state = solver.init_state()
+    return time_us(solver._stepj, state.fields, iters=iters)
+
+
+def autotune_solver_step(mesh, case: str, n, *, dtype="float64",
+                         params: dict | None = None,
+                         cache_path: str | None = None,
+                         max_candidates: int = 6, iters: int = 3,
+                         force: bool = False,
+                         verbose: bool = False) -> TuneResult:
+    """Pick the fastest ``FFT3DPlan`` for one solver case's full step.
+
+    Same discipline as the bare-transform sweep: enumerate the valid plan
+    space for the case's transform shape (real/complex, μ components),
+    rank analytically, time the top ``max_candidates`` plus the hardcoded
+    default, persist the winner keyed by a fingerprint that includes the
+    case and its physics params. ``iters`` < 1, unknown cases, and a dtype
+    this process cannot actually compute in (float64 with x64 off — the
+    same gate solver construction applies) all fail fast. Solvers always
+    decompose over the default ``("data", "model")`` mesh axes.
+    """
+    from repro.core import precision
+    from repro.solvers import SOLVERS
+
+    if case not in SOLVERS:
+        raise ValueError(f"unknown solver case {case!r}; "
+                         f"have {sorted(SOLVERS)}")
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    cls = SOLVERS[case]
+    n = (n, n, n) if isinstance(n, int) else tuple(n)
+    grid = PencilGrid.from_mesh(mesh)
+    grid.validate(n)
+    params = dict(params or {})
+    dtype = precision.require_dtype(dtype, who="autotune_solver_step").name
+    key, problem = problem_fingerprint(
+        n, grid.pu, grid.pv, real=cls.real, components=cls.components,
+        dtype=dtype, case=case, solver_params=params)
+    cache = PlanCache(cache_path)
+    if not force:
+        entry = cache.get(key)
+        if entry is not None:
+            return TuneResult(best_config=entry["best"],
+                              best_us=entry["us_per_call"], cache_hit=True,
+                              key=key, rows=entry.get("rows", []))
+
+    cands = candidate_space(n, grid.pu, grid.pv, real=cls.real,
+                            components=cls.components)
+    # the analytic transform model ranks candidates; the per-step transform
+    # count is plan-independent, so the constant factor cancels in the order
+    cands.sort(key=lambda c: _estimate(c, n, grid, cls.components))
+    keep = cands[:max(max_candidates, 1)]
+    if DEFAULT_CANDIDATE not in keep:
+        keep.append(DEFAULT_CANDIDATE)
+
+    rows = []
+    for cand in keep:
+        try:
+            us = time_solver_step(mesh, case, n, cand, dtype=dtype,
+                                  params=params, iters=iters)
+        except Exception as e:  # invalid on this substrate — drop, keep going
+            if verbose:
+                print(f"  tune {case}/{cand.name}: FAILED "
+                      f"({type(e).__name__}: {e})")
+            continue
+        rows.append({"name": cand.name, "us_per_call": round(us, 3),
+                     "config": cand.config()})
+        if verbose:
+            print(f"  tune {case}/{cand.name}: {us:.1f} us/step")
+    if not rows:
+        raise RuntimeError(f"autotune_solver_step: no candidate ran for "
+                           f"problem {key}")
+
+    best = min(rows, key=lambda r: r["us_per_call"])
+    entry = {
+        "problem": problem,
+        "best": best["config"],
+        "best_name": best["name"],
+        "us_per_call": best["us_per_call"],
+        "rows": rows,
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
+    cache.put(key, entry)
+    return TuneResult(best_config=best["config"],
+                      best_us=best["us_per_call"], cache_hit=False, key=key,
+                      rows=rows)

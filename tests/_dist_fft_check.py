@@ -5,11 +5,9 @@ Usage: python tests/_dist_fft_check.py  (expects PYTHONPATH=src)
 Prints CHECK <name> OK / raises on failure. Final line: ALL_OK.
 """
 
-import os
+from repro.launch.mesh import ensure_host_devices
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
-)
+ensure_host_devices(8)
 
 import jax  # noqa: E402
 

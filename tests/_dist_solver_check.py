@@ -1,0 +1,67 @@
+"""Multi-device spectral-solver smoke (run in a subprocess so the fake
+device-count XLA flag is set before jax initializes).
+
+Usage: python tests/_dist_solver_check.py  (expects PYTHONPATH=src)
+
+The tier-1 solver smoke the CI job names: on the 8-fake-device 4x2 pencil
+mesh, the Poisson manufactured solution must be recovered to ~1e-10 (f64)
+and a 2-step Navier–Stokes Taylor–Green run must dissipate energy
+monotonically while staying divergence-free; heat and NLS ride along with
+their own analytic checks. Also exercises the solver-step autotuner on the
+distributed mesh with a throwaway cache. Prints CHECK <case> OK per case,
+then ALL_OK.
+"""
+
+from repro.launch.mesh import ensure_host_devices
+
+ensure_host_devices(8)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+import os  # noqa: E402
+import tempfile  # noqa: E402
+
+from repro import compat  # noqa: E402
+from repro.solvers import SOLVERS, make_solver  # noqa: E402
+
+
+def run():
+    assert len(jax.devices()) >= 8, jax.devices()
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+
+    for case, steps, kwargs in [
+        ("poisson", 1, {}),
+        ("navier_stokes", 2, {"nu": 0.1, "dt": 2e-3}),
+        ("heat", 3, {}),
+        ("nls", 3, {}),
+    ]:
+        solver = make_solver(case, mesh, 16, **kwargs)
+        _, history = solver.run(steps)
+        ok, lines = solver.validate(history)
+        assert ok, (case, lines, history)
+        print(f"CHECK {case} OK  ({'; '.join(lines)})", flush=True)
+    assert set(SOLVERS) == {"poisson", "heat", "navier_stokes", "nls"}
+
+    # step-level autotune on the distributed mesh: runs, caches, replays
+    from repro.tuning.solver import autotune_solver_step
+
+    cache = os.path.join(tempfile.mkdtemp(), "plans.json")
+    res = autotune_solver_step(mesh, "poisson", 16, dtype="float64",
+                               cache_path=cache, max_candidates=2, iters=1)
+    assert not res.cache_hit and res.rows
+    hit = autotune_solver_step(mesh, "poisson", 16, dtype="float64",
+                               cache_path=cache, max_candidates=2, iters=1)
+    assert hit.cache_hit and hit.best_config == res.best_config
+    solver = make_solver("poisson", mesh, 16, plan_cfg=res.best_config)
+    _, history = solver.run(1)
+    ok, lines = solver.validate(history)
+    assert ok, lines
+    print(f"CHECK solver_autotune OK  (best {res.best.name})", flush=True)
+
+    print("ALL_OK", flush=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -17,12 +17,11 @@ Asserts, for a non-trivial Pu×Pv grid and every registered engine
 Prints CHECK <name> OK per property, then ALL_OK.
 """
 
-import os
 import sys
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
-)
+from repro.launch.mesh import ensure_host_devices
+
+ensure_host_devices(8)
 
 import jax  # noqa: E402
 

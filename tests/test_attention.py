@@ -69,8 +69,8 @@ def test_seqsharded_decode_matches_dense_subprocess():
     import sys
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     code = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+from repro.launch.mesh import ensure_host_devices
+ensure_host_devices(4)
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.models import layers as L

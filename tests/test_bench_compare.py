@@ -136,3 +136,21 @@ def test_missing_baseline_soft_pass_and_strict(tmp_path):
     with open(garbage, "w") as f:
         f.write("{not json")
     assert _run(new, garbage).returncode == 2
+
+
+def test_expect_glob_keeps_workloads_on_trajectory(tmp_path):
+    rows = [{"name": "solver_poisson/N16/mesh4x2/us_per_step",
+             "us_per_call": 900.0, "config": {}}]
+    base = _write(tmp_path / "base.json", rows)
+    new = _write(tmp_path / "new.json", rows)
+    assert _run(base, new, "--expect", "solver_*").returncode == 0
+    # a new document that stopped emitting the workload fails, even when
+    # there is no baseline at all (first CI run)
+    empty = _write(tmp_path / "empty.json",
+                   [{"name": "fft_switched/fwd", "us_per_call": 1.0,
+                     "config": {}}])
+    out = _run(base, empty, "--expect", "solver_*")
+    assert out.returncode == 2 and "fell off the perf trajectory" in out.stdout
+    missing = str(tmp_path / "nope.json")
+    assert _run(missing, empty, "--expect", "solver_*").returncode == 2
+    assert _run(missing, new, "--expect", "solver_*").returncode == 0

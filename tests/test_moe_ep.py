@@ -8,8 +8,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 CODE = """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.launch.mesh import ensure_host_devices
+ensure_host_devices(8)
 import jax, jax.numpy as jnp, numpy as np
 from repro.models.moe import MoEDims, init_moe, apply_moe, apply_moe_ep
 from repro.models.common import Initializer

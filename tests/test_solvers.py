@@ -1,0 +1,231 @@
+"""``repro.solvers`` subsystem: contract, per-case analytic validation,
+integrators, the x64/dtype gate, and the multi-device smoke (subprocess).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import precision
+from repro.solvers import SOLVERS, SolverState, make_solver
+from repro.solvers import integrators
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# registry + contract
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_cases():
+    assert set(SOLVERS) == {"poisson", "heat", "navier_stokes", "nls"}
+    with pytest.raises(ValueError, match="unknown solver case"):
+        make_solver("burgers", None, 8)
+
+
+def test_contract_shapes_and_state(mesh11):
+    s = make_solver("heat", mesh11, 8)
+    st = s.init_state()
+    assert isinstance(st, SolverState) and st.t == 0.0 and st.n_steps == 0
+    st2 = s.step(st)
+    assert st2.n_steps == 1 and st2.t == pytest.approx(s.dt)
+    obs = s.observables(st2)
+    assert {"amp", "mean", "energy", "t"} <= set(obs)
+    assert all(isinstance(v, float) for v in obs.values())
+    # fields keep the declared dtype through a step
+    assert all(a.dtype == jnp.float64 for a in st2.fields)
+
+
+# ---------------------------------------------------------------------------
+# per-case analytic validation (single device; 4x2 mesh in the subprocess)
+# ---------------------------------------------------------------------------
+
+def test_poisson_manufactured_solution(mesh11):
+    s = make_solver("poisson", mesh11, 16)
+    _, history = s.run(1)
+    ok, lines = s.validate(history)
+    assert ok, lines
+    assert history[-1]["err_inf"] < 1e-10  # acceptance: ~1e-10 in f64
+
+
+def test_heat_decay_rate(mesh11):
+    s = make_solver("heat", mesh11, 16, kappa=0.05, dt=2e-2, mode=(1, 2, 2))
+    _, history = s.run(4)
+    ok, lines = s.validate(history)
+    assert ok, lines
+    # decay is e^{-kappa*|m|^2 t} with |m|^2 = 9, exact per step
+    amp = history[-1]["amp"] / history[0]["amp"]
+    assert amp == pytest.approx(np.exp(-0.05 * 9 * history[-1]["t"]),
+                                rel=1e-10)
+
+
+def test_navier_stokes_taylor_green(mesh11):
+    s = make_solver("navier_stokes", mesh11, 16, nu=0.1, dt=2e-3)
+    _, history = s.run(3)
+    ok, lines = s.validate(history)
+    assert ok, lines
+    energies = [h["energy"] for h in history]
+    assert energies[-1] < energies[0]  # viscous dissipation
+    assert all(h["max_div"] < 1e-8 for h in history)
+
+
+def test_nls_norm_conservation(mesh11):
+    s = make_solver("nls", mesh11, 16, g=2.0, dt=1e-3)
+    _, history = s.run(5)
+    ok, lines = s.validate(history)
+    assert ok, lines
+    drift = abs(history[-1]["norm"] - history[0]["norm"]) / history[0]["norm"]
+    assert drift < 1e-10
+
+
+def test_solver_accepts_plan_cfg(mesh11):
+    cfg = {"backend": "jnp", "schedule": "sequential", "chunks": 1,
+           "net": "torus", "vector_mode": "parallel", "r2c_packed": False}
+    s = make_solver("navier_stokes", mesh11, 8, plan_cfg=cfg)
+    # legacy net-only config maps onto the engine axis; vector mode rides in
+    assert s.plan.comm_engine == "torus" and s.vector_mode == "parallel"
+    _, history = s.run(1)
+    ok, lines = s.validate(history)
+    assert ok, lines
+
+
+def test_multi_device_solver_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_dist_solver_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, (out.stdout[-1500:], out.stderr[-3000:])
+    assert "ALL_OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# integrators
+# ---------------------------------------------------------------------------
+
+def test_rk4_order_on_scalar_ode():
+    # ∂y = -y, exact e^{-t}; RK4 global error ~ dt^4
+    def integrate(dt, steps):
+        y = (jnp.asarray(1.0),)
+        rhs = lambda t: tuple(-a for a in t)
+        for _ in range(steps):
+            y = integrators.rk4(rhs, y, dt)
+        return float(y[0])
+
+    err1 = abs(integrate(0.1, 10) - np.exp(-1.0))
+    err2 = abs(integrate(0.05, 20) - np.exp(-1.0))
+    assert err1 < 1e-6
+    assert err2 < err1 / 10  # ~16x for a 4th-order method
+
+
+def test_ifrk4_exact_on_pure_linear():
+    decay = jnp.asarray([-5.0, -1.0, 0.0])
+    y = (jnp.ones(3), 2 * jnp.ones(3))
+    zero = lambda t: tuple(jnp.zeros_like(a) for a in t)
+    out = integrators.ifrk4(zero, decay, y, 0.7)
+    want = np.exp(-0.7 * np.array([5.0, 1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(out[0]), want, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(out[1]), 2 * want, rtol=1e-12)
+
+
+def test_ifrk4_matches_rk4_on_nonstiff():
+    # ∂y = -y + sin(y): IFRK4 with decay=-1 vs plain RK4, tiny dt
+    y0 = (jnp.asarray(0.8),)
+    nonlin = lambda t: tuple(jnp.sin(a) for a in t)
+    full = lambda t: tuple(-a + jnp.sin(a) for a in t)
+    a = integrators.ifrk4(nonlin, jnp.asarray(-1.0), y0, 1e-3)
+    b = integrators.rk4(full, y0, 1e-3)
+    assert float(a[0]) == pytest.approx(float(b[0]), abs=1e-12)
+
+
+def test_exp_decay_is_exact_propagator():
+    y = (jnp.asarray([1.0, 4.0]),)
+    out = integrators.exp_decay(jnp.asarray([-2.0, 0.5]), y, 0.25)
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               [np.exp(-0.5), 4 * np.exp(0.125)], rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# precision policy: the float64 gate
+# ---------------------------------------------------------------------------
+
+def test_require_dtype_raises_without_x64(mesh11):
+    assert precision.x64_enabled()  # conftest turned it on
+    assert precision.require_dtype("float64") == np.dtype("float64")
+    jax.config.update("jax_enable_x64", False)
+    try:
+        with pytest.raises(ValueError, match="jax_enable_x64 is off"):
+            precision.require_dtype("float64")
+        # explicit demotion is allowed
+        assert precision.require_dtype(
+            "float64", allow_downcast=True) == np.dtype("float32")
+        # ...and the gate fires from plan/solver construction too
+        from repro.core.decomposition import PencilGrid
+        from repro.core.fft3d import FFT3DPlan
+        grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+        with pytest.raises(ValueError, match="FFT3DPlan"):
+            FFT3DPlan(n=(8, 8, 8), grid=grid, dtype="float64")
+        with pytest.raises(ValueError, match="solvers.heat"):
+            make_solver("heat", mesh11, 8, dtype="float64")
+        # the step-tuner must refuse too — never tune f32 under an f64 label
+        from repro.tuning.solver import autotune_solver_step
+        with pytest.raises(ValueError, match="autotune_solver_step"):
+            autotune_solver_step(mesh11, "heat", 8, dtype="float64")
+        assert precision.default_real_dtype() == jnp.float32
+    finally:
+        jax.config.update("jax_enable_x64", True)
+    assert precision.default_real_dtype() == jnp.float64
+
+
+def test_solver_explicit_float32(mesh11):
+    s = make_solver("heat", mesh11, 8, dtype="float32")
+    assert s.dtype == np.dtype("float32") and s.plan.dtype == "float32"
+    st = s.step(s.init_state())
+    assert all(a.dtype == jnp.float32 for a in st.fields)
+
+
+# ---------------------------------------------------------------------------
+# solver-step tuning objective
+# ---------------------------------------------------------------------------
+
+def test_autotune_solver_step_caches_per_case(tmp_path, mesh11):
+    from repro.tuning import problem_fingerprint
+    from repro.tuning.solver import autotune_solver_step
+
+    cache = str(tmp_path / "plans.json")
+    res = autotune_solver_step(mesh11, "heat", 8, dtype="float64",
+                               cache_path=cache, max_candidates=1, iters=1)
+    assert not res.cache_hit and res.key.startswith("solver_heat_")
+    assert res.rows and res.best_us > 0
+    hit = autotune_solver_step(mesh11, "heat", 8, dtype="float64",
+                               cache_path=cache, max_candidates=1, iters=1)
+    assert hit.cache_hit and hit.best_config == res.best_config
+
+    # the case and its physics params are part of the fingerprint
+    k1, p1 = problem_fingerprint(8, 1, 1, real=True, case="heat",
+                                 solver_params={"dt": 1e-2})
+    k2, _ = problem_fingerprint(8, 1, 1, real=True, case="poisson",
+                                solver_params={"dt": 1e-2})
+    k3, _ = problem_fingerprint(8, 1, 1, real=True, case="heat",
+                                solver_params={"dt": 5e-3})
+    k4, _ = problem_fingerprint(8, 1, 1, real=True)
+    assert len({k1, k2, k3, k4}) == 4
+    assert p1["case"] == "heat" and "case" not in \
+        problem_fingerprint(8, 1, 1, real=True)[1]
+
+    with pytest.raises(ValueError, match="unknown solver case"):
+        autotune_solver_step(mesh11, "nope", 8, cache_path=cache)
+    with pytest.raises(ValueError, match="iters"):
+        autotune_solver_step(mesh11, "heat", 8, cache_path=cache, iters=0)

@@ -1,0 +1,203 @@
+"""``core.spectral`` operators against NumPy references.
+
+Until now these were exercised only indirectly through the Navier–Stokes
+example; here each operator is checked directly on a single-rank grid
+(pu=pv=1, empty axis tuples — runs outside shard_map, like
+``test_single_device_local_matches_fftn``) where the local slab is the
+whole spectral box.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import precision
+from repro.core import spectral as sp
+from repro.core.decomposition import PencilGrid
+from repro.core.fft3d import FFT3DPlan, fft3d_local, ifft3d_local
+
+N = 16
+
+
+def _plan(real=False):
+    grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    return FFT3DPlan(n=(N, N, N), grid=grid, real=real)
+
+
+def _spectral(g):
+    """(re, im) planar Z-pencil spectrum of a complex numpy box."""
+    k = np.fft.fftn(g, axes=(0, 1, 2)).transpose(2, 0, 1)
+    return jnp.asarray(k.real), jnp.asarray(k.imag)
+
+
+def _np_wavenumbers():
+    k = np.fft.fftfreq(N, 1.0 / N)  # integer wavenumbers, fftfreq order
+    return np.meshgrid(k, k, k, indexing="ij")  # (kx, ky, kz) natural order
+
+
+def test_local_wavenumbers_match_fftfreq():
+    kx, ky, kz = sp.local_wavenumbers(_plan())
+    want = np.fft.fftfreq(N, 1.0 / N)
+    np.testing.assert_array_equal(np.asarray(kx)[:, 0, 0], want)
+    np.testing.assert_array_equal(np.asarray(ky)[0, :, 0], want)
+    np.testing.assert_array_equal(np.asarray(kz)[0, 0, :], want)
+    # r2c: kx is the non-negative half (padded grid is trivial at pu=1)
+    kxr, _, _ = sp.local_wavenumbers(_plan(real=True))
+    np.testing.assert_array_equal(np.asarray(kxr)[:, 0, 0], np.arange(N // 2 + 1))
+
+
+def test_dealias_mask_two_thirds_rule():
+    mask = np.asarray(sp.dealias_mask(_plan()))
+    KX, KY, KZ = _np_wavenumbers()
+    want = ((np.abs(KX) < N / 3.0) & (np.abs(KY) < N / 3.0)
+            & (np.abs(KZ) < N / 3.0)).astype(mask.dtype)
+    np.testing.assert_array_equal(mask, want)
+
+
+def test_poisson_solve_matches_numpy():
+    rng = np.random.RandomState(0)
+    f = rng.randn(N, N, N)
+    fr, fi = _spectral(f.astype(np.complex128))
+    pr, pi = sp.poisson_solve(_plan(), fr, fi)
+    KX, KY, KZ = _np_wavenumbers()
+    k2 = KX ** 2 + KY ** 2 + KZ ** 2
+    fk = np.fft.fftn(f, axes=(0, 1, 2)).transpose(2, 0, 1)
+    want = np.where(k2 > 0, -fk / np.where(k2 > 0, k2, 1.0), 0.0)
+    got = np.asarray(pr) + 1j * np.asarray(pi)
+    assert np.linalg.norm(got - want) / np.linalg.norm(want) < 1e-12
+    assert got[0, 0, 0] == 0.0  # zero-mean gauge
+
+
+def test_invert_laplacian_roundtrip_and_mean():
+    # manufactured: φ = sin(x)cos(2y)sin(3z), f = ∇²φ = −14 φ
+    x = np.linspace(0, 2 * np.pi, N, endpoint=False)
+    Y, Z, X = np.meshgrid(x, x, x, indexing="ij")
+    phi = np.sin(X) * np.cos(2 * Y) * np.sin(3 * Z)
+    f = -14.0 * phi
+    plan = _plan(real=True)
+    fr, fi = fft3d_local(plan, jnp.asarray(f))
+    pr, pi = sp.invert_laplacian(plan, fr, fi, mean=0.0)
+    got = np.asarray(ifft3d_local(plan, pr, pi))
+    assert np.max(np.abs(got - phi)) < 1e-12
+    # non-zero gauge: same solve shifted by a constant mean
+    pr2, pi2 = sp.invert_laplacian(plan, fr, fi, mean=2.5)
+    got2 = np.asarray(ifft3d_local(plan, pr2, pi2))
+    assert np.max(np.abs(got2 - (phi + 2.5))) < 1e-12
+    assert abs(np.mean(got2) - 2.5) < 1e-12
+
+
+def test_gradient_and_curl_match_numpy():
+    rng = np.random.RandomState(1)
+    g = rng.randn(N, N, N) + 1j * rng.randn(N, N, N)
+    fr, fi = _spectral(g)
+    KX, KY, KZ = _np_wavenumbers()
+    ks = [k.transpose(0, 1, 2) for k in (KX, KY, KZ)]
+    fk = np.fft.fftn(g, axes=(0, 1, 2)).transpose(2, 0, 1)
+    for (gr, gi), k in zip(sp.gradient(_plan(), fr, fi), ks):
+        got = np.asarray(gr) + 1j * np.asarray(gi)
+        np.testing.assert_allclose(got, 1j * k * fk, atol=1e-9)
+
+    v = rng.randn(3, N, N, N)
+    vk = np.stack([np.fft.fftn(v[c]).transpose(2, 0, 1) for c in range(3)])
+    vr = jnp.asarray(vk.real)
+    vi = jnp.asarray(vk.imag)
+    wr, wi = sp.curl(_plan(), vr, vi)
+    got = np.asarray(wr) + 1j * np.asarray(wi)
+    want = 1j * np.stack([ks[1] * vk[2] - ks[2] * vk[1],
+                          ks[2] * vk[0] - ks[0] * vk[2],
+                          ks[0] * vk[1] - ks[1] * vk[0]])
+    np.testing.assert_allclose(got, want, atol=1e-9)
+
+
+def test_project_divergence_free_matches_numpy():
+    rng = np.random.RandomState(2)
+    v = rng.randn(3, N, N, N)
+    vk = np.stack([np.fft.fftn(v[c]).transpose(2, 0, 1) for c in range(3)])
+    pr, pi = sp.project_divergence_free(
+        _plan(), jnp.asarray(vk.real), jnp.asarray(vk.imag))
+    got = np.asarray(pr) + 1j * np.asarray(pi)
+    KX, KY, KZ = _np_wavenumbers()
+    ks = np.stack([KX, KY, KZ])
+    k2 = (ks ** 2).sum(0)
+    dot = (ks * vk).sum(0)
+    want = vk - ks * np.where(k2 > 0, dot / np.where(k2 > 0, k2, 1.0), 0.0)
+    np.testing.assert_allclose(got, want, atol=1e-9)
+    # idempotent and annihilates divergence
+    div = (ks * got).sum(0)
+    assert np.max(np.abs(div)) < 1e-9
+    pr2, pi2 = sp.project_divergence_free(_plan(), pr, pi)
+    np.testing.assert_allclose(np.asarray(pr2), np.asarray(pr), atol=1e-9)
+
+
+def test_energy_spectrum_total_is_parseval_sum():
+    rng = np.random.RandomState(3)
+    v = rng.randn(3, N, N, N)
+    vk = np.stack([np.fft.fftn(v[c]).transpose(2, 0, 1) for c in range(3)])
+    e = sp.energy_spectrum_total(
+        _plan(), jnp.asarray(vk.real), jnp.asarray(vk.imag))
+    want = float(np.sum(np.abs(vk) ** 2))
+    assert abs(float(e) - want) / want < 1e-12
+    # Parseval: Σ|v̂|² = N³ Σ|v|²
+    assert abs(float(e) - N ** 3 * float(np.sum(v ** 2))) / want < 1e-12
+
+
+def test_grid_reductions_trivial_on_single_rank():
+    plan = _plan()
+    assert float(sp.grid_sum(plan, jnp.asarray(3.0))) == 3.0
+    assert float(sp.grid_max(plan, jnp.asarray(4.0))) == 4.0
+
+
+def test_spectral_dtype_follows_precision_policy():
+    # conftest enables x64, so the default must actually be float64
+    assert precision.x64_enabled()
+    kx, _, _ = sp.local_wavenumbers(_plan())
+    assert kx.dtype == jnp.float64
+    assert sp.dealias_mask(_plan()).dtype == jnp.float64
+
+
+def test_pad_mask_zeroes_r2c_padding():
+    grid = PencilGrid(pu=4, pv=2)
+    plan = FFT3DPlan(n=(16, 16, 16), grid=grid, real=True)
+    # padded kx = 12 bins, keep = 9: mask kills the top 3 (they live in the
+    # last rank's slab; single-rank view here covers the full padded axis)
+    full = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    plan1 = FFT3DPlan(n=(16, 16, 16), grid=full, real=True)
+    mask = np.asarray(sp.pad_mask(plan1))[:, 0, 0]
+    assert mask.shape[0] == plan1.kx == 9  # pu=1: keep == padded
+    assert mask.all()
+    assert plan.kx == 12 and plan.kx_keep == 9
+
+
+def test_rotational_nonlinear_term_is_dealiased_and_solenoidal():
+    plan = _plan(real=True)
+    x = np.linspace(0, 2 * np.pi, N, endpoint=False)
+    Y, Z, X = np.meshgrid(x, x, x, indexing="ij")
+    u = np.stack([np.cos(X) * np.sin(Y) * np.sin(Z),
+                  -np.sin(X) * np.cos(Y) * np.sin(Z),
+                  np.zeros((N, N, N))])
+    from repro.core.fft3d import fft3d_vector_local
+    vr, vi = fft3d_vector_local(plan, jnp.asarray(u), None)
+    nr, ni = sp.rotational_nonlinear_term(plan, vr, vi)
+    # projected: k·N = 0
+    assert float(sp.max_divergence(plan, nr, ni)) < 1e-8
+    # dealiased: nothing above the 2/3 cutoff
+    mask = np.asarray(sp.dealias_mask(plan))
+    assert np.all(np.abs(np.asarray(nr)) * (1 - mask) == 0)
+    assert np.all(np.abs(np.asarray(ni)) * (1 - mask) == 0)
+
+
+@pytest.mark.parametrize("mean", [0.0, 1.5])
+def test_invert_laplacian_mean_modes(mean):
+    plan = _plan(real=True)
+    rng = np.random.RandomState(4)
+    f = rng.randn(N, N, N)
+    f -= f.mean()  # solvable source
+    fr, fi = fft3d_local(plan, jnp.asarray(f))
+    pr, pi = sp.invert_laplacian(plan, fr, fi, mean=mean)
+    phi = np.asarray(ifft3d_local(plan, pr, pi))
+    assert abs(phi.mean() - mean) < 1e-12
+    # residual: ∇²φ = f away from the mean mode
+    lap = np.fft.ifftn(
+        -(sum(k ** 2 for k in _np_wavenumbers()))
+        * np.fft.fftn(phi - mean)).real
+    assert np.max(np.abs(lap - f)) < 1e-9
