@@ -89,12 +89,14 @@ def main(argv=None) -> int:
                     help="row-name glob to exclude from the gate "
                          "(repeatable; e.g. 'autotune/*' for low-iteration "
                          "sweep diagnostics too noisy to gate on)")
-    ap.add_argument("--expect", action="append", default=[], metavar="GLOB",
-                    help="row-name glob that must match at least one "
-                         "measured row of the NEW document (repeatable; "
-                         "e.g. 'solver_*' keeps the solver workloads on "
-                         "the perf trajectory — a bench that silently "
-                         "stops emitting them fails here, exit 2)")
+    ap.add_argument("--expect", action="append", default=[], metavar="GLOBS",
+                    help="comma-separated row-name globs, each of which "
+                         "must match at least one measured row of the NEW "
+                         "document (repeatable; e.g. "
+                         "'fft_overlap_ring*,fft_pallas_ring*' keeps the "
+                         "engine workloads on the perf trajectory — a "
+                         "bench that silently stops emitting any one of "
+                         "them fails here, exit 2)")
     ap.add_argument("--min-us", type=float, default=0.0,
                     help="gate only rows whose baseline us_per_call is at "
                          "least this (sub-threshold timings are scheduler "
@@ -115,8 +117,11 @@ def main(argv=None) -> int:
         return 2
 
     # --expect guards the new document alone, so it binds even on the first
-    # run when there is no baseline to diff against
-    for pat in args.expect:
+    # run when there is no baseline to diff against; each comma-separated
+    # glob must be satisfied independently
+    expected = [g.strip() for arg in args.expect for g in arg.split(",")
+                if g.strip()]
+    for pat in expected:
         if not any(fnmatch.fnmatch(name, pat) for name in new):
             print(f"bench-compare: FAIL — no measured row in {args.new!r} "
                   f"matches expected glob {pat!r} (workload fell off the "

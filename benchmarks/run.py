@@ -262,11 +262,19 @@ BENCHES = {
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated benchmark names; known: "
+                         f"{','.join(sorted(BENCHES))}")
     ap.add_argument("--json", dest="json_path", default="",
                     help="also write rows as a bench-fft/v1 JSON document")
     args = ap.parse_args()
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        # a typo'd --only must fail loudly, not emit an empty document that
+        # the CI perf gate would then wave through
+        ap.error(f"unknown benchmark name(s) {', '.join(unknown)}; "
+                 f"known: {', '.join(sorted(BENCHES))}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()

@@ -4,6 +4,11 @@ from repro.configs.base import (ArchConfig, MLACfg, MambaCfg, MoECfg,
                                 SHAPES, ShapeCfg, shape_applicable,
                                 count_params, count_active_params)
 
+__all__ = ["ArchConfig", "MLACfg", "MambaCfg", "MoECfg", "SHAPES",
+           "ShapeCfg", "shape_applicable", "count_params",
+           "count_active_params", "get_config", "REGISTRY",
+           "SMOKE_REGISTRY", "ARCH_IDS"]
+
 from repro.configs import (rwkv6_3b, llava_next_34b, smollm_360m, deepseek_7b,
                            qwen1_5_4b, gemma_2b, deepseek_v2_lite_16b,
                            qwen3_moe_30b_a3b, whisper_small,

@@ -4,7 +4,7 @@ The paper's central architectural claim is that the fold communications
 (hardware tasks C and G) must be *pipelined against* the butterfly engines,
 not barriered between phases (Fig. 4.3): the NIC streams blocks while the
 FFT engines keep computing. This module makes that scheduling decision a
-first-class, pluggable object with three implementations:
+first-class, pluggable object with four implementations:
 
 * ``SwitchedEngine``    — one ``lax.all_to_all`` per fold (the 2D switched
   fabric of Fig. 5.10, Eq. 5.5). Overlap across ``chunks`` slabs is left to
@@ -16,6 +16,12 @@ first-class, pluggable object with three implementations:
   emitted between the rounds, so compute and ``lax.ppermute`` interleave at
   block granularity instead of phase granularity — the TPU rendition of the
   paper's task C/G ↔ engine overlap.
+* ``PallasRingEngine``  — the same ring schedule as a Pallas async-RDMA
+  kernel (``kernels.ring_rdma``): each round *starts* the next block's
+  neighbor DMA, computes, then waits — the overlap is explicit in the
+  kernel (the paper's NIC offload) instead of hoped-for from XLA's
+  scheduler. Off-TPU it runs the kernel's interpret-mode fallback
+  (ppermute wire hop + Pallas NIC staging), bit-exact vs ``torus``.
 
 Engines expose two surfaces:
 
@@ -82,14 +88,21 @@ def _register(cls):
     return cls
 
 
-def make_engine(name: str, grid, chunks: int = 1) -> "TransposeEngine":
-    """Instantiate a registered engine for a ``PencilGrid``."""
+def make_engine(name: str, grid, chunks: int = 1, *, backend: str = "jnp",
+                real: bool = False) -> "TransposeEngine":
+    """Instantiate a registered engine for a ``PencilGrid``.
+
+    ``backend``/``real`` describe the butterfly compute the engine will be
+    asked to schedule (the ``FFT3DPlan`` knobs): engines that can *fuse*
+    compute into their communication kernel (``pallas_ring`` on TPU) use
+    them to decide when in-kernel butterflies reproduce the phase compute.
+    """
     try:
         cls = ENGINES[name]
     except KeyError:
         raise ValueError(
             f"unknown comm engine {name!r}; have {sorted(ENGINES)}") from None
-    return cls(grid, chunks=chunks)
+    return cls(grid, chunks=chunks, backend=backend, real=real)
 
 
 def engine_fabric(name: str) -> str:
@@ -112,9 +125,12 @@ class TransposeEngine:
     mode = "switched"    # wire format of the shared block-exchange primitives
     fabric = "switched"  # §5.5 network the engine maps onto
 
-    def __init__(self, grid, chunks: int = 1):
+    def __init__(self, grid, chunks: int = 1, *, backend: str = "jnp",
+                 real: bool = False):
         self.grid = grid
         self.chunks = max(int(chunks), 1)
+        self.backend = backend   # butterfly engine the schedule will run
+        self.real = real         # r2c data model (X phase is not plain c2c)
 
     # ---- relayout primitives (pure data movement) ------------------------
     def fold_xy(self, a):
@@ -189,21 +205,6 @@ _FOLD_GEOM = {"xy": (-1, -3, tr._swap_last3), "yz": (-1, -2, tr._swap_last2)}
 _UNFOLD_GEOM = {"xy": (tr._swap_last3, -3, -1), "yz": (tr._swap_last2, -2, -1)}
 
 
-def _ring_pair(axes, ar, ai, *, split_axis: int, concat_axis: int,
-               interleave=None):
-    """Tiled ring all-to-all of a planar (re, im) pair with fused compute.
-
-    A thin wrapper over ``transpose.ring_exchange`` — the exact primitive the
-    plain torus fold uses, so the overlapped ring's relayout is the other
-    engines' by construction. ``interleave()`` is the fused butterfly work
-    (see ``ring_exchange``). Returns ``((re, im), interleave_result)``.
-    """
-    outs, follow = tr.ring_exchange((ar, ai), axes, split_axis=split_axis,
-                                    concat_axis=concat_axis,
-                                    interleave=interleave)
-    return (outs[0], outs[1]), follow
-
-
 @_register
 class OverlapRingEngine(TorusEngine):
     """The ring with the 1D FFT fused into it (paper Fig. 4.3, tasks C/G).
@@ -213,14 +214,67 @@ class OverlapRingEngine(TorusEngine):
     slab i+1's butterflies are emitted between slab i's ppermute rounds.
     Inverse: slab i−1's butterflies (on blocks already received) run between
     slab i's rounds — "ship one block while the previously-received block's
-    butterflies run". The relayout itself is the TorusEngine ring, so results
-    match the other engines' (same blocks, same order).
+    butterflies run". The relayout itself is the shared ring primitive, so
+    results match the other engines' (same blocks, same order).
+
+    Every exchange — the fold/unfold relayout primitives *and* the
+    overlapped phases — goes through ``self._exchange``, the one hook a
+    subclass overrides to swap the transport (``PallasRingEngine`` routes
+    it into the async-RDMA kernel).
     """
 
     name = "overlap_ring"
     mode = "torus"
     fabric = "torus"
 
+    # ---- the transport hook ----------------------------------------------
+    def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,
+                  interleave=None):
+        """Tiled ring all-to-all of same-shaped ``arrs`` (+ fused thunk)."""
+        return tr.ring_exchange(arrs, axes, split_axis=split_axis,
+                                concat_axis=concat_axis, interleave=interleave)
+
+    # ---- relayout primitives routed through the transport hook -----------
+    # (folds over a 1-rank dimension never communicate: defer to the base
+    # leaf methods, which degenerate to pure local transposes)
+    def _fold_ring(self, which: str, a):
+        split_off, concat_off, post = _FOLD_GEOM[which]
+        d = a.ndim
+        outs, _ = self._exchange((a,), self._axes(which),
+                                 split_axis=d + split_off,
+                                 concat_axis=d + concat_off)
+        return post(outs[0])
+
+    def _unfold_ring(self, which: str, a):
+        pre, split_off, concat_off = _UNFOLD_GEOM[which]
+        b = pre(a)
+        d = b.ndim
+        outs, _ = self._exchange((b,), self._axes(which),
+                                 split_axis=d + split_off,
+                                 concat_axis=d + concat_off)
+        return outs[0]
+
+    def fold_xy(self, a):
+        if self._ranks("xy") <= 1:
+            return super().fold_xy(a)
+        return self._fold_ring("xy", a)
+
+    def fold_yz(self, a):
+        if self._ranks("yz") <= 1:
+            return super().fold_yz(a)
+        return self._fold_ring("yz", a)
+
+    def unfold_xy(self, a):
+        if self._ranks("xy") <= 1:
+            return super().unfold_xy(a)
+        return self._unfold_ring("xy", a)
+
+    def unfold_yz(self, a):
+        if self._ranks("yz") <= 1:
+            return super().unfold_yz(a)
+        return self._unfold_ring("yz", a)
+
+    # ---- overlapped phase schedules --------------------------------------
     def _n_slabs(self, size: int, ranks: int) -> int:
         ns = self.chunks if self.chunks > 1 else max(ranks, 2)
         ns = min(ns, size)
@@ -249,8 +303,8 @@ class OverlapRingEngine(TorusEngine):
         for i in range(ns):
             nxt = (lambda j=i + 1: compute(*slab(j))) if i + 1 < ns else None
             d = cur[0].ndim
-            (fr, fi), follow = _ring_pair(
-                axes, cur[0], cur[1], split_axis=d + split_off,
+            (fr, fi), follow = self._exchange(
+                (cur[0], cur[1]), axes, split_axis=d + split_off,
                 concat_axis=d + concat_off, interleave=nxt)
             outs.append((post(fr), post(fi)))
             cur = follow
@@ -277,8 +331,8 @@ class OverlapRingEngine(TorusEngine):
             br, bi = pre(sl[0]), pre(sl[1])
             d = br.ndim
             thunk = (lambda c=prev: compute(*c)) if prev is not None else None
-            (ur, ui), done = _ring_pair(
-                axes, br, bi, split_axis=d + split_off,
+            (ur, ui), done = self._exchange(
+                (br, bi), axes, split_axis=d + split_off,
                 concat_axis=d + concat_off, interleave=thunk)
             if done is not None:
                 outs.append(done)
@@ -288,4 +342,107 @@ class OverlapRingEngine(TorusEngine):
                      for k in range(len(outs[0])))
 
 
-ENGINE_NAMES = tuple(ENGINES)  # ("switched", "torus", "overlap_ring")
+# ---------------------------------------------------------------------------
+# pallas ring: the same schedule as an async-RDMA kernel (the paper's NIC)
+# ---------------------------------------------------------------------------
+
+@_register
+class PallasRingEngine(OverlapRingEngine):
+    """The overlapped ring with its transport lowered to the Pallas
+    async-RDMA kernel of ``kernels.ring_rdma`` (paper §4.2's NIC engine).
+
+    On TPU every exchange is one fused kernel of P−1 double-buffered
+    ``make_async_remote_copy`` rounds — and when the phase butterflies are
+    the radix-2 c2c engine (``backend="pallas"``, complex data), they run
+    *inside* the kernel between a round's ``start`` and ``wait``, making
+    the send/compute overlap explicit rather than scheduler-dependent.
+    Off-TPU the kernel's interpret fallback keeps the identical schedule
+    and block order (ppermute wire hop + Pallas NIC staging kernels), so
+    the engine is bit-exact vs ``torus`` everywhere it runs.
+    """
+
+    name = "pallas_ring"
+    mode = "torus"
+    fabric = "torus"
+
+    def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,
+                  interleave=None):
+        from repro.kernels import ring_rdma
+        return ring_rdma.ring_exchange_rdma(
+            arrs, axes, split_axis=split_axis, concat_axis=concat_axis,
+            interleave=interleave)
+
+    # ---- in-kernel butterfly fusion (TPU only) ---------------------------
+    def _fusable(self, fold: str, pair) -> bool:
+        """When in-kernel radix-2 butterflies reproduce the phase compute:
+        the plan's engine is the Pallas radix-2 kernel and the phase is a
+        plain c2c transform (the r2c X phase pads/packs — not fusable)."""
+        from repro.kernels import ring_rdma
+        return (ring_rdma.use_rdma() and self.backend == "pallas"
+                and (fold == "yz" or not self.real)
+                and len(self._axes(fold)) == 1
+                and ring_rdma.fusable_payload(pair))
+
+    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        from repro.kernels import ring_rdma
+        p = self._ranks(fold)
+        if p <= 1 or not self._fusable(fold, tuple(arrs[:2])):
+            return super().fold_phase(compute, arrs, fold=fold,
+                                      slab_axis=slab_axis)
+        axis = slab_axis % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        ns = self._n_slabs(size, p)
+        step = size // ns
+        split_off, concat_off, post = _FOLD_GEOM[fold]
+        axes = self._axes(fold)
+
+        def slab(i):
+            return tuple(lax.slice_in_dim(a, i * step, (i + 1) * step,
+                                          axis=axis) for a in arrs)
+
+        cur = compute(*slab(0))
+        outs = []
+        for i in range(ns):
+            payload = slab(i + 1) if i + 1 < ns else None
+            d = cur[0].ndim
+            ex, follow = ring_rdma.ring_exchange_rdma(
+                (cur[0], cur[1]), axes, split_axis=d + split_off,
+                concat_axis=d + concat_off, payload=payload)
+            outs.append((post(ex[0]), post(ex[1])))
+            cur = follow
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(2))
+
+    def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        from repro.kernels import ring_rdma
+        p = self._ranks(fold)
+        if p <= 1 or not self._fusable(fold, tuple(arrs[:2])):
+            return super().unfold_phase(compute, arrs, fold=fold,
+                                        slab_axis=slab_axis)
+        axis = slab_axis % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        ns = self._n_slabs(size, p)
+        step = size // ns
+        pre, split_off, concat_off = _UNFOLD_GEOM[fold]
+        axes = self._axes(fold)
+
+        outs = []
+        prev = None
+        for i in range(ns):
+            sl = [lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis)
+                  for a in arrs]
+            br, bi = pre(sl[0]), pre(sl[1])
+            d = br.ndim
+            ex, done = ring_rdma.ring_exchange_rdma(
+                (br, bi), axes, split_axis=d + split_off,
+                concat_axis=d + concat_off, payload=prev, inverse=True)
+            if done is not None:
+                outs.append(done)
+            prev = (ex[0], ex[1])
+        outs.append(compute(*prev))
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(len(outs[0])))
+
+
+ENGINE_NAMES = tuple(ENGINES)
+# ("switched", "torus", "overlap_ring", "pallas_ring")

@@ -17,10 +17,13 @@ FFT → Y↔Z fold → local Z FFT, with the task-organization models of Chapter
 
 Communication: every fold phase goes through a pluggable **TransposeEngine**
 (``core.comm``): ``comm_engine="switched"`` (single all-to-all, Fig. 5.10),
-``"torus"`` (ppermute ring, Fig. 5.9) or ``"overlap_ring"`` (the ring with
+``"torus"`` (ppermute ring, Fig. 5.9), ``"overlap_ring"`` (the ring with
 the 1D FFT fused between its rounds — block-granular compute/communication
-overlap, the paper's task C/G ↔ engine pipelining of Fig. 4.3). ``net`` is
-the derived §5.5 fabric ("switched" | "torus") the chosen engine runs on.
+overlap, the paper's task C/G ↔ engine pipelining of Fig. 4.3) or
+``"pallas_ring"`` (the same schedule as a Pallas async-RDMA kernel with
+explicit double-buffered neighbor DMA — the paper's NIC offload; interpret
+mode off-TPU). ``net`` is the derived §5.5 fabric ("switched" | "torus")
+the chosen engine runs on.
 
 Real-to-complex: the X phase uses the general complex engine on real input
 and keeps N/2+1 bins (padded to a Pu-divisible length), exactly the paper's
@@ -82,7 +85,9 @@ class FFT3DPlan:
 
     def engine(self) -> comm.TransposeEngine:
         """The TransposeEngine instance scheduling this plan's fold phases."""
-        return comm.make_engine(self.comm_engine, self.grid, chunks=self.chunks)
+        return comm.make_engine(self.comm_engine, self.grid,
+                                chunks=self.chunks, backend=self.backend,
+                                real=self.real)
 
     @property
     def kx(self) -> int:
@@ -214,8 +219,8 @@ def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
     ``(Kx, Ny, Nz)`` sharded the same way.
 
     ``comm_engine`` selects the TransposeEngine scheduling the fold phases
-    (``"switched"``/``"torus"``/``"overlap_ring"``); when empty, the engine
-    named by the legacy ``net`` knob is used.
+    (``"switched"``/``"torus"``/``"overlap_ring"``/``"pallas_ring"``); when
+    empty, the engine named by the legacy ``net`` knob is used.
 
     ``autotune=True`` ignores the explicit ``backend/schedule/chunks/
     comm_engine/vector_mode/r2c_packed`` arguments and instead sweeps the

@@ -226,44 +226,43 @@ BACKEND_COMPUTE_WEIGHT = {"jnp": 1.0, "mxu": 3.0, "ref": 10.0, "pallas": 30.0}
 #: Which §5.5 fabric each TransposeEngine's traffic is priced on (kept in
 #: sync with ``core.comm`` — validated by tests to avoid a jax import here).
 ENGINE_FABRIC = {"switched": "switched", "torus": "torus",
-                 "overlap_ring": "torus"}
+                 "overlap_ring": "torus", "pallas_ring": "torus"}
 
 
-def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
-                          schedule: str = "sequential", chunks: int = 1,
-                          net: str = "switched", comm_engine: str = "",
-                          mu: int = 1,
-                          r2c_packed: bool = False, r: int = 4,
-                          f_hz: float = 180e6,
-                          link_bytes_per_s: float = 25e9,
-                          s: int = S_BYTES) -> float:
-    """Analytic time estimate for one ``FFT3DPlan`` configuration.
+#: Exposed per-message overhead (seconds, nominal FPGA) each engine pays on
+#: its critical path — the §4.2 DMA/NIC setup latency (l_comm) wearing the
+#: engine's clothes: the switched fabric dispatches one all-to-all per slab;
+#: the XLA rings dispatch one ppermute per ring round; the Pallas RDMA ring
+#: posts its sends from inside the kernel (a NIC doorbell, no per-round XLA
+#: dispatch), which is the whole point of the paper's NIC offload.
+ENGINE_MESSAGE_OVERHEAD_S = {
+    "switched": 2e-6,
+    "torus": 2e-6,
+    "overlap_ring": 2e-6,
+    "pallas_ring": 0.5e-6,
+}
 
-    This is the paper's model wearing an autotuner hat: compute follows the
-    task-organization forms of Ch. 4 (Eq. 4.14 sequential / Eq. 4.15
-    pipelined, as tabulated in §5.6), the per-fold traffic is V′ of Eq. 3.4,
-    and the torus penalty is the Eq. 5.5/5.6 required-bandwidth ratio
-    (B_torus/B_switched = √P/2 → ×q/2 time per fold over a q-rank dimension).
 
-    ``comm_engine`` makes the estimate overlap-aware: serial engines
-    (``switched``/``torus``) pay compute + communication back-to-back per
-    phase (only the ``pipelined`` schedule's slab overlap helps them), while
-    ``overlap_ring`` interleaves butterflies with every ppermute round, so
-    the longer of the two streams dominates — ``max(T_comp, T_net)`` plus a
-    pipeline-fill term that shrinks with the ring-round count (the Fig. 4.3
-    steady-state timeline). Absolute numbers are nominal-FPGA seconds; the
-    autotuner only uses the *ordering* to prune the sweep.
-    """
+def fold_messages(q: int, fabric: str) -> int:
+    """Messages one rank issues for one fold over a ``q``-rank dimension:
+    one tiled all-to-all on the switched fabric, q−1 ring rounds on the
+    torus (Fig. 5.9/5.10). Zero when the fold never communicates."""
+    if q <= 1:
+        return 0
+    return 1 if fabric == "switched" else q - 1
+
+
+def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
+                      schedule: str, mu: int, r2c_packed: bool, r: int,
+                      f_hz: float, link_bytes_per_s: float,
+                      s: int) -> tuple[float, float]:
+    """(T_comp, T_net) of one transform: Eq. 4.14/4.15 compute and the
+    per-fold V′ traffic of Eq. 3.4 with the Eq. 5.5/5.6 fabric penalty.
+    Shared by :func:`estimate_plan_seconds` and :func:`optimal_chunks`."""
     nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
-    engine = comm_engine or net
-    if engine not in ENGINE_FABRIC:
-        raise ValueError(f"unknown comm engine {engine!r}; "
-                         f"have {sorted(ENGINE_FABRIC)}")
-    fabric = ENGINE_FABRIC[engine]
     p = max(pu, 1) * max(pv, 1)
     mu = max(mu, 1)
     vol = nx * ny * nz
-    k = max(chunks, 1)
     if schedule == "pipelined":
         # Eq. 4.15 with k=1: the k in the paper is *hardware engine
         # replication* (doubled X engines); our software slab count adds no
@@ -285,23 +284,139 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
             t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
         return t
 
-    t_net = fold_seconds(pu) + fold_seconds(pv)
-    if engine == "overlap_ring" and (pu > 1 or pv > 1):
-        # block-granular overlap: every ppermute round's latency hides under
+    return t_comp, fold_seconds(pu) + fold_seconds(pv)
+
+
+def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
+                          schedule: str = "sequential", chunks: int = 1,
+                          net: str = "switched", comm_engine: str = "",
+                          mu: int = 1,
+                          r2c_packed: bool = False, r: int = 4,
+                          f_hz: float = 180e6,
+                          link_bytes_per_s: float = 25e9,
+                          s: int = S_BYTES) -> float:
+    """Analytic time estimate for one ``FFT3DPlan`` configuration.
+
+    This is the paper's model wearing an autotuner hat: compute follows the
+    task-organization forms of Ch. 4 (Eq. 4.14 sequential / Eq. 4.15
+    pipelined, as tabulated in §5.6), the per-fold traffic is V′ of Eq. 3.4,
+    and the torus penalty is the Eq. 5.5/5.6 required-bandwidth ratio
+    (B_torus/B_switched = √P/2 → ×q/2 time per fold over a q-rank dimension).
+
+    ``comm_engine`` makes the estimate overlap- and overhead-aware: serial
+    engines (``switched``/``torus``) pay compute + communication
+    back-to-back per phase (only the ``pipelined`` schedule's slab overlap
+    helps them) plus one exposed message dispatch per slab exchange; the
+    overlapped rings interleave butterflies with every ring round, so the
+    longer of the two streams dominates — ``max(T_comp, T_net)`` plus a
+    pipeline-fill term that shrinks with the slab count and the steady-state
+    ring-round dispatches. ``pallas_ring`` is the same timeline with its
+    sends posted by the kernel itself: half the exposed fill (double
+    buffering) and the NIC-doorbell message cost of
+    ``ENGINE_MESSAGE_OVERHEAD_S``. Absolute numbers are nominal-FPGA
+    seconds; the autotuner only uses the *ordering* to prune the sweep.
+    """
+    engine = comm_engine or net
+    if engine not in ENGINE_FABRIC:
+        raise ValueError(f"unknown comm engine {engine!r}; "
+                         f"have {sorted(ENGINE_FABRIC)}")
+    fabric = ENGINE_FABRIC[engine]
+    k = max(chunks, 1)
+    t_comp, t_net = _comp_net_seconds(
+        n, pu, pv, fabric=fabric, backend=backend, schedule=schedule, mu=mu,
+        r2c_packed=r2c_packed, r=r, f_hz=f_hz,
+        link_bytes_per_s=link_bytes_per_s, s=s)
+    t_msg = ENGINE_MESSAGE_OVERHEAD_S[engine]
+    msgs = fold_messages(pu, fabric) + fold_messages(pv, fabric)
+    if engine in ("overlap_ring", "pallas_ring") and (pu > 1 or pv > 1):
+        # block-granular overlap: every ring round's latency hides under
         # another block's butterflies (Fig. 4.3), so the longer stream
         # dominates and only a pipeline-fill fraction of the shorter one
         # remains exposed. The engine cuts each fold into one slab per ring
         # rank (or ``chunks``), so the fill shrinks with the total slab
         # count — and the estimate can never exceed the serial sum, since
-        # overlapping identical work cannot be slower. On a 1×1 grid nothing
+        # overlapping identical work cannot be slower. Message dispatches
+        # pipeline with the compute too; only the steady-state round count
+        # stays on the critical path. The Pallas RDMA ring's explicit
+        # double buffering halves the exposed fill. On a 1×1 grid nothing
         # communicates and the engine degenerates to the serial forms below.
         slabs = max(max(pu, 1) + max(pv, 1), k, 2)
-        return max(t_comp, t_net) + min(t_comp, t_net) / slabs
+        fill = min(t_comp, t_net) / slabs
+        if engine == "pallas_ring":
+            fill /= 2.0
+        return max(t_comp, t_net) + fill + msgs * t_msg
+    overhead = k * msgs * t_msg  # one exposed dispatch per slab exchange
     if schedule == "pipelined":
         # slab i+1's butterflies run under slab i's fold (Fig. 4.3): the
         # longer of the two streams dominates, plus a 1/k pipeline-fill term.
-        return max(t_comp, t_net) + (t_comp + t_net) / k
-    return t_comp + t_net
+        return max(t_comp, t_net) + (t_comp + t_net) / k + overhead
+    return t_comp + t_net + overhead
+
+
+# ---------------------------------------------------------------------------
+# Engine-aware chunk-size model (paper Fig. 4.3's slab-count knob)
+# ---------------------------------------------------------------------------
+
+MAX_MODEL_CHUNKS = 32          # finest slab granularity the model proposes
+_FALLBACK_CHUNKS = (2, 4, 8)   # engine-blind legacy choices (no-comm grids)
+
+
+def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str,
+                   backend: str = "jnp", schedule: str = "pipelined",
+                   mu: int = 1, r2c_packed: bool = False, r: int = 4,
+                   f_hz: float = 180e6, link_bytes_per_s: float = 25e9,
+                   s: int = S_BYTES) -> int:
+    """Model-optimal slab count for one engine on one problem.
+
+    Chunking trades the pipeline-fill exposure (the ``(T_comp+T_net)/k``
+    term of the Fig. 4.3 timeline — one slab's fold latency stays
+    unhidden) against per-message overhead (each extra slab re-dispatches
+    the fold's messages: one all-to-all on the switched fabric, q−1 ring
+    rounds on the torus). Minimizing
+
+        T(k) ≈ (T_comp + T_net)/k + k · m · t_msg
+
+    gives ``k* = sqrt((T_comp + T_net) / (m · t_msg))``, snapped to the
+    nearest power of two in ``[1, MAX_MODEL_CHUNKS]``. The model is
+    engine-aware through both the per-message cost ``t_msg``
+    (``ENGINE_MESSAGE_OVERHEAD_S`` — the Pallas RDMA ring's cheap
+    NIC-doorbell sends support finer slabs than the XLA rings) and the
+    per-slab message count ``m`` (``fold_messages`` on the engine's
+    fabric). Returns 1 when no fold communicates (nothing to overlap).
+    """
+    if comm_engine not in ENGINE_FABRIC:
+        raise ValueError(f"unknown comm engine {comm_engine!r}; "
+                         f"have {sorted(ENGINE_FABRIC)}")
+    fabric = ENGINE_FABRIC[comm_engine]
+    msgs = fold_messages(pu, fabric) + fold_messages(pv, fabric)
+    t_msg = ENGINE_MESSAGE_OVERHEAD_S[comm_engine]
+    if msgs == 0 or t_msg <= 0:
+        return 1
+    t_comp, t_net = _comp_net_seconds(
+        n, pu, pv, fabric=fabric, backend=backend, schedule=schedule, mu=mu,
+        r2c_packed=r2c_packed, r=r, f_hz=f_hz,
+        link_bytes_per_s=link_bytes_per_s, s=s)
+    k_star = math.sqrt((t_comp + t_net) / (msgs * t_msg))
+    if k_star <= 1.0:
+        return 1
+    snapped = 2 ** round(math.log2(k_star))
+    return int(min(max(snapped, 1), MAX_MODEL_CHUNKS))
+
+
+def chunk_candidates(n, pu: int, pv: int, comm_engine: str,
+                     **kwargs) -> tuple[int, ...]:
+    """Pipelined slab counts worth timing for this engine and problem:
+    the model optimum and its power-of-two neighbors (the measured sweep
+    decides — the model only keeps obviously-dominated counts out of it).
+    Falls back to the engine-blind legacy choices when no fold
+    communicates, where the model has no signal to prune on."""
+    opt = optimal_chunks(n, pu, pv, comm_engine=comm_engine, **kwargs)
+    if opt <= 1 and fold_messages(max(pu, 1), ENGINE_FABRIC[comm_engine]) \
+            + fold_messages(max(pv, 1), ENGINE_FABRIC[comm_engine]) == 0:
+        return _FALLBACK_CHUNKS
+    cands = {c for c in (opt // 2, opt, 2 * opt)
+             if 2 <= c <= MAX_MODEL_CHUNKS}
+    return tuple(sorted(cands)) or (2,)
 
 
 # ---------------------------------------------------------------------------

@@ -25,22 +25,59 @@ ENGINE_FABRIC = pm.ENGINE_FABRIC
 
 @dataclasses.dataclass(frozen=True)
 class NetworkPlan:
-    """Sizing of one fabric choice for a √P×√P grid."""
+    """Sizing of one fabric choice for a √P×√P grid.
+
+    ``engine``/``chunks`` are filled by :meth:`for_engine`: the engine the
+    fabric serves and — when the problem size ``n`` is known — the
+    engine-aware optimal slab count from ``perfmodel.optimal_chunks``
+    (finer slabs need no extra links, but they decide how many messages
+    the NICs must post per fold, which is what the per-engine message
+    overhead of the chunk model prices).
+    """
     topology: str           # "switched" | "torus"
     p: int
     r: int
     f_mhz: float
+    engine: str = ""        # TransposeEngine this fabric is sized for
+    chunks: int = 0         # model-optimal slab count (0 = problem unknown)
 
     @classmethod
-    def for_engine(cls, engine: str, p: int, r: int,
-                   f_mhz: float) -> "NetworkPlan":
-        """Fabric sizing for a ``core.comm`` TransposeEngine choice."""
+    def for_engine(cls, engine: str, p: int, r: int, f_mhz: float,
+                   *, n=None, mu: int = 1, pu: int = 0,
+                   pv: int = 0) -> "NetworkPlan":
+        """Fabric sizing for a ``core.comm`` TransposeEngine choice.
+
+        With a problem size ``n`` (int or (nx, ny, nz)), the plan also
+        carries the engine-aware optimal ``chunks`` — the slab count the
+        NIC schedule should run at on this fabric. Pass the actual pencil
+        grid via ``pu``/``pv`` (must multiply to ``p``); by default the
+        closest-to-square factorization of ``p`` is used (exactly √P×√P
+        when ``p`` is a perfect square, e.g. 8 → 4×2).
+        """
         try:
             topo = ENGINE_FABRIC[engine]
         except KeyError:
             raise ValueError(f"unknown comm engine {engine!r}; "
                              f"have {sorted(ENGINE_FABRIC)}") from None
-        return cls(topology=topo, p=p, r=r, f_mhz=f_mhz)
+        if pu or pv:
+            if pu * pv != p:
+                raise ValueError(f"pu*pv must equal p, got {pu}x{pv} != {p}")
+        else:
+            pv = next(q for q in range(max(int(math.isqrt(p)), 1), 0, -1)
+                      if p % q == 0)
+            pu = p // pv
+        chunks = 0
+        if n is not None:
+            chunks = pm.optimal_chunks(n, pu, pv, comm_engine=engine, mu=mu,
+                                       r=r, f_hz=f_mhz * 1e6)
+        return cls(topology=topo, p=p, r=r, f_mhz=f_mhz, engine=engine,
+                   chunks=chunks)
+
+    @property
+    def message_overhead_s(self) -> float:
+        """Exposed per-message cost of the engine this plan serves (falls
+        back to the fabric's serial engine when built without one)."""
+        return pm.ENGINE_MESSAGE_OVERHEAD_S[self.engine or self.topology]
 
     @property
     def nics_per_node(self) -> int:

@@ -17,7 +17,6 @@ belongs to the TransposeEngine implementations in ``core.comm``.
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -47,6 +46,27 @@ def all_to_all_blocks(x, axes: tuple[str, ...], *, split_axis: int,
                             concat_axis=concat_axis)
 
 
+def stack_blocks(x, p: int, split_axis: int):
+    """Cut ``x`` into P blocks along ``split_axis``, stacked on a fresh
+    leading axis: (P, ..., blk, ...). Shared by every ring implementation
+    (``ring_exchange`` below and the Pallas RDMA ring of
+    ``kernels.ring_rdma``) so their wire layouts are identical."""
+    n = x.shape[split_axis]
+    assert n % p == 0, (n, p)
+    xs = x.reshape(x.shape[:split_axis] + (p, n // p)
+                   + x.shape[split_axis + 1:])
+    return jnp.moveaxis(xs, split_axis, 0)
+
+
+def merge_blocks(o, p: int, concat_axis: int):
+    """Inverse of the receive side: fold the leading rank axis of ``o`` into
+    ``concat_axis`` in rank-major block order (tiled all_to_all semantics)."""
+    o = jnp.moveaxis(o, 0, concat_axis)
+    return o.reshape(o.shape[:concat_axis]
+                     + (p * o.shape[concat_axis + 1],)
+                     + o.shape[concat_axis + 2:])
+
+
 def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
                   interleave=None):
     """P−1 ppermute rounds over same-shaped ``arrs``; round r ships the block
@@ -64,15 +84,7 @@ def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
     me = _flat_axis_index(axes)
     name = axes if len(axes) > 1 else axes[0]
 
-    def blocks(x):
-        n = x.shape[split_axis]
-        assert n % p == 0, (n, p)
-        # stack blocks on a fresh leading axis: (P, ..., blk, ...)
-        xs = x.reshape(x.shape[:split_axis] + (p, n // p)
-                       + x.shape[split_axis + 1:])
-        return jnp.moveaxis(xs, split_axis, 0)
-
-    xss = [blocks(x) for x in arrs]
+    xss = [stack_blocks(x, p, split_axis) for x in arrs]
     # own block stays local
     outs = [lax.dynamic_update_index_in_dim(
         jnp.zeros_like(xs),
@@ -89,15 +101,7 @@ def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
         outs = [lax.dynamic_update_index_in_dim(o, recv, (me - r) % p, axis=0)
                 for o, recv in zip(outs, recvs)]
 
-    def merge(o):
-        o = jnp.moveaxis(o, 0, concat_axis)
-        # merge the rank axis with the original concat dim (rank-major block
-        # order, matching tiled all_to_all semantics)
-        return o.reshape(o.shape[:concat_axis]
-                         + (p * o.shape[concat_axis + 1],)
-                         + o.shape[concat_axis + 2:])
-
-    return [merge(o) for o in outs], follow
+    return [merge_blocks(o, p, concat_axis) for o in outs], follow
 
 
 def _ring_all_to_all(x, axes, *, split_axis: int, concat_axis: int):

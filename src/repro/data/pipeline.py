@@ -10,7 +10,6 @@ A memory-mapped binary token-file source covers real-corpus training.
 from __future__ import annotations
 
 import dataclasses
-import os
 
 import numpy as np
 

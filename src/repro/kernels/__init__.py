@@ -1,3 +1,5 @@
 from repro.kernels import ops, ref
 from repro.kernels.fft_radix2 import fft1d_pallas, ifft1d_pallas
 from repro.kernels.attention import flash_attention
+
+__all__ = ["ops", "ref", "fft1d_pallas", "ifft1d_pallas", "flash_attention"]

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.ref import bitrev_permutation, is_pow2, twiddle_table_np
+from repro.kernels.ref import is_pow2, twiddle_table_np
 
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # conservative half of v5e VMEM
 
@@ -41,17 +41,22 @@ def pick_batch_tile(n: int, batch: int, itemsize: int) -> int:
     return max(8, min(tb, max(8, batch)))
 
 
-def _fft_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *, n: int):
-    """One grid step: full DIF FFT of a (TB, N) tile of pencils."""
+def butterfly_stages(xr, xi, twr, twi, n: int):
+    """All log2(N) DIF butterfly stages + bit-reversal of (TB, N) values.
+
+    The one copy of the paper's butterfly pipeline (Eq. 3.8) used *inside*
+    Pallas kernels: the 1D engine kernel below and the fused RDMA ring
+    kernel (``kernels/ring_rdma.py``) both call it, so the stand-alone
+    engine and the communication-fused engine cannot drift apart.
+    ``twr``/``twi`` are the planar ``(log2 N, N/2)`` twiddle table values.
+    """
     stages = n.bit_length() - 1
-    xr = xr_ref[...]
-    xi = xi_ref[...]
     tb = xr.shape[0]
     for s in range(stages):  # unrolled: the butterfly pipeline
         half = n >> (s + 1)
         groups = 1 << s
-        wr = twr_ref[s, :].reshape(1, groups, half)
-        wi = twi_ref[s, :].reshape(1, groups, half)
+        wr = twr[s, :].reshape(1, groups, half)
+        wi = twi[s, :].reshape(1, groups, half)
         xr = xr.reshape(tb, groups, 2, half)
         xi = xi.reshape(tb, groups, 2, half)
         ar, br = xr[:, :, 0, :], xr[:, :, 1, :]
@@ -70,8 +75,15 @@ def _fft_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *, n: int):
     perm = (0,) + tuple(range(stages, 0, -1))
     xr = xr.reshape(shp).transpose(perm).reshape(tb, n)
     xi = xi.reshape(shp).transpose(perm).reshape(tb, n)
-    or_ref[...] = xr
-    oi_ref[...] = xi
+    return xr, xi
+
+
+def _fft_kernel(xr_ref, xi_ref, twr_ref, twi_ref, or_ref, oi_ref, *, n: int):
+    """One grid step: full DIF FFT of a (TB, N) tile of pencils."""
+    yr, yi = butterfly_stages(xr_ref[...], xi_ref[...],
+                              twr_ref[...], twi_ref[...], n)
+    or_ref[...] = yr
+    oi_ref[...] = yi
 
 
 @functools.partial(jax.jit, static_argnames=("tb", "interpret"))

@@ -1,0 +1,321 @@
+"""Pallas async-RDMA ring exchange — the paper's NIC offload (§4.2–4.3).
+
+The thesis' central hardware claim is that the fold communications are
+driven by a NIC that streams blocks *while* the butterfly engines compute
+(Fig. 4.3, tasks C/G): the send of block r+1 is started, the current
+block's butterflies run, and only then does the engine wait on the wire.
+``overlap_ring`` (``core.comm``) emits that schedule at the XLA level and
+*hopes* the latency-hiding scheduler honors it; this module makes the
+schedule explicit in a Pallas kernel built on double-buffered
+``pltpu.make_async_remote_copy`` neighbor DMA — the TPU rendition of the
+FPGA NIC's APEnet-style RDMA engine.
+
+Two lowerings behind one contract (``ring_exchange_rdma`` mirrors
+``core.transpose.ring_exchange`` exactly — same block order, same
+rank-major merge, bit-identical relayout):
+
+* **TPU** — one fused kernel per exchange: P−1 direct-send rounds
+  (``device_id`` = rank ``me+r``, routed over the torus exactly like the
+  shift-by-r ``ppermute`` the plain ring uses, Eq. 5.6), each round
+  starting the next RDMA before waiting the current one. When a planar
+  ``payload`` pair rides along, its radix-2 butterflies
+  (``fft_radix2.butterfly_stages`` — the same stage code as the 1D
+  engine kernel) run *inside* the kernel between ``start`` and ``wait``,
+  so send/compute overlap is explicit rather than hoped-for.
+* **interpret (CPU/CI)** — this JAX has no cross-device DMA emulation, so
+  the wire hop is ``lax.ppermute`` while the NIC's *local* data movement
+  (staging the send block, landing the received block in its output slot)
+  runs through Pallas kernels in interpret mode. Numerically this path is
+  the torus ring relayout by construction; CI pins it bit-exact against
+  ``torus`` on 4x2/2x4/8x1 meshes (``tests/_dist_transpose_check.py``).
+
+All entry points run *inside* ``shard_map`` over the FFT mesh axes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.core import transpose as tr
+from repro.kernels.fft_radix2 import butterfly_stages
+from repro.kernels.ref import is_pow2, twiddle_table_np
+
+
+def use_rdma() -> bool:
+    """True when the real inter-chip RDMA lowering is available (TPU)."""
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# interpret path: Pallas NIC staging kernels + ppermute wire hop
+# ---------------------------------------------------------------------------
+
+def _nic_take_kernel(idx_ref, xs_ref, out_ref):
+    """Stage block ``idx`` of the stacked (P, ...) buffer for the wire."""
+    out_ref[0] = xs_ref[idx_ref[0]]
+
+
+def _nic_place_kernel(idx_ref, blk_ref, out_in_ref, out_ref):
+    """Land a received block in output slot ``idx`` (in-place via aliasing)."""
+    del out_in_ref  # aliased with out_ref — the in-place landing buffer
+    out_ref[idx_ref[0]] = blk_ref[0]
+
+
+def _smem_index(idx):
+    return jnp.reshape(jnp.asarray(idx, jnp.int32), (1,))
+
+
+def nic_take(xs, idx):
+    """Pallas-staged read of block ``idx`` from a stacked (P, ...) buffer,
+    keeping the leading length-1 axis (the wire format of one block)."""
+    return pl.pallas_call(
+        _nic_take_kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((1,) + xs.shape[1:], xs.dtype),
+        interpret=True,
+    )(_smem_index(idx), xs)
+
+
+def nic_place(out, blk, idx):
+    """Pallas-staged write of one received (1, ...) block into slot ``idx``
+    of the stacked output buffer (aliased — no copy of the full buffer)."""
+    return pl.pallas_call(
+        _nic_place_kernel,
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct(out.shape, out.dtype),
+        input_output_aliases={2: 0},
+        interpret=True,
+    )(_smem_index(idx), blk, out)
+
+
+def _ring_interpret(arrs, axes, *, split_axis: int, concat_axis: int,
+                    interleave=None):
+    """The RDMA ring's schedule with ``lax.ppermute`` standing in for the
+    inter-chip hop (no DMA emulation off-TPU). Identical block order to
+    ``transpose.ring_exchange``: round r ships the block for rank me+r and
+    lands the block from rank me−r; ``interleave()`` is emitted right after
+    the first round's sends (the Fig. 4.3 overlap window)."""
+    p = compat.axes_size(axes)
+    me = compat.flat_axis_index(axes)
+    name = axes if len(axes) > 1 else axes[0]
+
+    xss = [tr.stack_blocks(x, p, split_axis) for x in arrs]
+    outs = [nic_place(jnp.zeros_like(xs), nic_take(xs, me), me) for xs in xss]
+    follow = None
+    for r in range(1, p):
+        perm = [(i, (i + r) % p) for i in range(p)]
+        recvs = [lax.ppermute(nic_take(xs, (me + r) % p), name, perm)
+                 for xs in xss]
+        if follow is None and interleave is not None:
+            follow = interleave()
+        outs = [nic_place(o, recv, (me - r) % p)
+                for o, recv in zip(outs, recvs)]
+    return [tr.merge_blocks(o, p, concat_axis) for o in outs], follow
+
+
+# ---------------------------------------------------------------------------
+# TPU path: fused double-buffered RDMA kernel
+# ---------------------------------------------------------------------------
+
+def _chunk_bounds(total: int, parts: int, i: int) -> tuple[int, int]:
+    """Row range [off, off+cnt) of chunk ``i`` when ``total`` rows are cut
+    into ``parts`` near-equal chunks (first ``total % parts`` get +1)."""
+    base, rem = divmod(total, parts)
+    off = i * base + min(i, rem)
+    return off, base + (1 if i < rem else 0)
+
+
+def _rdma_ring_kernel(*refs, axis_name: str, p: int, n_arrays: int,
+                      n_payload: int, payload_rows: int, inverse: bool):
+    """P−1 direct-send RDMA rounds with in-kernel butterflies.
+
+    Round r: start the round-r+1 send, run payload chunk r−1's butterfly
+    stages while both copies are in flight, then wait round r. Per-round
+    semaphore slots (no reuse) keep the one-ahead pipeline hazard-free.
+    """
+    fused = n_payload > 0
+    xs = refs[:n_arrays]
+    i = n_arrays
+    if fused:
+        pr_ref, pi_ref, twr_ref, twi_ref = refs[i:i + 4]
+        i += 4
+    outs = refs[i:i + n_arrays]
+    i += n_arrays
+    if fused:
+        qr_ref, qi_ref = refs[i:i + 2]
+        i += 2
+    copy_sem, send_sem, recv_sem = refs[i:i + 3]
+
+    me = lax.axis_index(axis_name)
+
+    # own block never touches the wire: local async DMA x[me] -> out[me]
+    for a in range(n_arrays):
+        dma = pltpu.make_async_copy(xs[a].at[me], outs[a].at[me], copy_sem)
+        dma.start()
+        dma.wait()
+
+    def start_round(r):
+        dst = lax.rem(me + r, p)
+        ops = []
+        for a in range(n_arrays):
+            rdma = pltpu.make_async_remote_copy(
+                src_ref=xs[a].at[dst],       # block destined for rank me+r
+                dst_ref=outs[a].at[me],      # lands in the remote slot "me"
+                send_sem=send_sem.at[r - 1, a],
+                recv_sem=recv_sem.at[r - 1, a],
+                device_id=(dst,),
+                device_id_type=pltpu.DeviceIdType.LOGICAL)
+            rdma.start()
+            ops.append(rdma)
+        return ops
+
+    in_flight = {1: start_round(1)}
+    for r in range(1, p):
+        if r + 1 < p:
+            in_flight[r + 1] = start_round(r + 1)   # next block's send
+        if fused:
+            # current block's butterflies, while the copies fly (Fig. 4.3)
+            off, cnt = _chunk_bounds(payload_rows, p - 1, r - 1)
+            if cnt:
+                cr = pr_ref[pl.ds(off, cnt), :]
+                ci = pi_ref[pl.ds(off, cnt), :]
+                if inverse:
+                    ci = -ci
+                yr, yi = butterfly_stages(cr, ci, twr_ref[...], twi_ref[...],
+                                          n_payload)
+                if inverse:
+                    scale = jnp.asarray(1.0 / n_payload, yr.dtype)
+                    yr, yi = yr * scale, -(yi * scale)
+                qr_ref[pl.ds(off, cnt), :] = yr
+                qi_ref[pl.ds(off, cnt), :] = yi
+        for rdma in in_flight.pop(r):               # then wait
+            rdma.wait()
+
+
+def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
+                   payload=None, inverse: bool = False):
+    """Build and invoke the fused RDMA kernel for one exchange."""
+    p = compat.axes_size(axes)
+    axis_name = axes[0]
+    xss = [tr.stack_blocks(x, p, split_axis) for x in arrs]
+    dtype = xss[0].dtype
+
+    fused = payload is not None
+    operands = list(xss)
+    out_shape = [jax.ShapeDtypeStruct(xs.shape, xs.dtype) for xs in xss]
+    n_payload = payload_rows = 0
+    lead = None
+    if fused:
+        pr, pi = payload
+        lead = pr.shape[:-1]
+        n_payload = pr.shape[-1]
+        payload_rows = int(pr.size) // n_payload
+        twr_np, twi_np = twiddle_table_np(n_payload, str(jnp.dtype(dtype)))
+        operands += [pr.reshape(payload_rows, n_payload),
+                     pi.reshape(payload_rows, n_payload),
+                     jnp.asarray(twr_np), jnp.asarray(twi_np)]
+        out_shape += [jax.ShapeDtypeStruct((payload_rows, n_payload), dtype)
+                      for _ in range(2)]
+
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [any_spec] * len(xss)
+    out_specs = [any_spec] * len(xss)
+    if fused:
+        # payload + twiddles live in VMEM for the in-kernel butterflies
+        in_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)] * 4
+        out_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)] * 2
+
+    kernel = functools.partial(
+        _rdma_ring_kernel, axis_name=axis_name, p=p, n_arrays=len(xss),
+        n_payload=n_payload, payload_rows=payload_rows, inverse=inverse)
+    results = pl.pallas_call(
+        kernel,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((max(p - 1, 1), len(xss))),
+            pltpu.SemaphoreType.DMA((max(p - 1, 1), len(xss))),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(collective_id=0),
+    )(*operands)
+
+    outs = [tr.merge_blocks(o, p, concat_axis) for o in results[:len(xss)]]
+    follow = None
+    if fused:
+        qr, qi = results[len(xss):len(xss) + 2]
+        follow = (qr.reshape(*lead, n_payload), qi.reshape(*lead, n_payload))
+    return outs, follow
+
+
+# ---------------------------------------------------------------------------
+# public contract (mirrors transpose.ring_exchange)
+# ---------------------------------------------------------------------------
+
+def fusable_payload(payload) -> bool:
+    """True when the TPU kernel can butterfly this payload in-kernel:
+    a planar (re, im) pair with a power-of-two last axis."""
+    if payload is None:
+        return False
+    pr, pi = payload
+    return (pr.shape == pi.shape and pr.ndim >= 1
+            and is_pow2(pr.shape[-1]) and pr.shape[-1] >= 2)
+
+
+def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
+                       interleave=None, payload=None, inverse: bool = False,
+                       interpret: bool | None = None):
+    """Tiled ring all-to-all of ``arrs`` through the async-RDMA NIC engine.
+
+    Contract-compatible with ``transpose.ring_exchange``: returns
+    ``(outs, follow)`` where ``follow`` is the ``interleave()`` result (the
+    block-granular overlap thunk) or, on the fused TPU path, the
+    butterflied ``payload`` pair. ``interleave`` and ``payload`` are
+    mutually exclusive: a thunk is emitted between rounds at the JAX level
+    (interpret path — XLA schedules it under the remaining hops), a payload
+    is transformed *inside* the kernel between ``start`` and ``wait``
+    (TPU path). ``inverse`` applies the conjugate-trick inverse FFT to the
+    payload. Multi-axis rings (flattened Pu over several mesh axes) have no
+    single-axis ``device_id`` and fall back to the shared ppermute ring.
+    """
+    assert interleave is None or payload is None, \
+        "interleave (JAX-level thunk) and payload (in-kernel) are exclusive"
+    p = compat.axes_size(axes)
+    if p <= 1:
+        return [jnp.asarray(a) for a in arrs], None
+    if interpret is None:
+        interpret = not use_rdma()
+    if not interpret and len(axes) == 1:
+        # the fused kernel is atomic — a JAX-level thunk can't run between
+        # its rounds, so non-fusable compute is emitted before the kernel
+        # (serialized; the chunk model prices this, and fusable compute
+        # takes the in-kernel payload path instead). The contract still
+        # returns the thunk's result so callers' slab pipelines advance.
+        follow = interleave() if interleave is not None else None
+        outs, fused = _ring_rdma_tpu(arrs, axes, split_axis=split_axis,
+                                     concat_axis=concat_axis, payload=payload,
+                                     inverse=inverse)
+        return outs, (fused if payload is not None else follow)
+    if not interpret:
+        # multi-axis ring on TPU: no single-axis device_id — shared ring
+        return tr.ring_exchange(arrs, axes, split_axis=split_axis,
+                                concat_axis=concat_axis, interleave=interleave)
+    if payload is not None:
+        # no in-kernel butterflies off-TPU: degrade to the thunk contract
+        raise ValueError("payload fusion requires the TPU RDMA lowering; "
+                         "pass interleave= on the interpret path")
+    return _ring_interpret(arrs, axes, split_axis=split_axis,
+                           concat_axis=concat_axis, interleave=interleave)

@@ -110,7 +110,7 @@ def build_cell(arch: str, shape_name: str, mesh, run_over=None):
         # the multi-GiB KV stacks: qwen1.5 prefill_32k +21 GiB observed)
         out_shapes = jax.eval_shape(pf, params_sds, batch)
         cache_sh = sh.cache_specs(mesh, out_shapes[1], cfg)
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.sharding import NamedSharding
         logits_sh = NamedSharding(mesh, sh.batch_spec(mesh, 3))
         fn = jax.jit(pf, out_shardings=(logits_sh, cache_sh))
         return fn, (params_sds, batch)

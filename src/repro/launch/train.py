@@ -16,7 +16,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import compat
 from repro.checkpoint.checkpoint import CheckpointManager
@@ -24,7 +23,6 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig, Pipeline
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_dev_mesh, mesh_axes
-from repro.launch import specs as SP
 from repro.models import common as cm
 from repro.models.transformer import RunCfg, init_model
 from repro.optim import adamw

@@ -1,3 +1,6 @@
 from repro.models.transformer import (RunCfg, init_model, model_axes, forward,
                                       decode_step, init_cache, pad_cache,
                                       prefill, lm_loss)
+
+__all__ = ["RunCfg", "init_model", "model_axes", "forward", "decode_step",
+           "init_cache", "pad_cache", "prefill", "lm_loss"]

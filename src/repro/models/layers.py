@@ -6,7 +6,6 @@ the pencil idiom: keep the KV slab local, reduce across the grid)."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -175,7 +174,7 @@ def _sdpa_chunked(q, k, v, a: AttnDims, causal: bool,
         o0 = jnp.zeros((b, hkv, g, qc, dv), jnp.float32)
 
         def kv_step(carry, ki):
-            m, l, o = carry
+            m, den, o = carry
             lg = jnp.einsum("bqhgd,bkhd->bhgqk", qblk,
                             kb[:, ki]).astype(jnp.float32) * scale
             if causal:
@@ -185,10 +184,10 @@ def _sdpa_chunked(q, k, v, a: AttnDims, causal: bool,
             m2 = jnp.maximum(m, jnp.max(lg, axis=-1))
             alpha = jnp.exp(m - m2)
             w = jnp.exp(lg - m2[..., None])
-            l2 = l * alpha + jnp.sum(w, axis=-1)
+            den2 = den * alpha + jnp.sum(w, axis=-1)
             o2 = o * alpha[..., None] + jnp.einsum(
                 "bhgqk,bkhd->bhgqd", w, vb[:, ki].astype(jnp.float32))
-            return (m2, l2, o2), None
+            return (m2, den2, o2), None
 
         if causal:
             # static upper bound on useful kv blocks for this q block
@@ -199,8 +198,8 @@ def _sdpa_chunked(q, k, v, a: AttnDims, causal: bool,
             ks = jnp.arange(nk)
         # remat the step so backward recomputes the exp-weights instead of
         # saving a (qc, kc) tensor per kv block (§Perf iteration M2)
-        (m, l, o), _ = lax.scan(jax.checkpoint(kv_step), (m0, l0, o0), ks)
-        ob = o / jnp.maximum(l[..., None], 1e-30)
+        (m, den, o), _ = lax.scan(jax.checkpoint(kv_step), (m0, l0, o0), ks)
+        ob = o / jnp.maximum(den[..., None], 1e-30)
         return ob                                           # (b,hkv,g,qc,d)
 
     outs = [q_block(qi) for qi in range(nq)]                # unrolled over q

@@ -5,7 +5,6 @@ moments (bf16 moments let the 398B config fit 16 GB/chip; see EXPERIMENTS.md
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -34,6 +34,9 @@ SOLVERS: dict[str, type[SpectralSolver]] = {
     for cls in (PoissonSolver, HeatSolver, NavierStokesSolver, NLSSolver)
 }
 
+__all__ = ["SolverState", "SpectralSolver", "SOLVERS", "make_solver",
+           "PoissonSolver", "HeatSolver", "NavierStokesSolver", "NLSSolver"]
+
 
 def make_solver(case: str, mesh, n, **kwargs) -> SpectralSolver:
     """Instantiate a registered solver case (``kwargs`` → its constructor)."""

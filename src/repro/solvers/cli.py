@@ -32,6 +32,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="state dtype; float64 enables x64 for the process")
     ap.add_argument("--nu", type=float, default=None,
                     help="viscosity (navier_stokes only)")
+    ap.add_argument("--comm-engine", default="",
+                    help="TransposeEngine for the fold communications "
+                         "(switched | torus | overlap_ring | pallas_ring; "
+                         "default: the solver's own plan default)")
     ap.add_argument("--autotune", action="store_true",
                     help="pick the FFT plan by autotuning the whole solver "
                          "step instead of the pipelined/switched default")
@@ -82,6 +86,10 @@ def main(argv=None) -> int:
         hit = "cache hit" if res.cache_hit else "measured"
         print(f"autotuned solver step ({hit}): {res.best.name}  "
               f"{res.best_us:.1f} us/step")
+    if args.comm_engine:
+        # an explicit engine choice overrides whatever the default (or the
+        # autotuned winner) would use for the fold communications
+        plan_cfg = dict(plan_cfg or {}, comm_engine=args.comm_engine)
 
     try:
         solver = make_solver(args.case, mesh, args.n, dtype=args.dtype,

@@ -5,8 +5,6 @@ gradient sync (shard_map manual over the pod axis only)."""
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -50,8 +48,8 @@ def make_train_step(cfg: ArchConfig, run: RunCfg, tcfg: TrainCfg):
 
         def body(carry, mb_batch):
             acc_loss, acc_g = carry
-            l, g = jax.value_and_grad(loss_fn)(params, mb_batch)
-            return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), None
+            mb_loss, g = jax.value_and_grad(loss_fn)(params, mb_batch)
+            return (acc_loss + mb_loss, jax.tree.map(jnp.add, acc_g, g)), None
         zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
         (tl, tg), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), zero), parts)
         inv = 1.0 / tcfg.microbatches

@@ -4,10 +4,10 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.perfmodel import ENGINE_FABRIC
+from repro.core.perfmodel import ENGINE_FABRIC, chunk_candidates
 from repro.kernels.ref import is_pow2
 
-CHUNK_CHOICES = (2, 4, 8)       # pipelined slab counts (1 = sequential)
+CHUNK_CHOICES = (2, 4, 8)       # legacy engine-blind slab counts (no-comm)
 ALL_BACKENDS = ("jnp", "ref", "pallas", "mxu")
 ALL_ENGINES = tuple(ENGINE_FABRIC)  # kept in sync with core.comm.ENGINE_NAMES
 
@@ -73,8 +73,14 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
 
     * ``ref``/``pallas``/``mxu`` are radix-2 / four-step engines — power-of-two
       axis lengths only (``jnp`` delegates to XLA's general FFT).
-    * the ``torus``/``overlap_ring`` engines are only distinct from
-      ``switched`` when a fold actually communicates (Pu > 1 or Pv > 1).
+    * the ring engines (``torus``/``overlap_ring``/``pallas_ring``) are only
+      distinct from ``switched`` when a fold actually communicates
+      (Pu > 1 or Pv > 1).
+    * pipelined slab counts come from the engine-aware chunk model
+      (``perfmodel.chunk_candidates``): each engine contributes its model
+      optimum and the neighboring powers of two instead of an engine-blind
+      global list — the per-message overhead of e.g. ``pallas_ring``'s
+      NIC-doorbell sends supports finer slabs than the XLA rings.
     * ``vector_mode`` only matters for μ-component fields (``components>0``).
     * ``r2c_packed`` needs a real transform with even power-of-two Nx.
     """
@@ -83,14 +89,17 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
     if backends is None:
         backends = [b for b in ALL_BACKENDS if b == "jnp" or pow2]
     engines = ALL_ENGINES if (pu > 1 or pv > 1) else ("switched",)
-    schedules = [("sequential", 1)] + [("pipelined", c) for c in CHUNK_CHOICES]
     vmodes = ("streaming", "parallel") if components else ("streaming",)
     packed_opts = (False, True) if (real and pow2 and nx % 2 == 0) else (False,)
 
     out = []
     for backend in backends:
-        for schedule, chunks in schedules:
-            for engine in engines:
+        for engine in engines:
+            chunks_for = chunk_candidates(n, pu, pv, engine,
+                                          backend=backend, mu=max(components, 1))
+            schedules = [("sequential", 1)] + [("pipelined", c)
+                                               for c in chunks_for]
+            for schedule, chunks in schedules:
                 for vm in vmodes:
                     for packed in packed_opts:
                         out.append(Candidate(

@@ -1,9 +1,15 @@
 """Multi-device distributed-FFT correctness checks (run in a subprocess so
 the fake-device XLA flag doesn't leak into the main pytest process).
 
-Usage: python tests/_dist_fft_check.py  (expects PYTHONPATH=src)
-Prints CHECK <name> OK / raises on failure. Final line: ALL_OK.
+Usage: python tests/_dist_fft_check.py [--mesh PUxPV] [--engine NAME]
+(expects PYTHONPATH=src). ``--engine`` restricts the comm-engine sweep to
+one engine (the CI mesh-shape × comm-engine matrix runs one cell per job);
+the full run also covers backends, packed r2c, vector modes, and the
+multi-axis mesh. Prints CHECK <name> OK / raises on failure. Final line:
+ALL_OK.
 """
+
+import argparse
 
 from repro.launch.mesh import ensure_host_devices
 
@@ -29,8 +35,8 @@ def expected_c2c(g):
     return np.fft.fftn(np.asarray(g, np.complex128), axes=(0, 1, 2)).transpose(2, 0, 1)
 
 
-def run():
-    mesh = compat.make_mesh((4, 2), ("data", "model"))
+def run(pu: int = 4, pv: int = 2, engine: str = ""):
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
     n = (16, 16, 16)
     ny, nz, nx = 16, 16, 16
     rng = np.random.RandomState(0)
@@ -41,15 +47,26 @@ def run():
     xr = jnp.asarray(g_re)
     xi = jnp.asarray(g_im)
 
+    if engine:
+        # one matrix cell: the selected engine sequential + pipelined, and
+        # (below) its r2c path — vs the same analytic NumPy reference
+        configs = [
+            (engine, dict(comm_engine=engine)),
+            (f"{engine}_pipelined4",
+             dict(comm_engine=engine, schedule="pipelined", chunks=4)),
+        ]
+    else:
+        configs = [
+            ("switched_seq", dict()),
+            ("torus", dict(net="torus")),
+            ("overlap_ring", dict(comm_engine="overlap_ring")),
+            ("pallas_ring", dict(comm_engine="pallas_ring")),
+            ("pipelined4", dict(schedule="pipelined", chunks=4)),
+            ("pallas_backend", dict(backend="pallas")),
+            ("ref_backend", dict(backend="ref")),
+        ]
     base = None
-    for name, kw in [
-        ("switched_seq", dict()),
-        ("torus", dict(net="torus")),
-        ("overlap_ring", dict(comm_engine="overlap_ring")),
-        ("pipelined4", dict(schedule="pipelined", chunks=4)),
-        ("pallas_backend", dict(backend="pallas")),
-        ("ref_backend", dict(backend="ref")),
-    ]:
+    for name, kw in configs:
         fwd, inv, plan = make_fft3d(mesh, n, backend=kw.pop("backend", "jnp"), **kw)
         kr, ki = fwd(xr, xi)
         got = np.asarray(kr) + 1j * np.asarray(ki)
@@ -63,7 +80,8 @@ def run():
         print("CHECK", name, "OK", flush=True)
 
     # real-to-complex path (paper §3.2.5 data model)
-    fwd, inv, plan = make_fft3d(mesh, n, real=True)
+    fwd, inv, plan = make_fft3d(mesh, n, real=True,
+                                comm_engine=engine or "switched")
     kr, ki = fwd(xr)
     keep = nx // 2 + 1
     wr = np.fft.fftn(np.fft.rfft(g_re, axis=2), axes=(0, 1)).transpose(2, 0, 1)
@@ -72,6 +90,10 @@ def run():
     back = inv(kr, ki)
     assert rel(np.asarray(back), g_re) < 1e-9
     print("CHECK r2c OK", flush=True)
+
+    if engine:
+        print("ALL_OK", flush=True)
+        return
 
     # packed r2c (beyond-paper) must agree with the faithful path
     fwdp, invp, _ = make_fft3d(mesh, n, real=True, r2c_packed=True, backend="ref")
@@ -106,4 +128,10 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="4x2", help="PUxPV pencil grid")
+    ap.add_argument("--engine", default="",
+                    help="restrict the engine sweep to one comm engine")
+    args = ap.parse_args()
+    pu, pv = (int(t) for t in args.mesh.lower().split("x"))
+    run(pu, pv, args.engine)

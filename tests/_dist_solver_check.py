@@ -1,16 +1,20 @@
 """Multi-device spectral-solver smoke (run in a subprocess so the fake
 device-count XLA flag is set before jax initializes).
 
-Usage: python tests/_dist_solver_check.py  (expects PYTHONPATH=src)
+Usage: python tests/_dist_solver_check.py [--mesh PUxPV] [--engine NAME]
+(expects PYTHONPATH=src)
 
-The tier-1 solver smoke the CI job names: on the 8-fake-device 4x2 pencil
-mesh, the Poisson manufactured solution must be recovered to ~1e-10 (f64)
-and a 2-step Navier–Stokes Taylor–Green run must dissipate energy
-monotonically while staying divergence-free; heat and NLS ride along with
-their own analytic checks. Also exercises the solver-step autotuner on the
-distributed mesh with a throwaway cache. Prints CHECK <case> OK per case,
-then ALL_OK.
+The tier-1 solver smoke the CI job names: on the 8-fake-device Pu×Pv
+pencil mesh (default 4x2), the Poisson manufactured solution must be
+recovered to ~1e-10 (f64) and a 2-step Navier–Stokes Taylor–Green run must
+dissipate energy monotonically while staying divergence-free; heat and NLS
+ride along with their own analytic checks. ``--engine`` runs every case on
+that comm engine (the CI mesh × engine matrix); the full run also
+exercises the solver-step autotuner on the distributed mesh with a
+throwaway cache. Prints CHECK <case> OK per case, then ALL_OK.
 """
+
+import argparse
 
 from repro.launch.mesh import ensure_host_devices
 
@@ -27,9 +31,12 @@ from repro import compat  # noqa: E402
 from repro.solvers import SOLVERS, make_solver  # noqa: E402
 
 
-def run():
-    assert len(jax.devices()) >= 8, jax.devices()
-    mesh = compat.make_mesh((4, 2), ("data", "model"))
+def run(pu: int = 4, pv: int = 2, engine: str = ""):
+    assert len(jax.devices()) >= pu * pv, jax.devices()
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    # --engine pins every case's fold communications to one TransposeEngine
+    # (the CI matrix); default keeps each case's own plan default
+    plan_cfg = {"comm_engine": engine} if engine else None
 
     for case, steps, kwargs in [
         ("poisson", 1, {}),
@@ -37,12 +44,17 @@ def run():
         ("heat", 3, {}),
         ("nls", 3, {}),
     ]:
-        solver = make_solver(case, mesh, 16, **kwargs)
+        solver = make_solver(case, mesh, 16, plan_cfg=plan_cfg, **kwargs)
+        assert not engine or solver.plan.comm_engine == engine
         _, history = solver.run(steps)
         ok, lines = solver.validate(history)
         assert ok, (case, lines, history)
         print(f"CHECK {case} OK  ({'; '.join(lines)})", flush=True)
     assert set(SOLVERS) == {"poisson", "heat", "navier_stokes", "nls"}
+
+    if engine:
+        print("ALL_OK", flush=True)
+        return
 
     # step-level autotune on the distributed mesh: runs, caches, replays
     from repro.tuning.solver import autotune_solver_step
@@ -64,4 +76,10 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="4x2", help="PUxPV pencil grid")
+    ap.add_argument("--engine", default="",
+                    help="run every case on this comm engine")
+    args = ap.parse_args()
+    pu, pv = (int(t) for t in args.mesh.lower().split("x"))
+    run(pu, pv, args.engine)

@@ -1,23 +1,28 @@
 """Multi-device TransposeEngine equivalence checks (subprocess: the fake
 device-count XLA flag must be set before jax initializes).
 
-Usage: python tests/_dist_transpose_check.py PUxPV   (expects PYTHONPATH=src)
-Asserts, for a non-trivial Pu×Pv grid and every registered engine
-(``switched`` all-to-all / ``torus`` ring / ``overlap_ring`` fused ring):
+Usage: python tests/_dist_transpose_check.py PUxPV [--engine NAME]
+(expects PYTHONPATH=src). Asserts, for a non-trivial Pu×Pv grid and every
+registered engine (``switched`` all-to-all / ``torus`` ring /
+``overlap_ring`` fused ring / ``pallas_ring`` async-RDMA ring, which runs
+its Pallas kernels in interpret mode off-TPU):
 
 * every engine's ``fold_xy``/``fold_yz`` relayout is **bit-identical** to the
-  ``switched`` reference (the two fabrics and the overlapped schedule compute
+  ``switched`` reference (the two fabrics and the overlapped schedules compute
   the same data movement, §5.5),
 * ``unfold ∘ fold`` is the identity for every engine (randomized over several
   inputs — the property the whole pipeline rests on), and
 * the full distributed 3D FFT built on each engine is allclose (fp64,
   1e-10) to the ``switched`` build for forward and forward∘inverse,
-  including the real and pipelined overlap-ring paths.
+  including the real and pipelined paths of both overlapped rings.
 
-Prints CHECK <name> OK per property, then ALL_OK.
+``--engine NAME`` restricts the sweep to one engine (always keeping the
+``switched`` reference) — the CI mesh-shape × comm-engine matrix runs one
+(mesh, engine) cell per job. Prints CHECK <name> OK per property, then
+ALL_OK.
 """
 
-import sys
+import argparse
 
 from repro.launch.mesh import ensure_host_devices
 
@@ -44,7 +49,16 @@ def rel(a, b):
     return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30)
 
 
-def run(pu: int, pv: int) -> None:
+def run(pu: int, pv: int, engine: str = "") -> None:
+    if engine and engine not in comm.ENGINE_NAMES:
+        raise SystemExit(f"unknown --engine {engine!r}; "
+                         f"have {sorted(comm.ENGINE_NAMES)}")
+    # the switched reference always runs; --engine narrows what it's
+    # compared against (CI matrix: one engine per job)
+    names = tuple(e for e in comm.ENGINE_NAMES
+                  if not engine or e in ("switched", engine))
+    ring_names = tuple(e for e in names
+                       if e in ("overlap_ring", "pallas_ring"))
     mesh = compat.make_mesh((pu, pv), ("data", "model"))
     grid = PencilGrid.from_mesh(mesh)
     n = (16, 16, 16)
@@ -61,7 +75,7 @@ def run(pu: int, pv: int) -> None:
     for which in ("xy", "yz"):
         folded = {}
         roundtrips = {}
-        for name in comm.ENGINE_NAMES:
+        for name in names:
             eng = comm.make_engine(name, grid)
             folded[name] = sm(lambda a, e=eng, w=which: e.fold(w, a))
             roundtrips[name] = sm(
@@ -74,7 +88,7 @@ def run(pu: int, pv: int) -> None:
                     (which, name, "roundtrip", seed)
             print(f"CHECK {which}_roundtrip_{name} OK", flush=True)
         ref = np.asarray(folded["switched"](x))
-        for name in comm.ENGINE_NAMES[1:]:
+        for name in names[1:]:
             got = np.asarray(folded[name](x))
             assert np.array_equal(got, ref), (which, name, "relayout")
             print(f"CHECK {which}_relayout_bitexact_{name} OK", flush=True)
@@ -83,13 +97,13 @@ def run(pu: int, pv: int) -> None:
     xb = jnp.asarray(rng.randn(2, *n))
     bspec = P(None, *spec)
     outs = {}
-    for name in comm.ENGINE_NAMES:
+    for name in names:
         eng = comm.make_engine(name, grid)
         f = jax.jit(compat.shard_map(
             lambda a, e=eng: e.fold_yz(e.fold_xy(a)),
             mesh=mesh, in_specs=(bspec,), out_specs=bspec, check_vma=False))
         outs[name] = np.asarray(f(xb))
-    for name in comm.ENGINE_NAMES[1:]:
+    for name in names[1:]:
         assert np.array_equal(outs[name], outs["switched"]), name
     print("CHECK composed_folds_bitexact OK", flush=True)
 
@@ -99,7 +113,7 @@ def run(pu: int, pv: int) -> None:
     fwd0, inv0, _ = make_fft3d(mesh, n, comm_engine="switched")
     kr0, ki0 = fwd0(xr, xi)
     want = np.asarray(kr0) + 1j * np.asarray(ki0)
-    for name in comm.ENGINE_NAMES[1:]:
+    for name in names[1:]:
         fwd, inv, plan = make_fft3d(mesh, n, comm_engine=name)
         kr, ki = fwd(xr, xi)
         got = np.asarray(kr) + 1j * np.asarray(ki)
@@ -109,26 +123,34 @@ def run(pu: int, pv: int) -> None:
         assert rel(back, np.asarray(xr) + 1j * np.asarray(xi)) < TOL, name
         print(f"CHECK fft_{name}_allclose OK", flush=True)
 
-    # overlap ring with the pipelined schedule and the real (r2c) data model
-    fwdp, invp, _ = make_fft3d(mesh, n, comm_engine="overlap_ring",
-                               schedule="pipelined", chunks=2)
-    krp, kip = fwdp(xr, xi)
-    assert rel(np.asarray(krp) + 1j * np.asarray(kip), want) < TOL
-    print("CHECK fft_overlap_ring_pipelined OK", flush=True)
-
+    # overlapped rings with the pipelined schedule and the real (r2c) data
+    # model — the interpret-mode fallback of pallas_ring rides this path too
     fwdr0, invr0, _ = make_fft3d(mesh, n, real=True, comm_engine="switched")
-    fwdr, invr, _ = make_fft3d(mesh, n, real=True, comm_engine="overlap_ring")
     krr0, kir0 = fwdr0(xr)
-    krr, kir = fwdr(xr)
-    assert rel(np.asarray(krr) + 1j * np.asarray(kir),
-               np.asarray(krr0) + 1j * np.asarray(kir0)) < TOL
-    backr = invr(krr, kir)
-    assert rel(np.asarray(backr), np.asarray(xr)) < TOL
-    print("CHECK fft_overlap_ring_real OK", flush=True)
+    for name in ring_names:
+        fwdp, invp, _ = make_fft3d(mesh, n, comm_engine=name,
+                                   schedule="pipelined", chunks=2)
+        krp, kip = fwdp(xr, xi)
+        assert rel(np.asarray(krp) + 1j * np.asarray(kip), want) < TOL
+        print(f"CHECK fft_{name}_pipelined OK", flush=True)
+
+        fwdr, invr, _ = make_fft3d(mesh, n, real=True, comm_engine=name)
+        krr, kir = fwdr(xr)
+        assert rel(np.asarray(krr) + 1j * np.asarray(kir),
+                   np.asarray(krr0) + 1j * np.asarray(kir0)) < TOL
+        backr = invr(krr, kir)
+        assert rel(np.asarray(backr), np.asarray(xr)) < TOL
+        print(f"CHECK fft_{name}_real OK", flush=True)
 
     print("ALL_OK", flush=True)
 
 
 if __name__ == "__main__":
-    pu, pv = (int(t) for t in sys.argv[1].lower().split("x"))
-    run(pu, pv)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("shape", help="PUxPV pencil grid, e.g. 4x2")
+    ap.add_argument("--engine", default="",
+                    help="restrict to one comm engine (default: all; the "
+                         "switched reference always runs)")
+    args = ap.parse_args()
+    pu, pv = (int(t) for t in args.shape.lower().split("x"))
+    run(pu, pv, args.engine)

@@ -154,3 +154,38 @@ def test_expect_glob_keeps_workloads_on_trajectory(tmp_path):
     missing = str(tmp_path / "nope.json")
     assert _run(missing, empty, "--expect", "solver_*").returncode == 2
     assert _run(missing, new, "--expect", "solver_*").returncode == 0
+
+
+def test_expect_comma_separated_globs(tmp_path):
+    # one --expect argument can carry several comma-separated globs, each of
+    # which must match independently (the CI engine-row gate)
+    rows = [{"name": "fft_overlap_ring/N16/mesh4x2/fwd", "us_per_call": 700.0,
+             "config": {}},
+            {"name": "fft_pallas_ring/N16/mesh4x2/fwd", "us_per_call": 800.0,
+             "config": {}}]
+    both = _write(tmp_path / "both.json", rows)
+    one = _write(tmp_path / "one.json", rows[:1])
+    missing = str(tmp_path / "nope.json")
+    glob = "fft_overlap_ring*,fft_pallas_ring*"
+    assert _run(missing, both, "--expect", glob).returncode == 0
+    # dropping either engine's rows fails the gate, baseline or not
+    out = _run(missing, one, "--expect", glob)
+    assert out.returncode == 2 and "fft_pallas_ring*" in out.stdout
+    # equivalent to passing the globs as separate repeated flags
+    assert _run(missing, both, "--expect", "fft_overlap_ring*",
+                "--expect", "fft_pallas_ring*").returncode == 0
+    assert _run(missing, one, "--expect", "fft_overlap_ring*",
+                "--expect", "fft_pallas_ring*").returncode == 2
+
+
+def test_bench_run_unknown_only_name_fails(tmp_path):
+    # a typo'd --only must exit non-zero instead of emitting an empty
+    # document the perf gate would then wave through
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "fft_enginez",
+         "--json", str(tmp_path / "out.json")],
+        cwd=REPO, capture_output=True, text=True, timeout=120,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert out.returncode != 0
+    assert "fft_enginez" in out.stderr
+    assert not (tmp_path / "out.json").exists()

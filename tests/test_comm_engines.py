@@ -16,11 +16,14 @@ from repro.core.fft3d import FFT3DPlan
 
 
 def test_registry_names_and_fabrics():
-    assert comm.ENGINE_NAMES == ("switched", "torus", "overlap_ring")
+    assert comm.ENGINE_NAMES == ("switched", "torus", "overlap_ring",
+                                 "pallas_ring")
     assert comm.engine_fabric("switched") == "switched"
     assert comm.engine_fabric("torus") == "torus"
-    # the overlapped ring is still ring traffic — it sizes the torus fabric
+    # the overlapped rings are still ring traffic — they size the torus
+    # fabric (RDMA changes who posts the sends, not how many links exist)
     assert comm.engine_fabric("overlap_ring") == "torus"
+    assert comm.engine_fabric("pallas_ring") == "torus"
     with pytest.raises(ValueError, match="unknown comm engine"):
         comm.engine_fabric("carrier_pigeon")
     with pytest.raises(ValueError, match="unknown comm engine"):
@@ -49,11 +52,36 @@ def test_network_plan_for_engine():
         plan = topo.NetworkPlan.for_engine(name, p=64, r=4, f_mhz=180.0)
         assert plan.topology == comm.engine_fabric(name)
         assert plan.required_bw_gbit_s > 0
-    # both ring engines need the 4-link torus NICs, the switched engine 2
+        assert plan.engine == name and plan.chunks == 0  # problem unknown
+        assert plan.message_overhead_s == pm.ENGINE_MESSAGE_OVERHEAD_S[name]
+    # every ring engine needs the 4-link torus NICs, the switched engine 2
     assert topo.NetworkPlan.for_engine("overlap_ring", 64, 4, 180.0).nics_per_node == 4
+    assert topo.NetworkPlan.for_engine("pallas_ring", 64, 4, 180.0).nics_per_node == 4
     assert topo.NetworkPlan.for_engine("switched", 64, 4, 180.0).nics_per_node == 2
     with pytest.raises(ValueError, match="unknown comm engine"):
         topo.NetworkPlan.for_engine("carrier_pigeon", 64, 4, 180.0)
+
+
+def test_network_plan_consumes_chunk_model():
+    # given the problem size, the fabric plan carries the engine-aware
+    # optimal slab count — the RDMA ring's cheap NIC-doorbell sends support
+    # finer slabs than the XLA ring on the same fabric
+    ring = topo.NetworkPlan.for_engine("overlap_ring", 64, 4, 180.0, n=256)
+    rdma = topo.NetworkPlan.for_engine("pallas_ring", 64, 4, 180.0, n=256)
+    assert ring.chunks == pm.optimal_chunks(256, 8, 8,
+                                            comm_engine="overlap_ring",
+                                            f_hz=180e6)
+    assert rdma.chunks >= ring.chunks >= 1
+    assert rdma.message_overhead_s < ring.message_overhead_s
+    # non-square p uses the closest-to-square factorization (8 -> 4x2),
+    # and the actual pencil grid can be passed explicitly
+    a = topo.NetworkPlan.for_engine("torus", 8, 4, 180.0, n=256)
+    b = topo.NetworkPlan.for_engine("torus", 8, 4, 180.0, n=256, pu=4, pv=2)
+    assert a.chunks == b.chunks == pm.optimal_chunks(256, 4, 2,
+                                                     comm_engine="torus",
+                                                     f_hz=180e6)
+    with pytest.raises(ValueError, match="pu\\*pv"):
+        topo.NetworkPlan.for_engine("torus", 8, 4, 180.0, n=256, pu=3, pv=2)
 
 
 def test_plan_engine_field_derivation():
@@ -91,9 +119,80 @@ def test_overlap_estimate_hides_communication():
     overlap = pm.estimate_plan_seconds(256, 8, 8, comm_engine="overlap_ring",
                                        **kw)
     assert overlap < serial
+    # the RDMA ring's explicit double buffering + NIC-posted sends beat the
+    # XLA-scheduled overlap on every communicating mesh
+    for pu, pv in [(4, 2), (2, 2), (2, 1), (8, 8)]:
+        rdma = pm.estimate_plan_seconds(256, pu, pv,
+                                        comm_engine="pallas_ring", **kw)
+        xla = pm.estimate_plan_seconds(256, pu, pv,
+                                       comm_engine="overlap_ring", **kw)
+        assert rdma < xla, (pu, pv)
     # degenerate grid: no communication, engines estimate identically
     assert pm.estimate_plan_seconds(64, 1, 1, comm_engine="overlap_ring") == \
         pytest.approx(pm.estimate_plan_seconds(64, 1, 1))
+    assert pm.estimate_plan_seconds(64, 1, 1, comm_engine="pallas_ring") == \
+        pytest.approx(pm.estimate_plan_seconds(64, 1, 1))
+
+
+def test_engine_aware_chunk_model():
+    # optimal chunks balance pipeline fill against per-message overhead:
+    # cheaper messages -> finer slabs, no communication -> nothing to chunk
+    for eng in comm.ENGINE_NAMES:
+        k = pm.optimal_chunks(64, 4, 2, comm_engine=eng)
+        assert k >= 1 and (k & (k - 1)) == 0  # power of two
+        assert pm.optimal_chunks(64, 1, 1, comm_engine=eng) == 1
+    assert pm.optimal_chunks(256, 8, 8, comm_engine="pallas_ring") >= \
+        pm.optimal_chunks(256, 8, 8, comm_engine="overlap_ring")
+    # bigger problems amortize the same per-message cost over more fill
+    assert pm.optimal_chunks(512, 8, 8, comm_engine="torus") >= \
+        pm.optimal_chunks(32, 8, 8, comm_engine="torus")
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        pm.optimal_chunks(64, 4, 2, comm_engine="carrier_pigeon")
+    # the tuning space consumes the model: candidates carry per-engine
+    # chunk choices (the optimum and its power-of-two neighbors)
+    from repro.tuning.space import candidate_space
+    for eng in comm.ENGINE_NAMES:
+        cands = pm.chunk_candidates(64, 4, 2, eng)
+        assert cands and all(c >= 2 for c in cands)
+        opt = pm.optimal_chunks(64, 4, 2, comm_engine=eng)
+        assert opt in cands or opt <= 1
+        piped = {c.chunks for c in candidate_space(64, 4, 2, backends=["jnp"])
+                 if c.comm_engine == eng and c.schedule == "pipelined"}
+        assert piped == set(cands)
+    # no-communication grids fall back to the engine-blind legacy choices
+    assert pm.chunk_candidates(64, 1, 1, "switched") == (2, 4, 8)
+
+
+def test_ring_exchange_rdma_tpu_path_preserves_interleave(monkeypatch):
+    # the fused kernel is atomic, so on the TPU path a JAX-level interleave
+    # thunk must still run (serialized, before the kernel) and its result
+    # must come back as `follow` — dropping it would crash the slab
+    # pipeline of every non-fusable phase (kernel stubbed: no TPU here)
+    import jax.numpy as jnp
+
+    from repro.kernels import ring_rdma
+
+    monkeypatch.setattr(ring_rdma, "_ring_rdma_tpu",
+                        lambda arrs, axes, **kw: (list(arrs), None))
+    monkeypatch.setattr(ring_rdma.compat, "axes_size", lambda axes: 4)
+    outs, follow = ring_rdma.ring_exchange_rdma(
+        (jnp.ones((4, 2)),), ("data",), split_axis=0, concat_axis=1,
+        interleave=lambda: "butterflies-ran", interpret=False)
+    assert follow == "butterflies-ran" and len(outs) == 1
+
+
+def test_pallas_ring_engine_kwargs():
+    # plan-derived engines know the butterfly backend and data model they
+    # schedule (the fusion decision of the RDMA kernel)
+    from repro.core.fft3d import FFT3DPlan
+
+    grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, comm_engine="pallas_ring",
+                     backend="pallas", real=True)
+    eng = plan.engine()
+    assert isinstance(eng, comm.PallasRingEngine)
+    assert eng.backend == "pallas" and eng.real is True
+    assert plan.net == "torus"
 
 
 def test_run_chunked_matches_unchunked():

@@ -4,7 +4,6 @@ These are the paper's claims; the model must reproduce them (EXPERIMENTS.md
 cites this file as the faithful-reproduction evidence for Tables 4.x/5.x).
 """
 
-import math
 
 import pytest
 

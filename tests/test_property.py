@@ -1,6 +1,5 @@
 """Property-based (hypothesis) tests of system invariants."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -84,14 +83,52 @@ def test_pencil_shapes_tile_volume(pu, pv, n):
        n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2 ** 16))
 @settings(**SET)
 def test_engine_fold_unfold_identity(engine, fold, n, seed):
-    # any engine's unfold∘fold is the identity (here on the degenerate 1×1
-    # grid, where folds reduce to pure local transposes — the distributed
-    # version of the same property runs in tests/_dist_transpose_check.py)
+    # any engine's unfold∘fold is the identity — including pallas_ring,
+    # whose off-TPU exchanges run the kernel's interpret-mode fallback
+    # (here on the degenerate 1×1 grid, where folds reduce to pure local
+    # transposes — the distributed version of the same property runs in
+    # tests/_dist_transpose_check.py on 4x2/2x4/8x1 meshes)
     g = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
     eng = comm.make_engine(engine, g)
     x = jnp.asarray(np.random.RandomState(seed).randn(n, n, n))
     back = eng.unfold(fold, eng.fold(fold, x))
     np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(p=st.sampled_from([2, 4, 8]), blk=st.sampled_from([1, 3, 4]),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_nic_staging_kernels_roundtrip(p, blk, seed):
+    # the interpret-mode fallback's Pallas NIC staging: taking every block
+    # out of a stacked buffer and placing each into its slot of a fresh
+    # buffer reproduces the buffer exactly (the local data movement the
+    # RDMA engine performs around each wire hop)
+    from repro.kernels import ring_rdma
+
+    xs = jnp.asarray(np.random.RandomState(seed).randn(p, blk, 5))
+    out = jnp.zeros_like(xs)
+    for i in range(p):
+        b = ring_rdma.nic_take(xs, i)
+        np.testing.assert_array_equal(np.asarray(b)[0], np.asarray(xs)[i])
+        out = ring_rdma.nic_place(out, b, (i + 1) % p)  # land at a new slot
+    want = np.roll(np.asarray(xs), 1, axis=0)
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+@given(engine=st.sampled_from(comm.ENGINE_NAMES),
+       n=st.sampled_from([32, 64, 256]),
+       pu=st.sampled_from([1, 2, 4, 8]), pv=st.sampled_from([1, 2, 8]))
+@settings(**SET)
+def test_chunk_model_invariants(engine, n, pu, pv):
+    # the engine-aware chunk model always proposes a power of two, returns
+    # 1 exactly when nothing communicates, and never exceeds its cap
+    k = pm.optimal_chunks(n, pu, pv, comm_engine=engine)
+    assert 1 <= k <= pm.MAX_MODEL_CHUNKS and (k & (k - 1)) == 0
+    if pu == 1 and pv == 1:
+        assert k == 1
+    cands = pm.chunk_candidates(n, pu, pv, engine)
+    assert all(2 <= c <= pm.MAX_MODEL_CHUNKS and (c & (c - 1)) == 0
+               for c in cands)
 
 
 @given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 1000),

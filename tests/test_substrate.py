@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.checkpoint import CheckpointManager
 from repro.data.pipeline import DataConfig, Pipeline, write_token_file

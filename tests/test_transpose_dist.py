@@ -1,8 +1,9 @@
 """Distributed TransposeEngine equivalence: every engine (switched all-to-all,
-torus ring, compute-overlapped ring) must compute the identical relayout,
-``unfold ∘ fold`` must be the identity, and the full 3D FFT built on each
-engine must be allclose (fp64, 1e-10) to the switched reference for forward
-and forward∘inverse, on non-trivial Pu×Pv grids (paper §5.5, Fig. 4.3)."""
+torus ring, compute-overlapped ring, Pallas async-RDMA ring in interpret
+mode) must compute the identical relayout, ``unfold ∘ fold`` must be the
+identity, and the full 3D FFT built on each engine must be allclose (fp64,
+1e-10) to the switched reference for forward and forward∘inverse, on
+non-trivial Pu×Pv grids (paper §5.5, Fig. 4.3)."""
 
 import os
 import subprocess
@@ -25,10 +26,24 @@ def test_engines_match_switched(shape):
     assert out.returncode == 0, out.stderr[-3000:]
     assert "ALL_OK" in out.stdout
     assert "composed_folds_bitexact OK" in out.stdout
-    for engine in ("torus", "overlap_ring"):
+    for engine in ("torus", "overlap_ring", "pallas_ring"):
         assert f"fft_{engine}_allclose OK" in out.stdout
         for fold in ("xy", "yz"):
             assert f"{fold}_roundtrip_{engine} OK" in out.stdout
             assert f"{fold}_relayout_bitexact_{engine} OK" in out.stdout
-    assert "fft_overlap_ring_pipelined OK" in out.stdout
-    assert "fft_overlap_ring_real OK" in out.stdout
+    # the overlapped rings also cover the pipelined schedule and the real
+    # (r2c) data model — pallas_ring exercising its interpret-mode fallback
+    for engine in ("overlap_ring", "pallas_ring"):
+        assert f"fft_{engine}_pipelined OK" in out.stdout
+        assert f"fft_{engine}_real OK" in out.stdout
+
+
+def test_engine_filter_unknown_engine_fails():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_dist_transpose_check.py"),
+         "4x2", "--engine", "carrier_pigeon"],
+        env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode != 0
+    assert "carrier_pigeon" in out.stderr
