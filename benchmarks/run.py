@@ -7,6 +7,9 @@ report ``us_per_call=0``; measured rows time real executions on this host.
 document that CI uploads as the perf-trajectory artifact.
 
     PYTHONPATH=src python -m benchmarks.run [--only a,b,c] [--json BENCH_fft.json]
+
+``--list`` prints the known ``--only`` workload names (one per line) and
+exits — the discovery aid for the exit-2 unknown-name path.
 """
 
 from __future__ import annotations
@@ -267,7 +270,13 @@ def main() -> None:
                          f"{','.join(sorted(BENCHES))}")
     ap.add_argument("--json", dest="json_path", default="",
                     help="also write rows as a bench-fft/v1 JSON document")
+    ap.add_argument("--list", action="store_true",
+                    help="print the known --only workload names and exit")
     args = ap.parse_args()
+    if args.list:
+        for name in sorted(BENCHES):
+            print(name)
+        return
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
     unknown = [n for n in names if n not in BENCHES]
     if unknown:

@@ -4,7 +4,7 @@ The paper's central architectural claim is that the fold communications
 (hardware tasks C and G) must be *pipelined against* the butterfly engines,
 not barriered between phases (Fig. 4.3): the NIC streams blocks while the
 FFT engines keep computing. This module makes that scheduling decision a
-first-class, pluggable object with four implementations:
+first-class, pluggable object with five implementations:
 
 * ``SwitchedEngine``    — one ``lax.all_to_all`` per fold (the 2D switched
   fabric of Fig. 5.10, Eq. 5.5). Overlap across ``chunks`` slabs is left to
@@ -22,6 +22,21 @@ first-class, pluggable object with four implementations:
   kernel (the paper's NIC offload) instead of hoped-for from XLA's
   scheduler. Off-TPU it runs the kernel's interpret-mode fallback
   (ppermute wire hop + Pallas NIC staging), bit-exact vs ``torus``.
+* ``BidiRingEngine``    — the two-NIC ring of Fig. 5.9: every fold splits
+  its blocks into a clockwise and a counter-clockwise stream and drives
+  both torus directions concurrently, finishing in ``ceil((P−1)/2)``
+  exchange rounds instead of P−1. On TPU the exchange is the bidirectional
+  async-RDMA kernel (``kernels.ring_rdma.ring_exchange_bidi_rdma``,
+  double-buffered sends to both neighbors with per-direction semaphores);
+  off-TPU it is the two counter-rotating ``ppermute`` streams of
+  ``transpose.ring_exchange_bidi`` — same overlapped schedule as
+  ``overlap_ring``, half the rounds.
+
+Ring engines carry an ``exchange_rounds`` counter: every exchange routed
+through the ``_exchange``/``_rdma`` hooks adds its wire-round count
+(``wire_rounds(P)`` — P−1 for the unidirectional rings, ``ceil((P−1)/2)``
+for the bidirectional one) at trace time, so tests can pin the round
+complexity an engine actually uses.
 
 Engines expose two surfaces:
 
@@ -131,6 +146,9 @@ class TransposeEngine:
         self.chunks = max(int(chunks), 1)
         self.backend = backend   # butterfly engine the schedule will run
         self.real = real         # r2c data model (X phase is not plain c2c)
+        # wire rounds traced through the ring engines' exchange hooks (the
+        # base/switched engines never route through them and keep 0)
+        self.exchange_rounds = 0
 
     # ---- relayout primitives (pure data movement) ------------------------
     def fold_xy(self, a):
@@ -227,10 +245,16 @@ class OverlapRingEngine(TorusEngine):
     mode = "torus"
     fabric = "torus"
 
+    #: wire rounds one exchange costs over a P-rank dimension — the round
+    #: model the ``exchange_rounds`` counter accumulates (pure Python, so
+    #: the complexity claim is unit-testable without devices)
+    wire_rounds = staticmethod(tr.ring_rounds)
+
     # ---- the transport hook ----------------------------------------------
     def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,
                   interleave=None):
         """Tiled ring all-to-all of same-shaped ``arrs`` (+ fused thunk)."""
+        self.exchange_rounds += self.wire_rounds(tr._axis_size(axes))
         return tr.ring_exchange(arrs, axes, split_axis=split_axis,
                                 concat_axis=concat_axis, interleave=interleave)
 
@@ -365,12 +389,24 @@ class PallasRingEngine(OverlapRingEngine):
     mode = "torus"
     fabric = "torus"
 
+    # ---- the RDMA transport hooks ----------------------------------------
+    def _transport(self, arrs, axes, **kw):
+        """The async-RDMA contract this engine's exchanges lower to — the
+        one method ``bidi_ring`` overrides to swap in the two-NIC kernel."""
+        from repro.kernels import ring_rdma
+        return ring_rdma.ring_exchange_rdma(arrs, axes, **kw)
+
+    def _rdma(self, arrs, axes, **kw):
+        """Counted transport: every exchange — the ``_exchange`` hook *and*
+        the fused phases' in-kernel payload path — goes through here, so
+        ``exchange_rounds`` reflects the kernel's real round complexity."""
+        self.exchange_rounds += self.wire_rounds(tr._axis_size(axes))
+        return self._transport(arrs, axes, **kw)
+
     def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,
                   interleave=None):
-        from repro.kernels import ring_rdma
-        return ring_rdma.ring_exchange_rdma(
-            arrs, axes, split_axis=split_axis, concat_axis=concat_axis,
-            interleave=interleave)
+        return self._rdma(arrs, axes, split_axis=split_axis,
+                          concat_axis=concat_axis, interleave=interleave)
 
     # ---- in-kernel butterfly fusion (TPU only) ---------------------------
     def _fusable(self, fold: str, pair) -> bool:
@@ -384,7 +420,6 @@ class PallasRingEngine(OverlapRingEngine):
                 and ring_rdma.fusable_payload(pair))
 
     def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        from repro.kernels import ring_rdma
         p = self._ranks(fold)
         if p <= 1 or not self._fusable(fold, tuple(arrs[:2])):
             return super().fold_phase(compute, arrs, fold=fold,
@@ -405,7 +440,7 @@ class PallasRingEngine(OverlapRingEngine):
         for i in range(ns):
             payload = slab(i + 1) if i + 1 < ns else None
             d = cur[0].ndim
-            ex, follow = ring_rdma.ring_exchange_rdma(
+            ex, follow = self._rdma(
                 (cur[0], cur[1]), axes, split_axis=d + split_off,
                 concat_axis=d + concat_off, payload=payload)
             outs.append((post(ex[0]), post(ex[1])))
@@ -414,7 +449,6 @@ class PallasRingEngine(OverlapRingEngine):
                      for k in range(2))
 
     def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        from repro.kernels import ring_rdma
         p = self._ranks(fold)
         if p <= 1 or not self._fusable(fold, tuple(arrs[:2])):
             return super().unfold_phase(compute, arrs, fold=fold,
@@ -433,7 +467,7 @@ class PallasRingEngine(OverlapRingEngine):
                   for a in arrs]
             br, bi = pre(sl[0]), pre(sl[1])
             d = br.ndim
-            ex, done = ring_rdma.ring_exchange_rdma(
+            ex, done = self._rdma(
                 (br, bi), axes, split_axis=d + split_off,
                 concat_axis=d + concat_off, payload=prev, inverse=True)
             if done is not None:
@@ -444,5 +478,44 @@ class PallasRingEngine(OverlapRingEngine):
                      for k in range(len(outs[0])))
 
 
+# ---------------------------------------------------------------------------
+# bidirectional ring: both torus directions per round (two NICs, Fig. 5.9)
+# ---------------------------------------------------------------------------
+
+@_register
+class BidiRingEngine(PallasRingEngine):
+    """The ring driven over *both* torus directions at once (paper Fig. 5.9:
+    every node owns a +u and a −u link, and the NIC can stream on both).
+
+    Each fold's blocks split into a clockwise and a counter-clockwise
+    stream — round r ships block me+r one way and block me−r the other, on
+    opposite links — so the exchange completes in ``ceil((P−1)/2)`` rounds
+    instead of the unidirectional rings' P−1 (``wire_rounds``; asserted via
+    the ``exchange_rounds`` counter). P=2 degenerates to the plain ring
+    (both directions name the same neighbor, one round); odd P splits
+    (P−1)/2 blocks per direction every round; even P sends the shared
+    farthest block clockwise only on the last round.
+
+    Transports: on TPU the exchange is the bidirectional async-RDMA kernel
+    (``kernels.ring_rdma.ring_exchange_bidi_rdma`` — double-buffered
+    ``make_async_remote_copy`` sends to both neighbors per round with
+    per-direction semaphores, in-kernel butterflies on fusable payloads
+    like ``pallas_ring``); off-TPU it is the two counter-rotating
+    ``ppermute`` streams of ``transpose.ring_exchange_bidi``, keeping the
+    ``overlap_ring`` compute-overlap schedule with half the rounds and
+    staying bit-exact vs ``torus``.
+    """
+
+    name = "bidi_ring"
+    mode = "torus"
+    fabric = "torus"
+
+    wire_rounds = staticmethod(tr.bidi_rounds)
+
+    def _transport(self, arrs, axes, **kw):
+        from repro.kernels import ring_rdma
+        return ring_rdma.ring_exchange_bidi_rdma(arrs, axes, **kw)
+
+
 ENGINE_NAMES = tuple(ENGINES)
-# ("switched", "torus", "overlap_ring", "pallas_ring")
+# ("switched", "torus", "overlap_ring", "pallas_ring", "bidi_ring")

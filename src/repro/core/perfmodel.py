@@ -220,44 +220,139 @@ def table_5_7(mu: int = 1, r: int = 4, k: int = 1, f_hz: float = 180e6):
 #: ``jnp`` is XLA's native FFT; ``mxu`` the four-step matmul engine (~8.5×
 #: the arithmetic, on denser units); ``ref`` the pure-jnp radix-2 oracle;
 #: ``pallas`` the radix-2 kernel, interpreted off-TPU.
+#: These are the *fallback priors*: :func:`backend_compute_weight` prefers
+#: the measured values of an active ``repro.tuning.calibrate`` run.
 BACKEND_COMPUTE_WEIGHT = {"jnp": 1.0, "mxu": 3.0, "ref": 10.0, "pallas": 30.0}
 
 
 #: Which §5.5 fabric each TransposeEngine's traffic is priced on (kept in
 #: sync with ``core.comm`` — validated by tests to avoid a jax import here).
 ENGINE_FABRIC = {"switched": "switched", "torus": "torus",
-                 "overlap_ring": "torus", "pallas_ring": "torus"}
+                 "overlap_ring": "torus", "pallas_ring": "torus",
+                 "bidi_ring": "torus"}
 
 
 #: Exposed per-message overhead (seconds, nominal FPGA) each engine pays on
 #: its critical path — the §4.2 DMA/NIC setup latency (l_comm) wearing the
 #: engine's clothes: the switched fabric dispatches one all-to-all per slab;
-#: the XLA rings dispatch one ppermute per ring round; the Pallas RDMA ring
-#: posts its sends from inside the kernel (a NIC doorbell, no per-round XLA
-#: dispatch), which is the whole point of the paper's NIC offload.
+#: the XLA rings dispatch one ppermute per ring round; the Pallas RDMA rings
+#: (``pallas_ring`` and the two-NIC ``bidi_ring``) post their sends from
+#: inside the kernel (a NIC doorbell, no per-round XLA dispatch), which is
+#: the whole point of the paper's NIC offload.
+#: These are the *fallback priors*: :func:`message_overhead_s` prefers the
+#: measured values of an active ``repro.tuning.calibrate`` run.
 ENGINE_MESSAGE_OVERHEAD_S = {
     "switched": 2e-6,
     "torus": 2e-6,
     "overlap_ring": 2e-6,
     "pallas_ring": 0.5e-6,
+    "bidi_ring": 0.5e-6,
 }
 
 
-def fold_messages(q: int, fabric: str) -> int:
-    """Messages one rank issues for one fold over a ``q``-rank dimension:
-    one tiled all-to-all on the switched fabric, q−1 ring rounds on the
-    torus (Fig. 5.9/5.10). Zero when the fold never communicates."""
+# ---------------------------------------------------------------------------
+# measured calibration overlay (repro.tuning.calibrate)
+# ---------------------------------------------------------------------------
+
+_CALIBRATION: dict | None = None
+_CALIBRATION_LOADED = False
+
+
+def set_calibration(doc: dict | None) -> None:
+    """Install a calibration document for this process (``None`` pins the
+    built-in priors). Overrides the lazily-loaded on-disk calibration until
+    :func:`reset_calibration`."""
+    global _CALIBRATION, _CALIBRATION_LOADED
+    _CALIBRATION = dict(doc) if doc else None
+    _CALIBRATION_LOADED = True
+
+
+def reset_calibration() -> None:
+    """Forget any installed calibration; the next query lazily re-loads the
+    on-disk document (``$REPRO_CALIBRATION`` / the default cache path)."""
+    global _CALIBRATION, _CALIBRATION_LOADED
+    _CALIBRATION = None
+    _CALIBRATION_LOADED = False
+
+
+def active_calibration() -> dict | None:
+    """The calibration document the model currently consults, if any.
+
+    Lazily loads the persisted ``calibration.json`` on first use (only a
+    document whose substrate fingerprint matches this process is accepted —
+    see ``repro.tuning.calibrate``); :func:`set_calibration` short-circuits
+    the load. Never raises: a missing/invalid/foreign file means priors.
+    """
+    global _CALIBRATION, _CALIBRATION_LOADED
+    if not _CALIBRATION_LOADED:
+        _CALIBRATION_LOADED = True
+        try:
+            from repro.tuning.calibrate import load_active_calibration
+            _CALIBRATION = load_active_calibration()
+        except Exception:
+            _CALIBRATION = None
+    return _CALIBRATION
+
+
+def message_overhead_s(engine: str) -> float:
+    """Exposed per-message cost of ``engine`` on this substrate: the
+    measured value of the active calibration when one exists, else the
+    ``ENGINE_MESSAGE_OVERHEAD_S`` prior."""
+    if engine not in ENGINE_MESSAGE_OVERHEAD_S:
+        raise ValueError(f"unknown comm engine {engine!r}; "
+                         f"have {sorted(ENGINE_MESSAGE_OVERHEAD_S)}")
+    cal = active_calibration() or {}
+    got = (cal.get("engine_message_overhead_s") or {}).get(engine)
+    if isinstance(got, (int, float)) and got > 0:
+        return float(got)
+    return ENGINE_MESSAGE_OVERHEAD_S[engine]
+
+
+def backend_compute_weight(backend: str) -> float:
+    """Relative compute cost of ``backend``: measured (active calibration)
+    when available, else the ``BACKEND_COMPUTE_WEIGHT`` prior (1.0 for
+    unknown backends, matching the old ``.get`` default)."""
+    cal = active_calibration() or {}
+    got = (cal.get("backend_compute_weight") or {}).get(backend)
+    if isinstance(got, (int, float)) and got > 0:
+        return float(got)
+    return BACKEND_COMPUTE_WEIGHT.get(backend, 1.0)
+
+
+def bidi_round_ratio(q: int) -> float:
+    """Wire-time ratio of the bidirectional ring vs the unidirectional one
+    over a ``q``-rank dimension: ``ceil((q−1)/2) / (q−1)`` exchange rounds
+    (both directions carry blocks concurrently; 1.0 at q ≤ 2 where both
+    directions name the same neighbor)."""
+    if q <= 2:
+        return 1.0
+    return (q // 2) / (q - 1)
+
+
+def fold_messages(q: int, fabric: str, engine: str = "") -> int:
+    """Exposed message dispatches one rank pays for one fold over a
+    ``q``-rank dimension: one tiled all-to-all on the switched fabric, q−1
+    ring rounds on the torus (Fig. 5.9/5.10) — except the bidirectional
+    ring, whose two per-round sends are posted concurrently on opposite
+    links, leaving ``ceil((q−1)/2)`` round dispatches on the critical path.
+    Zero when the fold never communicates."""
     if q <= 1:
         return 0
-    return 1 if fabric == "switched" else q - 1
+    if fabric == "switched":
+        return 1
+    if engine == "bidi_ring":
+        return q // 2
+    return q - 1
 
 
 def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
                       schedule: str, mu: int, r2c_packed: bool, r: int,
                       f_hz: float, link_bytes_per_s: float,
-                      s: int) -> tuple[float, float]:
+                      s: int, bidi: bool = False) -> tuple[float, float]:
     """(T_comp, T_net) of one transform: Eq. 4.14/4.15 compute and the
     per-fold V′ traffic of Eq. 3.4 with the Eq. 5.5/5.6 fabric penalty.
+    ``bidi`` scales each fold's wire time by the bidirectional ring's
+    round ratio (both torus directions carry blocks concurrently).
     Shared by :func:`estimate_plan_seconds` and :func:`optimal_chunks`."""
     nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
     p = max(pu, 1) * max(pv, 1)
@@ -270,7 +365,7 @@ def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
         t_comp = (mu + 1.0) * vol / (4.0 * p * r) / f_hz
     else:
         t_comp = 2.0 * mu * vol / (2.0 * p * r) / f_hz          # Eq. 4.14
-    t_comp *= BACKEND_COMPUTE_WEIGHT.get(backend, 1.0)
+    t_comp *= backend_compute_weight(backend)
     if r2c_packed:
         t_comp *= 5.0 / 6.0  # X phase runs an N/2-point engine (1 of 3 phases)
 
@@ -282,6 +377,8 @@ def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
         t = v_prime * (q - 1) / q / link_bytes_per_s
         if fabric == "torus":
             t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
+        if bidi:
+            t *= bidi_round_ratio(q)  # both directions stream concurrently
         return t
 
     return t_comp, fold_seconds(pu) + fold_seconds(pv)
@@ -313,8 +410,13 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     ring-round dispatches. ``pallas_ring`` is the same timeline with its
     sends posted by the kernel itself: half the exposed fill (double
     buffering) and the NIC-doorbell message cost of
-    ``ENGINE_MESSAGE_OVERHEAD_S``. Absolute numbers are nominal-FPGA
-    seconds; the autotuner only uses the *ordering* to prune the sweep.
+    :func:`message_overhead_s`. ``bidi_ring`` additionally drives both
+    torus directions per round (Fig. 5.9), scaling each fold's wire time
+    and round dispatches by ``ceil((q−1)/2)/(q−1)``. Message overheads and
+    backend weights come from the active measured calibration when one
+    exists (``repro.tuning.calibrate``), else the built-in priors.
+    Absolute numbers are nominal-FPGA seconds; the autotuner only uses the
+    *ordering* to prune the sweep.
     """
     engine = comm_engine or net
     if engine not in ENGINE_FABRIC:
@@ -325,10 +427,11 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     t_comp, t_net = _comp_net_seconds(
         n, pu, pv, fabric=fabric, backend=backend, schedule=schedule, mu=mu,
         r2c_packed=r2c_packed, r=r, f_hz=f_hz,
-        link_bytes_per_s=link_bytes_per_s, s=s)
-    t_msg = ENGINE_MESSAGE_OVERHEAD_S[engine]
-    msgs = fold_messages(pu, fabric) + fold_messages(pv, fabric)
-    if engine in ("overlap_ring", "pallas_ring") and (pu > 1 or pv > 1):
+        link_bytes_per_s=link_bytes_per_s, s=s, bidi=engine == "bidi_ring")
+    t_msg = message_overhead_s(engine)
+    msgs = fold_messages(pu, fabric, engine) + fold_messages(pv, fabric, engine)
+    if engine in ("overlap_ring", "pallas_ring", "bidi_ring") \
+            and (pu > 1 or pv > 1):
         # block-granular overlap: every ring round's latency hides under
         # another block's butterflies (Fig. 4.3), so the longer stream
         # dominates and only a pipeline-fill fraction of the shorter one
@@ -337,12 +440,12 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
         # count — and the estimate can never exceed the serial sum, since
         # overlapping identical work cannot be slower. Message dispatches
         # pipeline with the compute too; only the steady-state round count
-        # stays on the critical path. The Pallas RDMA ring's explicit
+        # stays on the critical path. The Pallas RDMA rings' explicit
         # double buffering halves the exposed fill. On a 1×1 grid nothing
         # communicates and the engine degenerates to the serial forms below.
         slabs = max(max(pu, 1) + max(pv, 1), k, 2)
         fill = min(t_comp, t_net) / slabs
-        if engine == "pallas_ring":
+        if engine in ("pallas_ring", "bidi_ring"):
             fill /= 2.0
         return max(t_comp, t_net) + fill + msgs * t_msg
     overhead = k * msgs * t_msg  # one exposed dispatch per slab exchange
@@ -379,23 +482,26 @@ def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str,
     gives ``k* = sqrt((T_comp + T_net) / (m · t_msg))``, snapped to the
     nearest power of two in ``[1, MAX_MODEL_CHUNKS]``. The model is
     engine-aware through both the per-message cost ``t_msg``
-    (``ENGINE_MESSAGE_OVERHEAD_S`` — the Pallas RDMA ring's cheap
-    NIC-doorbell sends support finer slabs than the XLA rings) and the
-    per-slab message count ``m`` (``fold_messages`` on the engine's
-    fabric). Returns 1 when no fold communicates (nothing to overlap).
+    (:func:`message_overhead_s` — measured by ``repro.tuning.calibrate``
+    when a calibration is active, else the prior; the Pallas RDMA rings'
+    cheap NIC-doorbell sends support finer slabs than the XLA rings) and
+    the per-slab message count ``m`` (``fold_messages`` on the engine's
+    fabric — halved round dispatches for ``bidi_ring``). Returns 1 when no
+    fold communicates (nothing to overlap).
     """
     if comm_engine not in ENGINE_FABRIC:
         raise ValueError(f"unknown comm engine {comm_engine!r}; "
                          f"have {sorted(ENGINE_FABRIC)}")
     fabric = ENGINE_FABRIC[comm_engine]
-    msgs = fold_messages(pu, fabric) + fold_messages(pv, fabric)
-    t_msg = ENGINE_MESSAGE_OVERHEAD_S[comm_engine]
+    msgs = fold_messages(pu, fabric, comm_engine) \
+        + fold_messages(pv, fabric, comm_engine)
+    t_msg = message_overhead_s(comm_engine)
     if msgs == 0 or t_msg <= 0:
         return 1
     t_comp, t_net = _comp_net_seconds(
         n, pu, pv, fabric=fabric, backend=backend, schedule=schedule, mu=mu,
         r2c_packed=r2c_packed, r=r, f_hz=f_hz,
-        link_bytes_per_s=link_bytes_per_s, s=s)
+        link_bytes_per_s=link_bytes_per_s, s=s, bidi=comm_engine == "bidi_ring")
     k_star = math.sqrt((t_comp + t_net) / (msgs * t_msg))
     if k_star <= 1.0:
         return 1

@@ -17,9 +17,11 @@ LINK_CAPS_GBPS = (100.0, 200.0, 400.0)      # thesis reference lines
 FREQS_MHZ = (180.0, 250.0, 380.0)           # slow / standard / very fast engine
 
 #: TransposeEngine → fabric it must be sized for: the switched engine needs
-#: the full-bisection row/column switches of Fig. 5.10; both ring engines
-#: (plain torus and the compute-overlapped ring) ride the 2D torus links of
-#: Fig. 5.9 — overlap changes *when* blocks move, not how many links exist.
+#: the full-bisection row/column switches of Fig. 5.10; every ring engine
+#: (plain torus, the compute-overlapped ring, the RDMA ring, and the
+#: bidirectional two-NIC ring) rides the 2D torus links of Fig. 5.9 —
+#: overlap and direction change *when* blocks move, not how many links
+#: exist (the torus node already owns both ±u links the bidi ring drives).
 ENGINE_FABRIC = pm.ENGINE_FABRIC
 
 
@@ -76,8 +78,10 @@ class NetworkPlan:
     @property
     def message_overhead_s(self) -> float:
         """Exposed per-message cost of the engine this plan serves (falls
-        back to the fabric's serial engine when built without one)."""
-        return pm.ENGINE_MESSAGE_OVERHEAD_S[self.engine or self.topology]
+        back to the fabric's serial engine when built without one). Uses
+        the measured value when a ``repro.tuning.calibrate`` run is active
+        on this substrate, else the built-in prior."""
+        return pm.message_overhead_s(self.engine or self.topology)
 
     @property
     def nics_per_node(self) -> int:

@@ -10,6 +10,13 @@ Two network models, mirroring §5.5:
   collective-permute is routed over r ICI hops, reproducing the multi-hop
   degradation of Eq. 5.6 / Fig. 5.12 (APEnet-style DOR routing).
 
+The torus ring also comes in a **bidirectional** flavor
+(:func:`ring_exchange_bidi`): the paper's NIC drives both torus directions
+at once (Fig. 5.9 — every node has a +u and a −u link), so the exchange
+splits its blocks into a clockwise and a counter-clockwise stream and ships
+one block per direction per round, finishing in ``ceil((P−1)/2)`` rounds
+instead of P−1 (:func:`bidi_rounds` vs :func:`ring_rounds`).
+
 All functions run *inside* ``shard_map`` over the FFT mesh axes. This module
 is the shared block-exchange layer; scheduling (chunking, compute overlap)
 belongs to the TransposeEngine implementations in ``core.comm``.
@@ -27,6 +34,23 @@ MODES = ("switched", "torus")
 
 _flat_axis_index = compat.flat_axis_index
 _axis_size = compat.axes_size
+_ppermute = lax.ppermute   # one wire-hop primitive (patchable in unit tests)
+
+
+def ring_rounds(p: int) -> int:
+    """Exchange rounds of the unidirectional ring: P−1 (Fig. 5.9, one NIC)."""
+    return max(p - 1, 0)
+
+
+def bidi_rounds(p: int) -> int:
+    """Exchange rounds of the bidirectional ring: ``ceil((P−1)/2)``.
+
+    Both torus directions carry one block per round; when P is even the
+    farthest block (P/2 hops either way) goes clockwise only, which is
+    exactly what makes ``ceil((P−1)/2) == P//2``. P=2 degenerates to one
+    round — both directions name the same neighbor.
+    """
+    return max(p, 1) // 2
 
 
 def all_to_all_blocks(x, axes: tuple[str, ...], *, split_axis: int,
@@ -93,13 +117,65 @@ def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
     follow = None
     for r in range(1, p):
         perm = [(i, (i + r) % p) for i in range(p)]
-        recvs = [lax.ppermute(
+        recvs = [_ppermute(
             lax.dynamic_index_in_dim(xs, (me + r) % p, axis=0, keepdims=True),
             name, perm) for xs in xss]
         if follow is None and interleave is not None:
             follow = interleave()
         outs = [lax.dynamic_update_index_in_dim(o, recv, (me - r) % p, axis=0)
                 for o, recv in zip(outs, recvs)]
+
+    return [merge_blocks(o, p, concat_axis) for o in outs], follow
+
+
+def ring_exchange_bidi(arrs, axes, *, split_axis: int, concat_axis: int,
+                       interleave=None):
+    """The ring exchange over *both* torus directions at once (Fig. 5.9).
+
+    Round r ships the block for rank (me+r) mod P clockwise and the block
+    for rank (me−r) mod P counter-clockwise — two counter-rotating
+    ``ppermute`` streams on opposite links, so all P−1 foreign blocks are
+    on the wire after ``bidi_rounds(P) == ceil((P−1)/2)`` rounds instead of
+    P−1. When P is even, the farthest block (r == P−r) is shared between
+    the directions and goes clockwise only. Same contract, block order, and
+    rank-major merge as :func:`ring_exchange` — the relayout is
+    bit-identical; only the schedule (and the round count) changes.
+    """
+    p = _axis_size(axes)
+    me = _flat_axis_index(axes)
+    name = axes if len(axes) > 1 else axes[0]
+
+    xss = [stack_blocks(x, p, split_axis) for x in arrs]
+    # own block stays local
+    outs = [lax.dynamic_update_index_in_dim(
+        jnp.zeros_like(xs),
+        lax.dynamic_index_in_dim(xs, me, axis=0, keepdims=True), me, axis=0)
+        for xs in xss]
+    follow = None
+    for r in range(1, bidi_rounds(p) + 1):
+        # clockwise stream: block me+r over the +r direction
+        perm_cw = [(i, (i + r) % p) for i in range(p)]
+        recvs_cw = [_ppermute(
+            lax.dynamic_index_in_dim(xs, (me + r) % p, axis=0, keepdims=True),
+            name, perm_cw) for xs in xss]
+        # counter-clockwise stream: block me−r over the −r direction,
+        # concurrently on the opposite links (skipped when it would be the
+        # clockwise block again: P even, r == P−r)
+        recvs_ccw = None
+        if r != p - r:
+            perm_ccw = [(i, (i - r) % p) for i in range(p)]
+            recvs_ccw = [_ppermute(
+                lax.dynamic_index_in_dim(xs, (me - r) % p, axis=0,
+                                         keepdims=True),
+                name, perm_ccw) for xs in xss]
+        if follow is None and interleave is not None:
+            follow = interleave()
+        outs = [lax.dynamic_update_index_in_dim(o, recv, (me - r) % p, axis=0)
+                for o, recv in zip(outs, recvs_cw)]
+        if recvs_ccw is not None:
+            outs = [lax.dynamic_update_index_in_dim(o, recv, (me + r) % p,
+                                                    axis=0)
+                    for o, recv in zip(outs, recvs_ccw)]
 
     return [merge_blocks(o, p, concat_axis) for o in outs], follow
 

@@ -29,6 +29,12 @@ rank-major merge, bit-identical relayout):
   the torus ring relayout by construction; CI pins it bit-exact against
   ``torus`` on 4x2/2x4/8x1 meshes (``tests/_dist_transpose_check.py``).
 
+``ring_exchange_bidi_rdma`` is the **two-NIC** variant (Fig. 5.9): each
+round sends to *both* torus neighbors over per-direction semaphores, so the
+exchange finishes in ``ceil((P−1)/2)`` double-buffered rounds instead of
+P−1; off-TPU it lowers to the counter-rotating ``ppermute`` streams of
+``transpose.ring_exchange_bidi``.
+
 All entry points run *inside* ``shard_map`` over the FFT mesh axes.
 """
 
@@ -204,8 +210,83 @@ def _rdma_ring_kernel(*refs, axis_name: str, p: int, n_arrays: int,
             rdma.wait()
 
 
+def _rdma_bidi_kernel(*refs, axis_name: str, p: int, n_arrays: int,
+                      n_payload: int, payload_rows: int, inverse: bool):
+    """ceil((P−1)/2) double-buffered rounds over *both* torus directions.
+
+    Round r starts the clockwise send (block me+r, routed +r) and the
+    counter-clockwise send (block me−r, routed −r on the opposite links) —
+    the paper's two-NIC node of Fig. 5.9 — then starts round r+1's pair,
+    runs payload chunk r−1's butterflies while all copies fly, and waits
+    round r. Semaphore slots are per (round, direction, array): dim 1 is
+    0=clockwise, 1=counter-clockwise, so the counter-rotating streams never
+    share a semaphore. Even rings skip the duplicate farthest hop
+    (r == P−r) and ship that block clockwise only.
+    """
+    fused = n_payload > 0
+    xs = refs[:n_arrays]
+    i = n_arrays
+    if fused:
+        pr_ref, pi_ref, twr_ref, twi_ref = refs[i:i + 4]
+        i += 4
+    outs = refs[i:i + n_arrays]
+    i += n_arrays
+    if fused:
+        qr_ref, qi_ref = refs[i:i + 2]
+        i += 2
+    copy_sem, send_sem, recv_sem = refs[i:i + 3]
+
+    me = lax.axis_index(axis_name)
+    rounds = tr.bidi_rounds(p)
+
+    # own block never touches the wire: local async DMA x[me] -> out[me]
+    for a in range(n_arrays):
+        dma = pltpu.make_async_copy(xs[a].at[me], outs[a].at[me], copy_sem)
+        dma.start()
+        dma.wait()
+
+    def start_round(r):
+        dirs = [(0, lax.rem(me + r, p))]            # clockwise: +r
+        if r != p - r:                              # ccw: −r (skip duplicate)
+            dirs.append((1, lax.rem(me - r + p, p)))
+        ops = []
+        for d, dst in dirs:
+            for a in range(n_arrays):
+                rdma = pltpu.make_async_remote_copy(
+                    src_ref=xs[a].at[dst],       # block destined for rank dst
+                    dst_ref=outs[a].at[me],      # lands in the remote slot "me"
+                    send_sem=send_sem.at[r - 1, d, a],
+                    recv_sem=recv_sem.at[r - 1, d, a],
+                    device_id=(dst,),
+                    device_id_type=pltpu.DeviceIdType.LOGICAL)
+                rdma.start()
+                ops.append(rdma)
+        return ops
+
+    in_flight = {1: start_round(1)}
+    for r in range(1, rounds + 1):
+        if r + 1 <= rounds:
+            in_flight[r + 1] = start_round(r + 1)   # next pair's sends
+        if fused:
+            off, cnt = _chunk_bounds(payload_rows, rounds, r - 1)
+            if cnt:
+                cr = pr_ref[pl.ds(off, cnt), :]
+                ci = pi_ref[pl.ds(off, cnt), :]
+                if inverse:
+                    ci = -ci
+                yr, yi = butterfly_stages(cr, ci, twr_ref[...], twi_ref[...],
+                                          n_payload)
+                if inverse:
+                    scale = jnp.asarray(1.0 / n_payload, yr.dtype)
+                    yr, yi = yr * scale, -(yi * scale)
+                qr_ref[pl.ds(off, cnt), :] = yr
+                qi_ref[pl.ds(off, cnt), :] = yi
+        for rdma in in_flight.pop(r):               # then wait both streams
+            rdma.wait()
+
+
 def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
-                   payload=None, inverse: bool = False):
+                   payload=None, inverse: bool = False, bidi: bool = False):
     """Build and invoke the fused RDMA kernel for one exchange."""
     p = compat.axes_size(axes)
     axis_name = axes[0]
@@ -238,8 +319,12 @@ def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
         out_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)] * 2
 
     kernel = functools.partial(
-        _rdma_ring_kernel, axis_name=axis_name, p=p, n_arrays=len(xss),
+        _rdma_bidi_kernel if bidi else _rdma_ring_kernel,
+        axis_name=axis_name, p=p, n_arrays=len(xss),
         n_payload=n_payload, payload_rows=payload_rows, inverse=inverse)
+    # per-direction semaphore slots for the bidi kernel (dim 1: cw, ccw)
+    sem_shape = ((max(tr.bidi_rounds(p), 1), 2, len(xss)) if bidi
+                 else (max(p - 1, 1), len(xss)))
     results = pl.pallas_call(
         kernel,
         in_specs=in_specs,
@@ -247,8 +332,8 @@ def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
         out_shape=out_shape,
         scratch_shapes=[
             pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA((max(p - 1, 1), len(xss))),
-            pltpu.SemaphoreType.DMA((max(p - 1, 1), len(xss))),
+            pltpu.SemaphoreType.DMA(sem_shape),
+            pltpu.SemaphoreType.DMA(sem_shape),
         ],
         compiler_params=pltpu.TPUCompilerParams(collective_id=0),
     )(*operands)
@@ -319,3 +404,45 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
                          "pass interleave= on the interpret path")
     return _ring_interpret(arrs, axes, split_axis=split_axis,
                            concat_axis=concat_axis, interleave=interleave)
+
+
+def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
+                            interleave=None, payload=None,
+                            inverse: bool = False,
+                            interpret: bool | None = None):
+    """Bidirectional (two-NIC) ring all-to-all through the async-RDMA engine.
+
+    Contract-compatible with ``transpose.ring_exchange_bidi`` (and therefore
+    with ``ring_exchange_rdma``): same block order, same rank-major merge,
+    bit-identical relayout — only the schedule changes, finishing in
+    ``ceil((P−1)/2)`` rounds by driving both torus directions per round
+    (paper Fig. 5.9). On TPU the exchange is one fused kernel of
+    double-buffered ``make_async_remote_copy`` sends to *both* neighbors
+    per round with per-direction semaphores (``_rdma_bidi_kernel``); a
+    fusable ``payload`` pair is butterflied in-kernel exactly like the
+    unidirectional kernel. Off-TPU (and for multi-axis rings, which have no
+    single-axis ``device_id``) the exchange is the two counter-rotating
+    ``ppermute`` streams of ``transpose.ring_exchange_bidi`` — the
+    interpret-portable schedule CI pins bit-exact vs ``torus``.
+    """
+    assert interleave is None or payload is None, \
+        "interleave (JAX-level thunk) and payload (in-kernel) are exclusive"
+    p = compat.axes_size(axes)
+    if p <= 1:
+        return [jnp.asarray(a) for a in arrs], None
+    if interpret is None:
+        interpret = not use_rdma()
+    if not interpret and len(axes) == 1:
+        # the fused kernel is atomic (see ring_exchange_rdma): non-fusable
+        # compute is emitted before it, fusable compute rides the payload
+        follow = interleave() if interleave is not None else None
+        outs, fused = _ring_rdma_tpu(arrs, axes, split_axis=split_axis,
+                                     concat_axis=concat_axis, payload=payload,
+                                     inverse=inverse, bidi=True)
+        return outs, (fused if payload is not None else follow)
+    if payload is not None:
+        raise ValueError("payload fusion requires the TPU RDMA lowering; "
+                         "pass interleave= on the interpret path")
+    return tr.ring_exchange_bidi(arrs, axes, split_axis=split_axis,
+                                 concat_axis=concat_axis,
+                                 interleave=interleave)

@@ -34,8 +34,8 @@ def build_parser() -> argparse.ArgumentParser:
                     help="viscosity (navier_stokes only)")
     ap.add_argument("--comm-engine", default="",
                     help="TransposeEngine for the fold communications "
-                         "(switched | torus | overlap_ring | pallas_ring; "
-                         "default: the solver's own plan default)")
+                         "(switched | torus | overlap_ring | pallas_ring | "
+                         "bidi_ring; default: the solver's own plan default)")
     ap.add_argument("--autotune", action="store_true",
                     help="pick the FFT plan by autotuning the whole solver "
                          "step instead of the pipelined/switched default")

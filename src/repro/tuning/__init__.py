@@ -17,13 +17,24 @@ all of those knobs; this package picks them automatically for a concrete
    fingerprint including JAX version, device kind, and the objective
    weights (``cache.PlanCache``), so repeat runs are free.
 
-Entry points: ``autotune(...)``, ``make_fft3d(..., autotune=True)``, and
-``python -m repro.tuning.cli --n 64 --mesh 4x2``.
+The analytic pruning of step 2 prefers *measured* model constants when a
+``repro.tuning.calibrate`` run has been persisted for this substrate
+(``python -m repro.tuning.calibrate``): per-engine message overheads and
+per-backend compute weights live in a fingerprinted ``calibration.json``
+with the same replay discipline as the plan cache, and the hardcoded
+tables in ``perfmodel`` remain as fallback priors.
+
+Entry points: ``autotune(...)``, ``make_fft3d(..., autotune=True)``,
+``python -m repro.tuning.cli --n 64 --mesh 4x2``, and
+``python -m repro.tuning.calibrate --quick``.
 """
 
 from repro.tuning.autotune import (TuneResult, autotune, time_candidate,
                                    time_candidate_pair)
 from repro.tuning.cache import PlanCache, default_cache_path, problem_fingerprint
+from repro.tuning.calibrate import (default_calibration_path,
+                                    load_active_calibration, run_calibration,
+                                    save_calibration, validate_calibration)
 from repro.tuning.solver import autotune_solver_step, time_solver_step
 from repro.tuning.space import DEFAULT_CANDIDATE, Candidate, candidate_space
 from repro.tuning.timing import time_us
@@ -33,5 +44,7 @@ __all__ = [
     "autotune_solver_step", "time_solver_step",
     "Candidate", "DEFAULT_CANDIDATE", "candidate_space",
     "PlanCache", "default_cache_path", "problem_fingerprint",
+    "default_calibration_path", "load_active_calibration", "run_calibration",
+    "save_calibration", "validate_calibration",
     "time_us",
 ]

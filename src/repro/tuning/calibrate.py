@@ -1,0 +1,372 @@
+"""Measured calibration of the analytic performance model.
+
+    PYTHONPATH=src python -m repro.tuning.calibrate [--quick] [--mesh 4x2]
+
+The perf model's pruning constants — ``ENGINE_MESSAGE_OVERHEAD_S`` (exposed
+per-message dispatch cost of each TransposeEngine) and
+``BACKEND_COMPUTE_WEIGHT`` (relative butterfly cost of each FFT backend) —
+shipped as hand-tuned priors, which ROADMAP flagged as unmeasured: on a real
+substrate the model can mis-rank autotuner candidates. This module measures
+both tables with microbenchmarks on the *current* substrate and persists
+them as a fingerprinted ``calibration.json`` (same discipline as the plan
+cache: a calibration is only ever replayed on the exact substrate that
+produced it — JAX version, platform, device kind, device count).
+
+Once written, the calibration is picked up lazily by
+``perfmodel.message_overhead_s`` / ``perfmodel.backend_compute_weight`` and
+therefore flows through ``estimate_plan_seconds``, ``optimal_chunks`` /
+``chunk_candidates``, ``tuning.space`` candidate enumeration, and
+``topology.NetworkPlan`` — the hardcoded tables remain as fallback priors
+for engines/backends the run could not measure.
+
+Measurement method:
+
+* **engine message overhead** — each engine's X↔Y fold is timed at two
+  payload sizes through the real ``shard_map`` path; the per-message cost
+  is the zero-payload extrapolation ``t(0)/messages`` of the linear model
+  ``t(bytes) = overhead + bytes/bw`` (so wire bandwidth cancels out and
+  only the dispatch/latency part remains). Needs a communicating mesh —
+  on a 1×1 grid nothing can be measured and the priors stand.
+* **backend compute weight** — each backend's 1D c2c transform is timed on
+  an identical planar batch; the weight is the ratio to ``jnp`` (XLA's
+  native FFT, the 1.0 reference, exactly as the priors are normalized).
+
+File location: ``$REPRO_CALIBRATION`` or ``~/.cache/repro/calibration.json``
+(one document per substrate — writing atomically replaces the previous one).
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import math
+import os
+
+SCHEMA = "fft-calibration/v1"
+ENV_VAR = "REPRO_CALIBRATION"
+
+#: substrate identity keys a calibration must match to be replayed
+FINGERPRINT_KEYS = ("jax_version", "platform", "device_kind", "device_count")
+
+#: floor for a measured per-message overhead: the zero-payload extrapolation
+#: is noise-sensitive, and a non-positive fit means the measurement carries
+#: no signal (fall back to the prior rather than persisting nonsense)
+MIN_OVERHEAD_S = 1e-9
+
+#: floor for a measured backend weight (jnp is the 1.0 reference)
+MIN_WEIGHT = 1e-3
+
+
+def default_calibration_path() -> str:
+    """``$REPRO_CALIBRATION`` if set, else ``~/.cache/repro/calibration.json``."""
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "calibration.json")
+
+
+def substrate_fingerprint() -> dict:
+    """Canonical identity of the measurement substrate (cf. the plan cache:
+    a calibration must never be replayed where it would not transfer)."""
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "device_count": len(jax.devices()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# microbenchmarks
+# ---------------------------------------------------------------------------
+
+def measure_backend_weights(*, rows: int = 64, length: int = 256,
+                            iters: int = 5, verbose: bool = False) -> dict:
+    """Measured ``BACKEND_COMPUTE_WEIGHT`` replacement: per-backend 1D c2c
+    wall time over an identical planar batch, normalized to ``jnp``.
+
+    Backends that fail on this substrate are skipped (their priors stand).
+    Returns ``{}`` when the ``jnp`` reference itself cannot be timed.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as kops
+    from repro.tuning.timing import time_us
+
+    rng = np.random.RandomState(0)
+    xr = jnp.asarray(rng.randn(rows, length).astype(np.float32))
+    xi = jnp.zeros_like(xr)
+    times: dict[str, float] = {}
+    for backend in kops.BACKENDS:
+        fn = jax.jit(lambda a, b, bk=backend: kops.fft1d(a, b, backend=bk))
+        try:
+            times[backend] = time_us(fn, xr, xi, iters=iters)
+        except Exception as e:  # backend invalid here — keep its prior
+            if verbose:
+                print(f"  calibrate backend {backend}: FAILED "
+                      f"({type(e).__name__}: {e})")
+            continue
+        if verbose:
+            print(f"  calibrate backend {backend}: "
+                  f"{times[backend]:.1f} us", flush=True)
+    base = times.get("jnp")
+    if not base or base <= 0:
+        return {}
+    return {b: max(round(t / base, 4), MIN_WEIGHT) for b, t in times.items()}
+
+
+def _fold_sizes(pu: int, pv: int) -> tuple[int, int]:
+    """Two pencil-divisible cubic extents for the zero-payload fit."""
+    m = math.lcm(max(pu, 1), max(pv, 1))
+    n1 = m * max(1, -(-8 // m))  # smallest multiple of m that is >= 8
+    return n1, 2 * n1
+
+
+def measure_engine_overheads(mesh, *, iters: int = 5,
+                             verbose: bool = False) -> dict:
+    """Measured ``ENGINE_MESSAGE_OVERHEAD_S`` replacement.
+
+    Times every registered TransposeEngine's X↔Y fold (the real
+    ``shard_map``-compiled exchange) at two payload sizes and extrapolates
+    to zero payload: ``t(bytes) = c + bytes/bw`` gives the size-independent
+    dispatch cost ``c = messages · t_msg``. Engines whose fit is non-positive
+    (noise) or that fail to build are skipped; a non-communicating mesh
+    returns ``{}`` (nothing to measure — the priors stand).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import compat
+    from repro.core import comm
+    from repro.core import perfmodel as pm
+    from repro.core.decomposition import PencilGrid
+    from repro.tuning.timing import time_us
+
+    grid = PencilGrid.from_mesh(mesh)
+    if grid.pu <= 1:  # the X<->Y fold moves data along the Pu ranks only
+        return {}
+    n1, n2 = _fold_sizes(grid.pu, grid.pv)
+    spec = grid.pencil_spec()
+    rng = np.random.RandomState(0)
+    out: dict[str, float] = {}
+    for name in comm.ENGINE_NAMES:
+        msgs = pm.fold_messages(grid.pu, pm.ENGINE_FABRIC[name], name)
+        if msgs <= 0:
+            continue
+        eng = comm.make_engine(name, grid)
+        fold = jax.jit(compat.shard_map(
+            lambda a, e=eng: e.fold_xy(a), mesh=mesh, in_specs=(spec,),
+            out_specs=spec, check_vma=False))
+        try:
+            ts = []
+            for n in (n1, n2):
+                x = jnp.asarray(rng.randn(n, n, n).astype(np.float32))
+                ts.append(time_us(fold, x, iters=iters) * 1e-6)
+        except Exception as e:  # engine invalid here — keep its prior
+            if verbose:
+                print(f"  calibrate engine {name}: FAILED "
+                      f"({type(e).__name__}: {e})")
+            continue
+        b1, b2 = float(n1) ** 3 * 4, float(n2) ** 3 * 4
+        t0 = ts[0] - b1 * (ts[1] - ts[0]) / (b2 - b1)  # zero-payload intercept
+        t_msg = t0 / msgs
+        if verbose:
+            print(f"  calibrate engine {name}: t({n1}^3)={ts[0] * 1e6:.1f}us "
+                  f"t({n2}^3)={ts[1] * 1e6:.1f}us -> "
+                  f"t_msg={t_msg * 1e6:.3f}us ({msgs} msgs)", flush=True)
+        if t_msg >= MIN_OVERHEAD_S:
+            out[name] = float(f"{t_msg:.3e}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# document IO (mirrors the plan cache's atomic-write discipline)
+# ---------------------------------------------------------------------------
+
+def run_calibration(mesh, *, quick: bool = False, iters: int | None = None,
+                    verbose: bool = False) -> dict:
+    """Run both microbenchmarks and assemble the calibration document."""
+    from repro.core.decomposition import PencilGrid
+
+    if iters is None:
+        iters = 2 if quick else 5
+    rows, length = (16, 64) if quick else (64, 256)
+    grid = PencilGrid.from_mesh(mesh)
+    return {
+        "schema": SCHEMA,
+        "fingerprint": substrate_fingerprint(),
+        "mesh": f"{grid.pu}x{grid.pv}",
+        "quick": bool(quick),
+        "iters": int(iters),
+        "engine_message_overhead_s": measure_engine_overheads(
+            mesh, iters=iters, verbose=verbose),
+        "backend_compute_weight": measure_backend_weights(
+            rows=rows, length=length, iters=iters, verbose=verbose),
+        "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+    }
+
+
+def validate_calibration(doc) -> list[str]:
+    """Well-formedness problems of a calibration document ([] = valid).
+
+    Valid means: right schema, a complete substrate fingerprint, both
+    measurement tables present as dicts of positive finite floats over
+    *known* engine/backend names, and at least one measured value overall
+    (an all-empty calibration carries no signal worth persisting).
+    """
+    from repro.core import perfmodel as pm
+    from repro.kernels.ops import BACKENDS
+
+    problems = []
+    if not isinstance(doc, dict):
+        return [f"not a JSON object: {type(doc).__name__}"]
+    if doc.get("schema") != SCHEMA:
+        problems.append(f"schema: expected {SCHEMA!r}, got {doc.get('schema')!r}")
+    fp = doc.get("fingerprint")
+    if not isinstance(fp, dict):
+        problems.append("fingerprint: missing or not an object")
+    else:
+        for key in FINGERPRINT_KEYS:
+            if not fp.get(key):
+                problems.append(f"fingerprint.{key}: missing or empty")
+    known = {"engine_message_overhead_s": set(pm.ENGINE_MESSAGE_OVERHEAD_S),
+             "backend_compute_weight": set(BACKENDS)}
+    measured = 0
+    for table, names in known.items():
+        vals = doc.get(table)
+        if not isinstance(vals, dict):
+            problems.append(f"{table}: missing or not an object")
+            continue
+        for name, v in vals.items():
+            if name not in names:
+                problems.append(f"{table}.{name}: unknown name")
+            elif not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or not math.isfinite(v) or v <= 0:
+                problems.append(f"{table}.{name}: not a positive finite "
+                                f"number: {v!r}")
+            else:
+                measured += 1
+    if not problems and measured == 0:
+        problems.append("no measured values in either table")
+    return problems
+
+
+def save_calibration(doc: dict, path: str | None = None) -> str:
+    """Atomically write ``doc`` (tmp file + ``os.replace``, like the plan
+    cache) and return the path written."""
+    path = path or default_calibration_path()
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + f".tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
+
+
+def load_calibration(path: str | None = None) -> dict | None:
+    """The raw document at ``path`` (default location), or None."""
+    path = path or default_calibration_path()
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError, OSError):
+        return None
+
+
+def load_active_calibration(path: str | None = None) -> dict | None:
+    """The calibration the perf model should consult on *this* substrate.
+
+    None unless the document exists, is well-formed, and its fingerprint
+    matches the current process exactly — a calibration measured under a
+    different JAX/platform/device configuration must not transfer (the
+    plan-cache discipline). This is what ``perfmodel.active_calibration``
+    loads lazily on first use.
+    """
+    doc = load_calibration(path)
+    if doc is None or validate_calibration(doc):
+        return None
+    if doc["fingerprint"] != substrate_fingerprint():
+        return None
+    return doc
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.tuning.calibrate",
+        description="Measure per-engine message overheads and per-backend "
+                    "compute weights on this substrate and persist them as "
+                    "a fingerprinted calibration.json the perf model "
+                    "prefers over its built-in priors.")
+    ap.add_argument("--mesh", default="4x2",
+                    help="Pu x Pv pencil grid to measure the fold exchanges "
+                         "on (host devices are faked up to Pu*Pv)")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: fewer iterations, smaller batches")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timed calls per measurement (default 5, quick 2)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: $REPRO_CALIBRATION or "
+                         "~/.cache/repro/calibration.json)")
+    args = ap.parse_args(argv)
+
+    from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
+    pu, pv = parse_mesh_arg(args.mesh)
+    ensure_host_devices(pu * pv)
+
+    import jax
+
+    from repro import compat
+    from repro.core import perfmodel as pm
+
+    if len(jax.devices()) < pu * pv:
+        raise SystemExit(f"need {pu * pv} devices for mesh {args.mesh}, "
+                         f"have {len(jax.devices())}")
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    print(f"calibrate: mesh={pu}x{pv} quick={args.quick} "
+          f"[{jax.devices()[0].platform}:{len(jax.devices())} devices]",
+          flush=True)
+    doc = run_calibration(mesh, quick=args.quick, iters=args.iters,
+                          verbose=True)
+    problems = validate_calibration(doc)
+    if problems:
+        print("calibration NOT written — measurement produced an invalid "
+              "document:")
+        for p in problems:
+            print(f"  {p}")
+        return 2
+    path = save_calibration(doc, args.out)
+    if load_active_calibration(path) is None:
+        print(f"calibration at {path} failed the replay check "
+              "(fingerprint/round-trip mismatch)")
+        return 2
+
+    print(f"wrote {path}")
+    for engine, t in sorted(doc["engine_message_overhead_s"].items()):
+        prior = pm.ENGINE_MESSAGE_OVERHEAD_S[engine]
+        print(f"  message overhead {engine:<13} {t * 1e6:8.3f} us  "
+              f"(prior {prior * 1e6:.3f} us)")
+    for backend, w in sorted(doc["backend_compute_weight"].items()):
+        prior = pm.BACKEND_COMPUTE_WEIGHT.get(backend, 1.0)
+        print(f"  compute weight   {backend:<13} {w:8.3f}     "
+              f"(prior {prior:.1f})")
+    # this process measured fresh values — let its own model use them too
+    pm.set_calibration(doc)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

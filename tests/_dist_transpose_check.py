@@ -5,7 +5,10 @@ Usage: python tests/_dist_transpose_check.py PUxPV [--engine NAME]
 (expects PYTHONPATH=src). Asserts, for a non-trivial Pu×Pv grid and every
 registered engine (``switched`` all-to-all / ``torus`` ring /
 ``overlap_ring`` fused ring / ``pallas_ring`` async-RDMA ring, which runs
-its Pallas kernels in interpret mode off-TPU):
+its Pallas kernels in interpret mode off-TPU / ``bidi_ring``, the
+bidirectional two-NIC ring — including the P=2 mesh where both directions
+hit the same neighbor and odd-P meshes with an unbalanced direction split,
+whose grid extent adapts to stay pencil-divisible):
 
 * every engine's ``fold_xy``/``fold_yz`` relayout is **bit-identical** to the
   ``switched`` reference (the two fabrics and the overlapped schedules compute
@@ -14,7 +17,10 @@ its Pallas kernels in interpret mode off-TPU):
   inputs — the property the whole pipeline rests on), and
 * the full distributed 3D FFT built on each engine is allclose (fp64,
   1e-10) to the ``switched`` build for forward and forward∘inverse,
-  including the real and pipelined paths of both overlapped rings.
+  including the real and pipelined paths of the overlapped rings, and
+* every ring engine's ``exchange_rounds`` counter matches its round model —
+  P−1 wire rounds for the unidirectional rings, ``ceil((P−1)/2)`` for
+  ``bidi_ring`` (the two-NIC halving this engine exists for).
 
 ``--engine NAME`` restricts the sweep to one engine (always keeping the
 ``switched`` reference) — the CI mesh-shape × comm-engine matrix runs one
@@ -23,6 +29,7 @@ ALL_OK.
 """
 
 import argparse
+import math
 
 from repro.launch.mesh import ensure_host_devices
 
@@ -58,10 +65,14 @@ def run(pu: int, pv: int, engine: str = "") -> None:
     names = tuple(e for e in comm.ENGINE_NAMES
                   if not engine or e in ("switched", engine))
     ring_names = tuple(e for e in names
-                       if e in ("overlap_ring", "pallas_ring"))
+                       if e in ("overlap_ring", "pallas_ring", "bidi_ring"))
     mesh = compat.make_mesh((pu, pv), ("data", "model"))
     grid = PencilGrid.from_mesh(mesh)
-    n = (16, 16, 16)
+    # smallest pencil-divisible cubic extent >= 12 (16 when it divides, the
+    # historical value; e.g. the odd 3x2 mesh runs at 12^3)
+    lcm = math.lcm(pu, pv)
+    nd = 16 if 16 % lcm == 0 else lcm * -(-12 // lcm)
+    n = (nd, nd, nd)
     grid.validate(n)
     spec = grid.pencil_spec()
     rng = np.random.RandomState(0)
@@ -106,6 +117,19 @@ def run(pu: int, pv: int, engine: str = "") -> None:
     for name in names[1:]:
         assert np.array_equal(outs[name], outs["switched"]), name
     print("CHECK composed_folds_bitexact OK", flush=True)
+
+    # ---- exchange-round complexity (traced through the engine hooks) ------
+    # one fold over the Pu ranks costs wire_rounds(Pu) rounds: Pu−1 for the
+    # unidirectional rings, ceil((Pu−1)/2) for the bidirectional one
+    for name in ring_names:
+        eng = comm.make_engine(name, grid)
+        f = sm(lambda a, e=eng: e.fold_xy(a))
+        np.asarray(f(x))
+        want = eng.wire_rounds(pu) if pu > 1 else 0
+        assert eng.exchange_rounds == want, (name, eng.exchange_rounds, want)
+        if name == "bidi_ring" and pu > 1:
+            assert want == (pu - 1 + 1) // 2  # ceil((P−1)/2)
+    print("CHECK exchange_round_counts OK", flush=True)
 
     # ---- full distributed FFT per engine vs the switched reference --------
     xr = jnp.asarray(rng.randn(*n))

@@ -1,5 +1,23 @@
 import jax
+import pytest
 
 # f64 validation of the FFT engine requires x64 (model code is dtype-explicit
 # everywhere, so enabling it globally is safe).
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True)
+def _no_ambient_calibration():
+    """Pin the perf model to its built-in priors for every test.
+
+    A developer machine may carry a persisted ``calibration.json``
+    (``repro.tuning.calibrate``); the model loads it lazily, which would
+    make the analytic-model assertions here depend on local measurement
+    noise. Tests that exercise the calibrated path install their own
+    document explicitly via ``set_calibration``/``reset_calibration``.
+    """
+    from repro.core import perfmodel as pm
+
+    pm.set_calibration(None)
+    yield
+    pm.set_calibration(None)

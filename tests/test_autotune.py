@@ -31,10 +31,11 @@ def test_space_validity_rules():
     assert all(not c.r2c_packed for c in cands)  # complex problem
     assert DEFAULT_CANDIDATE in cands
 
-    # distributed grid: all four engines; real pow2 problem: packed appears
+    # distributed grid: all five engines; real pow2 problem: packed appears
     cands = candidate_space(16, 4, 2, real=True)
     assert {c.comm_engine for c in cands} == {"switched", "torus",
-                                              "overlap_ring", "pallas_ring"}
+                                              "overlap_ring", "pallas_ring",
+                                              "bidi_ring"}
     # every ring engine rides the torus fabric (legacy net view)
     assert {c.net for c in cands} == {"switched", "torus"}
     assert all(c.net == ("switched" if c.comm_engine == "switched"

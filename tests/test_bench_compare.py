@@ -178,6 +178,20 @@ def test_expect_comma_separated_globs(tmp_path):
                 "--expect", "fft_pallas_ring*").returncode == 2
 
 
+def test_bench_run_list_prints_workload_names():
+    # --list is the discovery aid for the exit-2 unknown-name path: every
+    # known --only workload, one per line, no benchmark executed
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--list"],
+        cwd=REPO, capture_output=True, text=True, timeout=120,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert out.returncode == 0, out.stderr[-2000:]
+    names = out.stdout.split()
+    assert names == sorted(names)
+    assert {"fft_engines", "fft_wallclock", "solvers", "fft_autotune"} <= set(names)
+    assert "name,us_per_call,derived" not in out.stdout  # nothing ran
+
+
 def test_bench_run_unknown_only_name_fails(tmp_path):
     # a typo'd --only must exit non-zero instead of emitting an empty
     # document the perf gate would then wave through

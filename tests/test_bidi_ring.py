@@ -1,0 +1,176 @@
+"""Bidirectional (two-NIC) ring exchange: round model, wire semantics, and
+the engine round counter — without devices.
+
+The ring schedules are *direct-send* (every wire value depends only on the
+sender's local data, never on previously received blocks), so a two-pass
+replay simulates all P ranks exactly: pass 1 records every rank's ppermute
+sends with receives stubbed to zeros, pass 2 replays with the true received
+values resolved from the recorded sends. The ppermute call sequence is
+deterministic and identical across ranks, so the call index aligns the
+rounds. (The distributed version of these properties — real ``shard_map``
+over fake devices, incl. P=2 and odd-P meshes — runs in
+``tests/_dist_transpose_check.py``.)
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import comm
+from repro.core import transpose as tr
+from repro.core.decomposition import PencilGrid
+
+PS = (2, 3, 4, 5, 8)
+
+
+def test_round_model():
+    # the complexity claim of the bidirectional ring: ceil((P-1)/2) rounds
+    for p in range(1, 33):
+        assert tr.ring_rounds(p) == max(p - 1, 0)
+        assert tr.bidi_rounds(p) == math.ceil((p - 1) / 2)
+    # the engines' pure-python round models agree
+    assert comm.OverlapRingEngine.wire_rounds(8) == 7
+    assert comm.PallasRingEngine.wire_rounds(8) == 7
+    assert comm.BidiRingEngine.wire_rounds(8) == 4
+    assert comm.BidiRingEngine.wire_rounds(2) == 1   # P=2: one shared neighbor
+    assert comm.BidiRingEngine.wire_rounds(5) == 2   # odd P: balanced split
+
+
+class RingSimulator:
+    """Replay a per-rank exchange function for all P ranks (see module doc)."""
+
+    def __init__(self, p):
+        self.p = p
+        self.sends = {}       # call_idx -> {src_rank: np value}
+        self.perms = {}       # call_idx -> {src: dst}
+        self.wire_calls = 0   # ppermute calls of one rank's replay pass
+
+    def run(self, monkeypatch, fn):
+        """``fn(me) -> result`` under patched collectives; list per rank."""
+        results = []
+        for phase in ("record", "replay"):
+            results = []
+            for me in range(self.p):
+                counter = {"i": 0}
+
+                def fake_ppermute(x, name, perm, *, _me=me, _c=counter,
+                                  _phase=phase):
+                    i = _c["i"]
+                    _c["i"] += 1
+                    if _phase == "record":
+                        self.sends.setdefault(i, {})[_me] = np.asarray(x)
+                        self.perms[i] = dict(perm)
+                        return jnp.zeros_like(x)
+                    src = next(s for s, d in self.perms[i].items() if d == _me)
+                    return jnp.asarray(self.sends[i][src])
+
+                monkeypatch.setattr(tr, "_ppermute", fake_ppermute)
+                monkeypatch.setattr(tr, "_axis_size", lambda axes: self.p)
+                monkeypatch.setattr(tr, "_flat_axis_index",
+                                    lambda axes, _me=me: _me)
+                monkeypatch.setattr(compat, "axes_size",
+                                    lambda axes: self.p)
+                monkeypatch.setattr(compat, "flat_axis_index",
+                                    lambda axes, _me=me: _me)
+                results.append(fn(me))
+                self.wire_calls = counter["i"]
+        return results
+
+
+def _locals(p, seed=0):
+    rng = np.random.RandomState(seed)
+    return [jnp.asarray(rng.randn(2 * p, 3)) for _ in range(p)]
+
+
+def _expected_all_to_all(xs, p):
+    """Tiled all-to-all semantics: rank me's output is, slot by slot, block
+    ``me`` of every source rank, merged rank-major along the concat axis."""
+    out = []
+    for me in range(p):
+        blocks = [np.asarray(x).reshape(p, 2, 3)[me] for x in xs]  # src-major
+        out.append(np.stack(blocks, axis=1).reshape(2, 3 * p))
+    return out
+
+
+@pytest.mark.parametrize("p", PS)
+def test_bidi_exchange_matches_ring_and_all_to_all(p, monkeypatch):
+    xs = _locals(p)
+    want = _expected_all_to_all(xs, p)
+
+    def uni(me):
+        outs, _ = tr.ring_exchange((xs[me],), ("data",), split_axis=0,
+                                   concat_axis=1)
+        return np.asarray(outs[0])
+
+    def bidi(me):
+        outs, _ = tr.ring_exchange_bidi((xs[me],), ("data",), split_axis=0,
+                                        concat_axis=1)
+        return np.asarray(outs[0])
+
+    got_uni = RingSimulator(p).run(monkeypatch, uni)
+    sim = RingSimulator(p)
+    got_bidi = sim.run(monkeypatch, bidi)
+    for me in range(p):
+        np.testing.assert_array_equal(got_bidi[me], want[me])
+        np.testing.assert_array_equal(got_bidi[me], got_uni[me])
+    # same total wire traffic (every foreign block crosses the wire once):
+    # P-1 sends per rank, just split across the two directions
+    assert sim.wire_calls == p - 1
+
+
+@pytest.mark.parametrize("p", PS)
+def test_bidi_engine_round_counter(p, monkeypatch):
+    # the engine's exchange_rounds counter pins the complexity claim:
+    # ceil((P-1)/2) rounds per exchange vs P-1 for the unidirectional rings
+    grid = PencilGrid(pu=p, pv=1, u_axes=("data",), v_axes=())
+    engines = {name: [comm.make_engine(name, grid) for _ in range(p)]
+               for name in ("overlap_ring", "bidi_ring")}
+    xs = _locals(p)
+
+    for name, per_rank in engines.items():
+        def fn(me, _eng=per_rank, _name=name):
+            eng = _eng[me]
+            eng.exchange_rounds = 0   # the simulator runs two passes
+            outs, _ = eng._exchange((xs[me],), ("data",), split_axis=0,
+                                    concat_axis=1)
+            return np.asarray(outs[0])
+
+        got = RingSimulator(p).run(monkeypatch, fn)
+        for me in range(p):
+            np.testing.assert_array_equal(got[me],
+                                          _expected_all_to_all(xs, p)[me])
+        want = (math.ceil((p - 1) / 2) if name == "bidi_ring" else p - 1)
+        assert all(e.exchange_rounds == want for e in per_rank), name
+
+
+def test_bidi_interleave_thunk_runs_once(monkeypatch):
+    p = 4
+    xs = _locals(p)
+    calls = []
+
+    def fn(me):
+        _, follow = tr.ring_exchange_bidi(
+            (xs[me],), ("data",), split_axis=0, concat_axis=1,
+            interleave=lambda: calls.append(me) or "butterflies-ran")
+        return follow
+
+    follows = RingSimulator(p).run(monkeypatch, fn)
+    assert follows == ["butterflies-ran"] * p
+    # one thunk per rank per pass (record + replay), emitted after the
+    # first round's sends — never re-run on later rounds
+    assert len(calls) == 2 * p
+
+
+def test_bidi_engine_degenerate_grid_local_transposes():
+    # on the 1x1 grid nothing communicates: folds reduce to pure local
+    # transposes and unfold∘fold is the identity (no devices involved)
+    grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+    eng = comm.make_engine("bidi_ring", grid)
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 4, 4))
+    for which in ("xy", "yz"):
+        back = eng.unfold(which, eng.fold(which, x))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+    assert eng.exchange_rounds == 0

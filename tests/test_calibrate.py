@@ -1,0 +1,209 @@
+"""Measured perf-model calibration (``repro.tuning.calibrate``): document
+validation, the plan-cache-style fingerprint replay discipline, and — the
+point of the subsystem — that a calibration actually changes what the
+analytic model tells the autotuner (chunk choice and candidate ranking)
+relative to the built-in priors."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import perfmodel as pm
+from repro.core import topology as topo
+from repro.tuning import calibrate as cal
+from repro.tuning.space import candidate_space
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def synth_doc(engine_overheads=None, backend_weights=None):
+    """A valid calibration document for the *current* substrate."""
+    return {
+        "schema": cal.SCHEMA,
+        "fingerprint": cal.substrate_fingerprint(),
+        "mesh": "4x2",
+        "quick": True,
+        "iters": 1,
+        "engine_message_overhead_s": dict(engine_overheads or {}),
+        "backend_compute_weight": dict(backend_weights or {"jnp": 1.0}),
+        "created": "2026-07-31T00:00:00+00:00",
+    }
+
+
+# ---------------------------------------------------------------------------
+# document well-formedness + replay discipline
+# ---------------------------------------------------------------------------
+
+def test_validate_calibration():
+    assert cal.validate_calibration(synth_doc({"torus": 1e-6})) == []
+    assert cal.validate_calibration("nope")  # not an object
+    assert any("schema" in p for p in cal.validate_calibration(
+        {**synth_doc({"torus": 1e-6}), "schema": "bench-fft/v1"}))
+    # incomplete fingerprint
+    doc = synth_doc({"torus": 1e-6})
+    del doc["fingerprint"]["platform"]
+    assert any("fingerprint.platform" in p for p in cal.validate_calibration(doc))
+    # unknown names and non-positive / non-finite values are rejected
+    assert any("carrier_pigeon" in p for p in cal.validate_calibration(
+        synth_doc({"carrier_pigeon": 1e-6})))
+    assert any("not a positive" in p for p in cal.validate_calibration(
+        synth_doc({"torus": -1.0})))
+    assert any("not a positive" in p for p in cal.validate_calibration(
+        synth_doc({"torus": float("nan")})))
+    assert any("not a positive" in p for p in cal.validate_calibration(
+        synth_doc(backend_weights={"jnp": True})))
+    # an all-empty calibration carries no signal
+    empty = synth_doc()
+    empty["backend_compute_weight"] = {}
+    assert any("no measured values" in p for p in cal.validate_calibration(empty))
+
+
+def test_save_load_and_fingerprint_discipline(tmp_path):
+    path = str(tmp_path / "sub" / "calibration.json")
+    doc = synth_doc({"torus": 3e-6}, {"jnp": 1.0, "ref": 4.0})
+    assert cal.save_calibration(doc, path) == path
+    assert cal.load_calibration(path) == doc
+    assert cal.load_active_calibration(path) == doc
+    # a calibration measured on another substrate must never be replayed
+    foreign = dict(doc, fingerprint={**doc["fingerprint"],
+                                     "device_kind": "TPU v5e"})
+    cal.save_calibration(foreign, path)
+    assert cal.load_active_calibration(path) is None
+    # malformed documents degrade to None, never raise
+    with open(path, "w") as f:
+        f.write("{not json")
+    assert cal.load_calibration(path) is None
+    assert cal.load_active_calibration(path) is None
+    assert cal.load_active_calibration(str(tmp_path / "missing.json")) is None
+
+
+def test_default_path_env_override(tmp_path, monkeypatch):
+    monkeypatch.setenv(cal.ENV_VAR, str(tmp_path / "c.json"))
+    assert cal.default_calibration_path() == str(tmp_path / "c.json")
+    monkeypatch.delenv(cal.ENV_VAR)
+    assert cal.default_calibration_path().endswith(
+        os.path.join(".cache", "repro", "calibration.json"))
+
+
+# ---------------------------------------------------------------------------
+# the calibration must change what the model tells the autotuner
+# ---------------------------------------------------------------------------
+
+def test_calibration_changes_chunk_choice():
+    prior_k = pm.optimal_chunks(256, 8, 8, comm_engine="overlap_ring")
+    prior_cands = pm.chunk_candidates(256, 8, 8, "overlap_ring")
+    assert prior_k > 1  # the trade is live on this problem
+
+    # messages measured 1000x more expensive -> far coarser slabs
+    pm.set_calibration(synth_doc({"overlap_ring": 2e-3}))
+    k_slow = pm.optimal_chunks(256, 8, 8, comm_engine="overlap_ring")
+    cands_slow = pm.chunk_candidates(256, 8, 8, "overlap_ring")
+    assert k_slow < prior_k
+    assert cands_slow != prior_cands
+    # ...and the tuning space consumes the calibrated enumeration
+    piped = {c.chunks for c in candidate_space(256, 8, 8, backends=["jnp"])
+             if c.comm_engine == "overlap_ring" and c.schedule == "pipelined"}
+    assert piped == set(cands_slow)
+
+    # messages measured cheaper -> finer slabs
+    pm.set_calibration(synth_doc({"overlap_ring": 2e-8}))
+    assert pm.optimal_chunks(256, 8, 8, comm_engine="overlap_ring") > k_slow
+
+    # engines the calibration did not measure keep their priors
+    pm.set_calibration(synth_doc({"overlap_ring": 2e-3}))
+    assert pm.message_overhead_s("torus") == pm.ENGINE_MESSAGE_OVERHEAD_S["torus"]
+
+
+def test_calibration_changes_candidate_ranking():
+    def ranking():
+        cands = [c for c in candidate_space(64, 4, 2, backends=["jnp"])]
+        cands.sort(key=lambda c: pm.estimate_plan_seconds(
+            64, 4, 2, backend=c.backend, schedule=c.schedule, chunks=c.chunks,
+            comm_engine=c.comm_engine, r2c_packed=c.r2c_packed))
+        return [c.name for c in cands]
+
+    prior = ranking()
+    # under the priors the RDMA rings' cheap NIC-doorbell sends win; measure
+    # them catastrophically expensive and they must fall behind the fabrics
+    # whose dispatches stayed cheap
+    pm.set_calibration(synth_doc({"pallas_ring": 5e-3, "bidi_ring": 5e-3}))
+    calibrated = ranking()
+    assert calibrated != prior
+    est = lambda engine: pm.estimate_plan_seconds(64, 4, 2, comm_engine=engine)
+    assert est("pallas_ring") > est("torus")
+    assert est("bidi_ring") > est("torus")
+    pm.set_calibration(None)
+    assert est("pallas_ring") < est("torus")  # priors restored
+
+
+def test_calibration_changes_backend_weights():
+    # priors: the interpreted pallas backend ranks far behind jnp
+    prior = pm.estimate_plan_seconds(64, 4, 2, backend="pallas")
+    assert prior > pm.estimate_plan_seconds(64, 4, 2, backend="jnp")
+    # measured on a TPU-like substrate the kernel beats XLA's FFT
+    pm.set_calibration(synth_doc(backend_weights={"jnp": 1.0, "pallas": 0.5}))
+    assert pm.backend_compute_weight("pallas") == 0.5
+    calibrated = pm.estimate_plan_seconds(64, 4, 2, backend="pallas")
+    assert calibrated < pm.estimate_plan_seconds(64, 4, 2, backend="jnp")
+    assert calibrated < prior
+    # unmeasured backends keep their priors
+    assert pm.backend_compute_weight("mxu") == pm.BACKEND_COMPUTE_WEIGHT["mxu"]
+
+
+def test_network_plan_reports_calibrated_overhead():
+    pm.set_calibration(synth_doc({"pallas_ring": 42e-6}))
+    plan = topo.NetworkPlan.for_engine("pallas_ring", p=64, r=4, f_mhz=180.0)
+    assert plan.message_overhead_s == pytest.approx(42e-6)
+    pm.set_calibration(None)
+    assert topo.NetworkPlan.for_engine(
+        "pallas_ring", p=64, r=4, f_mhz=180.0).message_overhead_s == \
+        pm.ENGINE_MESSAGE_OVERHEAD_S["pallas_ring"]
+
+
+def test_lazy_load_from_calibration_file(tmp_path, monkeypatch):
+    # the on-disk route the autotuner takes: $REPRO_CALIBRATION -> lazily
+    # loaded on first model query after reset_calibration()
+    path = str(tmp_path / "calibration.json")
+    cal.save_calibration(synth_doc({"torus": 7e-5}), path)
+    monkeypatch.setenv(cal.ENV_VAR, path)
+    pm.reset_calibration()
+    assert pm.message_overhead_s("torus") == pytest.approx(7e-5)
+    assert pm.active_calibration()["engine_message_overhead_s"]["torus"] == 7e-5
+    # a foreign-substrate file is ignored end to end
+    doc = synth_doc({"torus": 7e-5})
+    doc["fingerprint"]["jax_version"] = "0.0.0"
+    cal.save_calibration(doc, path)
+    pm.reset_calibration()
+    assert pm.message_overhead_s("torus") == pm.ENGINE_MESSAGE_OVERHEAD_S["torus"]
+
+
+# ---------------------------------------------------------------------------
+# CLI (subprocess: owns its XLA device-count flag)
+# ---------------------------------------------------------------------------
+
+def test_cli_writes_wellformed_calibration(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out_path = str(tmp_path / "calibration.json")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.tuning.calibrate", "--quick",
+         "--mesh", "2x1", "--iters", "1", "--out", out_path],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=str(tmp_path))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "wrote" in out.stdout and "message overhead" in out.stdout
+    doc = json.load(open(out_path))
+    assert cal.validate_calibration(doc) == []
+    assert doc["schema"] == cal.SCHEMA
+    assert doc["mesh"] == "2x1" and doc["quick"] is True
+    # the 2-rank fold communicates, so engines get measured — but the
+    # zero-payload fit legitimately drops any engine whose 1-iteration
+    # timing came out noise-negative, so only membership is pinned, not
+    # completeness (validate_calibration already rejects unknown names)
+    assert set(doc["engine_message_overhead_s"]) <= \
+        set(pm.ENGINE_MESSAGE_OVERHEAD_S)
+    assert doc["backend_compute_weight"].get("jnp") == 1.0

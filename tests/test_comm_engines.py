@@ -17,13 +17,15 @@ from repro.core.fft3d import FFT3DPlan
 
 def test_registry_names_and_fabrics():
     assert comm.ENGINE_NAMES == ("switched", "torus", "overlap_ring",
-                                 "pallas_ring")
+                                 "pallas_ring", "bidi_ring")
     assert comm.engine_fabric("switched") == "switched"
     assert comm.engine_fabric("torus") == "torus"
     # the overlapped rings are still ring traffic — they size the torus
-    # fabric (RDMA changes who posts the sends, not how many links exist)
+    # fabric (RDMA changes who posts the sends, not how many links exist;
+    # the bidirectional ring drives links the torus node already owns)
     assert comm.engine_fabric("overlap_ring") == "torus"
     assert comm.engine_fabric("pallas_ring") == "torus"
+    assert comm.engine_fabric("bidi_ring") == "torus"
     with pytest.raises(ValueError, match="unknown comm engine"):
         comm.engine_fabric("carrier_pigeon")
     with pytest.raises(ValueError, match="unknown comm engine"):
@@ -57,6 +59,7 @@ def test_network_plan_for_engine():
     # every ring engine needs the 4-link torus NICs, the switched engine 2
     assert topo.NetworkPlan.for_engine("overlap_ring", 64, 4, 180.0).nics_per_node == 4
     assert topo.NetworkPlan.for_engine("pallas_ring", 64, 4, 180.0).nics_per_node == 4
+    assert topo.NetworkPlan.for_engine("bidi_ring", 64, 4, 180.0).nics_per_node == 4
     assert topo.NetworkPlan.for_engine("switched", 64, 4, 180.0).nics_per_node == 2
     with pytest.raises(ValueError, match="unknown comm engine"):
         topo.NetworkPlan.for_engine("carrier_pigeon", 64, 4, 180.0)
@@ -127,11 +130,31 @@ def test_overlap_estimate_hides_communication():
         xla = pm.estimate_plan_seconds(256, pu, pv,
                                        comm_engine="overlap_ring", **kw)
         assert rdma < xla, (pu, pv)
+        # driving both torus directions can only help: the bidi ring never
+        # estimates above the unidirectional RDMA ring, and is strictly
+        # faster once a ring dimension exceeds the 2-rank degenerate case
+        # (where both directions name the same neighbor)
+        bidi = pm.estimate_plan_seconds(256, pu, pv,
+                                        comm_engine="bidi_ring", **kw)
+        assert bidi <= rdma, (pu, pv)
+        if max(pu, pv) > 2:
+            assert bidi < rdma, (pu, pv)
     # degenerate grid: no communication, engines estimate identically
     assert pm.estimate_plan_seconds(64, 1, 1, comm_engine="overlap_ring") == \
         pytest.approx(pm.estimate_plan_seconds(64, 1, 1))
     assert pm.estimate_plan_seconds(64, 1, 1, comm_engine="pallas_ring") == \
         pytest.approx(pm.estimate_plan_seconds(64, 1, 1))
+    assert pm.estimate_plan_seconds(64, 1, 1, comm_engine="bidi_ring") == \
+        pytest.approx(pm.estimate_plan_seconds(64, 1, 1))
+    # the wire-time ratio behind the bidi estimate: ceil((q-1)/2)/(q-1)
+    assert pm.bidi_round_ratio(2) == 1.0
+    assert pm.bidi_round_ratio(3) == pytest.approx(0.5)
+    assert pm.bidi_round_ratio(8) == pytest.approx(4 / 7)
+    # ...and the dispatch count it pays per fold
+    assert pm.fold_messages(8, "torus", "bidi_ring") == 4
+    assert pm.fold_messages(8, "torus", "pallas_ring") == 7
+    assert pm.fold_messages(8, "switched") == 1
+    assert pm.fold_messages(1, "torus", "bidi_ring") == 0
 
 
 def test_engine_aware_chunk_model():
@@ -193,6 +216,13 @@ def test_pallas_ring_engine_kwargs():
     assert isinstance(eng, comm.PallasRingEngine)
     assert eng.backend == "pallas" and eng.real is True
     assert plan.net == "torus"
+    # the bidi ring is a full engine too: plan-selectable, fusion-aware
+    plan = FFT3DPlan(n=(8, 8, 8), grid=grid, comm_engine="bidi_ring",
+                     backend="pallas")
+    eng = plan.engine()
+    assert isinstance(eng, comm.BidiRingEngine)
+    assert isinstance(eng, comm.PallasRingEngine)  # shares the RDMA hooks
+    assert plan.net == "torus" and eng.backend == "pallas"
 
 
 def test_run_chunked_matches_unchunked():

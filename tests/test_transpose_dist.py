@@ -1,9 +1,14 @@
 """Distributed TransposeEngine equivalence: every engine (switched all-to-all,
 torus ring, compute-overlapped ring, Pallas async-RDMA ring in interpret
-mode) must compute the identical relayout, ``unfold ∘ fold`` must be the
-identity, and the full 3D FFT built on each engine must be allclose (fp64,
-1e-10) to the switched reference for forward and forward∘inverse, on
-non-trivial Pu×Pv grids (paper §5.5, Fig. 4.3)."""
+mode, bidirectional two-NIC ring) must compute the identical relayout,
+``unfold ∘ fold`` must be the identity, and the full 3D FFT built on each
+engine must be allclose (fp64, 1e-10) to the switched reference for forward
+and forward∘inverse, on non-trivial Pu×Pv grids (paper §5.5, Fig. 4.3).
+
+The mesh list covers the ring degenerate cases the bidirectional engine
+must get right: ``2x1`` (P=2 — both directions hit the same neighbor) and
+``3x2`` (odd ring dimension — unbalanced direction split every round).
+"""
 
 import os
 import subprocess
@@ -13,8 +18,11 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+RING_ENGINES = ("torus", "overlap_ring", "pallas_ring", "bidi_ring")
+OVERLAPPED = ("overlap_ring", "pallas_ring", "bidi_ring")
 
-@pytest.mark.parametrize("shape", ["4x2", "2x4", "8x1"])
+
+@pytest.mark.parametrize("shape", ["4x2", "2x4", "8x1", "2x1", "3x2"])
 def test_engines_match_switched(shape):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
@@ -26,14 +34,16 @@ def test_engines_match_switched(shape):
     assert out.returncode == 0, out.stderr[-3000:]
     assert "ALL_OK" in out.stdout
     assert "composed_folds_bitexact OK" in out.stdout
-    for engine in ("torus", "overlap_ring", "pallas_ring"):
+    assert "exchange_round_counts OK" in out.stdout
+    for engine in RING_ENGINES:
         assert f"fft_{engine}_allclose OK" in out.stdout
         for fold in ("xy", "yz"):
             assert f"{fold}_roundtrip_{engine} OK" in out.stdout
             assert f"{fold}_relayout_bitexact_{engine} OK" in out.stdout
     # the overlapped rings also cover the pipelined schedule and the real
     # (r2c) data model — pallas_ring exercising its interpret-mode fallback
-    for engine in ("overlap_ring", "pallas_ring"):
+    # and bidi_ring its counter-rotating ppermute streams
+    for engine in OVERLAPPED:
         assert f"fft_{engine}_pipelined OK" in out.stdout
         assert f"fft_{engine}_real OK" in out.stdout
 
