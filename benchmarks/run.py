@@ -183,23 +183,35 @@ def bench_fft_engines(n: int = 16):
 
     from repro import compat
     from repro.core.comm import ENGINE_NAMES
+    from repro.core.engine_spec import EngineSpec
     from repro.core.fft3d import make_fft3d
 
     ndev = len(jax.devices())
-    pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
-    mesh = compat.make_mesh((pu, pv), ("data", "model"))
     rng = np.random.RandomState(0)
     xr = jnp.asarray(rng.randn(n, n, n).astype(np.float32))
     xi = jnp.zeros_like(xr)
-    for engine in ENGINE_NAMES:
-        fwd, inv, plan = make_fft3d(mesh, (n, n, n), comm_engine=engine)
-        cfg = {"comm_engine": engine, "net": plan.net, "n": n,
-               "mesh": f"{pu}x{pv}", "backend": plan.backend}
-        us = _time(fwd, xr, xi)
-        _row(f"fft_{engine}/N{n}/mesh{pu}x{pv}/fwd", us, "", config=cfg)
-        kr, ki = fwd(xr, xi)
-        us = _time(inv, kr, ki)
-        _row(f"fft_{engine}/N{n}/mesh{pu}x{pv}/inv", us, "", config=cfg)
+
+    def _sweep(mesh, mesh_tag, u_axes, v_axes):
+        for engine in ENGINE_NAMES:
+            fwd, inv, plan = make_fft3d(mesh, (n, n, n),
+                                        spec=EngineSpec(engine=engine),
+                                        u_axes=u_axes, v_axes=v_axes)
+            cfg = {"comm_engine": engine, "net": plan.net, "n": n,
+                   "mesh": mesh_tag, "backend": plan.backend}
+            us = _time(fwd, xr, xi)
+            _row(f"fft_{engine}/N{n}/mesh{mesh_tag}/fwd", us, "", config=cfg)
+            kr, ki = fwd(xr, xi)
+            us = _time(inv, kr, ki)
+            _row(f"fft_{engine}/N{n}/mesh{mesh_tag}/inv", us, "", config=cfg)
+
+    pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    _sweep(mesh, f"{pu}x{pv}", ("data",), ("model",))
+    if ndev >= 8:
+        # multi-axis pencil: the u grid dimension spans two mesh axes, so
+        # the ring engines run one staged per-axis ring per mesh axis
+        mesh3 = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        _sweep(mesh3, "2x2x2", ("pod", "data"), ("model",))
 
 
 # ---------------------------------------------------------------------------

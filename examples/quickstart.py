@@ -15,8 +15,7 @@ import jax  # noqa: F401  (device init)
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compat
-from repro.core.fft3d import make_fft3d
+from repro import EngineSpec, compat, make_fft3d
 
 mesh = compat.make_mesh((4, 2), ("data", "model"))
 N = (32, 32, 32)
@@ -25,8 +24,8 @@ rng = np.random.RandomState(0)
 field = rng.randn(*N).astype(np.float32)          # (y, z, x) X-pencil layout
 
 for engine in ("switched", "torus", "overlap_ring"):
-    fwd, inv, plan = make_fft3d(mesh, N, real=True, schedule="pipelined",
-                                chunks=4, comm_engine=engine)
+    spec = EngineSpec(engine=engine, schedule="pipelined", chunks=4, real=True)
+    fwd, inv, plan = make_fft3d(mesh, N, spec=spec)
     kr, ki = fwd(jnp.asarray(field))              # spectral, (kx, ky, kz)
     back = inv(kr, ki)                            # physical again
 

@@ -1,0 +1,48 @@
+"""Multi-FPGA-style distributed 3D FFT and FFT-based simulations in JAX.
+
+Stable public surface — the names most programs need, re-exported lazily so
+``import repro`` stays cheap (no jax import until a symbol is touched):
+
+* :class:`~repro.core.decomposition.PencilGrid` — the 2D pencil grid, with
+  per-mesh-axis factorizations (``u_sizes``/``v_sizes``) on ≥2D meshes.
+* :class:`~repro.core.decomposition.CommStep` /
+  :class:`~repro.core.decomposition.CommDAG` — the axis-labelled
+  communication DAG every transpose engine executes.
+* :class:`~repro.core.engine_spec.EngineSpec` — one frozen dataclass naming
+  the engine/backend/schedule/chunks choice, consumed uniformly by
+  ``core.comm``, ``core.perfmodel``, ``core.topology`` and ``repro.tuning``.
+* :func:`~repro.core.fft3d.make_fft3d` — the distributed-3D-FFT factory.
+
+Everything else lives in the subpackages (``repro.core``, ``repro.kernels``,
+``repro.solvers``, ``repro.tuning``, ...), imported explicitly.
+"""
+
+from __future__ import annotations
+
+__all__ = ["PencilGrid", "CommStep", "CommDAG", "EngineSpec", "FFT3DPlan",
+           "make_fft3d"]
+
+_EXPORTS = {
+    "PencilGrid": ("repro.core.decomposition", "PencilGrid"),
+    "CommStep": ("repro.core.decomposition", "CommStep"),
+    "CommDAG": ("repro.core.decomposition", "CommDAG"),
+    "EngineSpec": ("repro.core.engine_spec", "EngineSpec"),
+    "FFT3DPlan": ("repro.core.fft3d", "FFT3DPlan"),
+    "make_fft3d": ("repro.core.fft3d", "make_fft3d"),
+}
+
+
+def __getattr__(name):  # PEP 562 lazy re-export
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache for the next lookup
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

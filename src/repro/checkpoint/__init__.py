@@ -1,0 +1,1 @@
+"""Fault-tolerant sharded checkpointing (atomic saves, resharding restore)."""

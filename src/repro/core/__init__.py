@@ -2,14 +2,18 @@
 with sequential/pipelined scheduling, switched/torus network models, and the
 analytic performance model of the thesis."""
 
-from repro.core.decomposition import PencilGrid
+from repro.core.decomposition import (CommDAG, CommStep, PencilGrid,
+                                      fft3d_dag)
+from repro.core.engine_spec import EngineSpec
+from repro.core.comm import build_engine
 from repro.core.fft3d import (FFT3DPlan, fft3d_local, ifft3d_local,
                               fft3d_vector_local, ifft3d_vector_local,
                               make_fft3d)
 from repro.core import perfmodel, spectral, topology, transpose
 
 __all__ = [
-    "PencilGrid", "FFT3DPlan", "fft3d_local", "ifft3d_local",
+    "PencilGrid", "CommStep", "CommDAG", "EngineSpec", "fft3d_dag",
+    "build_engine", "FFT3DPlan", "fft3d_local", "ifft3d_local",
     "fft3d_vector_local", "ifft3d_vector_local", "make_fft3d",
     "perfmodel", "spectral", "topology", "transpose",
 ]

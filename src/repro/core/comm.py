@@ -32,34 +32,51 @@ first-class, pluggable object with five implementations:
   ``transpose.ring_exchange_bidi`` — same overlapped schedule as
   ``overlap_ring``, half the rounds.
 
+Engines are constructed from an :class:`~repro.core.engine_spec.EngineSpec`
+via :func:`build_engine` and consume the axis-labelled **CommStep** contract
+of ``core.decomposition``: every step names the processor-grid dimension it
+exchanges over (``u``/``v``), and a dimension spanning several mesh axes
+(e.g. ``u_axes=("pod", "data")``) runs **one ring per mesh axis** — the
+per-axis staging of ``transpose.staged_exchange`` — instead of degrading to
+a flat ``ppermute`` over the product group.
+
 Ring engines carry an ``exchange_rounds`` counter: every exchange routed
-through the ``_exchange``/``_rdma`` hooks adds its wire-round count
-(``wire_rounds(P)`` — P−1 for the unidirectional rings, ``ceil((P−1)/2)``
-for the bidirectional one) at trace time, so tests can pin the round
+through the ``_exchange``/``_rdma`` hooks adds its wire-round count at
+trace time — ``wire_rounds(q)`` summed over the communicating mesh axes of
+the step's grid dimension (qᵢ−1 per axis for the unidirectional rings,
+``ceil((qᵢ−1)/2)`` for the bidirectional one) — so tests can pin the round
 complexity an engine actually uses.
 
 Engines expose two surfaces:
 
-* **relayout primitives** ``fold_xy / unfold_xy / fold_yz / unfold_yz`` —
-  pure data movement over the shared block-exchange primitives of
-  ``core.transpose``; every engine computes the identical relayout, and
-  ``unfold ∘ fold`` is the identity (property-tested).
-* **the scheduling contract** ``fold_phase / unfold_phase`` — a full FFT
-  phase (butterflies then fold, or unfold then butterflies) that the engine
-  is free to chunk, stream, or fuse. ``fft3d_local``/``ifft3d_local`` are
-  written against this contract only; the old ``_run_chunked`` slab loop
-  lives here as the base engine's schedule.
+* **relayout primitives** ``fold_step / unfold_step`` (and the
+  ``fold_xy``-style conveniences) — pure data movement over the shared
+  block-exchange primitives of ``core.transpose``; every engine computes
+  the identical relayout, and ``unfold ∘ fold`` is the identity
+  (property-tested).
+* **the scheduling contract** ``run_fold / run_unfold`` — a full FFT phase
+  (butterflies then fold, or unfold then butterflies) over one
+  :class:`~repro.core.decomposition.CommStep`, which the engine is free to
+  chunk, stream, or fuse. ``fft3d_local``/``ifft3d_local`` walk the plan's
+  :class:`~repro.core.decomposition.CommDAG` against this contract only.
+  The pre-DAG spellings (``fold_phase``/``unfold_phase`` with a
+  ``fold: str`` tag, ``make_engine``) survive as ``DeprecationWarning``
+  shims.
 
 All engine methods run *inside* ``shard_map`` over the FFT mesh axes.
 """
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import decomposition as dec
 from repro.core import transpose as tr
+from repro.core.engine_spec import ENGINE_FABRIC, EngineSpec  # noqa: F401
 
 
 # ---------------------------------------------------------------------------
@@ -103,21 +120,36 @@ def _register(cls):
     return cls
 
 
-def make_engine(name: str, grid, chunks: int = 1, *, backend: str = "jnp",
-                real: bool = False) -> "TransposeEngine":
-    """Instantiate a registered engine for a ``PencilGrid``.
+def build_engine(spec: EngineSpec, grid) -> "TransposeEngine":
+    """Instantiate the engine an :class:`EngineSpec` names, for a grid.
 
-    ``backend``/``real`` describe the butterfly compute the engine will be
-    asked to schedule (the ``FFT3DPlan`` knobs): engines that can *fuse*
-    compute into their communication kernel (``pallas_ring`` on TPU) use
-    them to decide when in-kernel butterflies reproduce the phase compute.
+    The spec's ``backend``/``real`` describe the butterfly compute the
+    engine will be asked to schedule: engines that can *fuse* compute into
+    their communication kernel (``pallas_ring`` on TPU) use them to decide
+    when in-kernel butterflies reproduce the phase compute.
     """
     try:
-        cls = ENGINES[name]
+        cls = ENGINES[spec.engine]
     except KeyError:
+        raise ValueError(f"unknown comm engine {spec.engine!r}; "
+                         f"have {sorted(ENGINES)}") from None
+    return cls(grid, spec)
+
+
+def make_engine(name: str, grid, chunks: int = 1, *, backend: str = "jnp",
+                real: bool = False) -> "TransposeEngine":
+    """Deprecated: use ``build_engine(EngineSpec(engine=name, ...), grid)``."""
+    warnings.warn(
+        "make_engine(name, grid, chunks, backend=..., real=...) is "
+        "deprecated; use build_engine(EngineSpec(engine=name, chunks=..., "
+        "backend=..., real=...), grid)", DeprecationWarning, stacklevel=2)
+    if name not in ENGINES:
         raise ValueError(
-            f"unknown comm engine {name!r}; have {sorted(ENGINES)}") from None
-    return cls(grid, chunks=chunks, backend=backend, real=real)
+            f"unknown comm engine {name!r}; have {sorted(ENGINES)}")
+    spec = EngineSpec(engine=name, backend=backend, real=real,
+                      schedule="pipelined" if chunks > 1 else "sequential",
+                      chunks=max(int(chunks), 1))
+    return build_engine(spec, grid)
 
 
 def engine_fabric(name: str) -> str:
@@ -140,58 +172,114 @@ class TransposeEngine:
     mode = "switched"    # wire format of the shared block-exchange primitives
     fabric = "switched"  # §5.5 network the engine maps onto
 
-    def __init__(self, grid, chunks: int = 1, *, backend: str = "jnp",
-                 real: bool = False):
+    def __init__(self, grid, spec: EngineSpec | None = None):
         self.grid = grid
-        self.chunks = max(int(chunks), 1)
-        self.backend = backend   # butterfly engine the schedule will run
-        self.real = real         # r2c data model (X phase is not plain c2c)
+        self.spec = spec if spec is not None else EngineSpec(
+            engine=self.name if self.name in ENGINE_FABRIC else "switched")
+        self.chunks = max(int(self.spec.chunks), 1)
+        self.backend = self.spec.backend  # butterfly engine of the schedule
+        self.real = self.spec.real        # r2c model (X phase not plain c2c)
         # wire rounds traced through the ring engines' exchange hooks (the
         # base/switched engines never route through them and keep 0)
         self.exchange_rounds = 0
 
+    # ---- CommStep resolution ---------------------------------------------
+    def _step(self, which) -> dec.CommStep:
+        """Resolve a legacy ``"xy"``/``"yz"`` tag (or pass a step through)."""
+        if isinstance(which, dec.CommStep):
+            return which
+        if which == "xy":
+            return dec.XY_STEP.replace(c2c=not self.real)
+        if which == "yz":
+            return dec.YZ_STEP
+        raise ValueError(f"unknown fold {which!r}; have ('xy', 'yz')")
+
+    def _axes(self, which) -> tuple[str, ...]:
+        """Mesh axes the step's grid dimension spans (one ring per axis)."""
+        return self.grid.dim_axes(self._step(which).grid_dim)
+
+    def _ranks(self, which) -> int:
+        return self.grid.dim_ranks(self._step(which).grid_dim)
+
     # ---- relayout primitives (pure data movement) ------------------------
+    def fold_step(self, step: dec.CommStep, a):
+        """Execute one CommStep's fold relayout: block exchange over the
+        step's grid dimension, then the step's local permute."""
+        d = a.ndim
+        b = tr.all_to_all_blocks(a, self._axes(step),
+                                 split_axis=d + step.split_offset,
+                                 concat_axis=d + step.concat_offset,
+                                 mode=self.mode)
+        return tr.permute_last3(b, step.permute)
+
+    def unfold_step(self, step: dec.CommStep, a):
+        """Inverse relayout: the step's permute, then the derived inverse
+        exchange (split where the fold concatenated and vice versa)."""
+        d = a.ndim
+        b = tr.permute_last3(a, step.permute)
+        return tr.all_to_all_blocks(b, self._axes(step),
+                                    split_axis=d + step.unfold_split,
+                                    concat_axis=d + step.unfold_concat,
+                                    mode=self.mode)
+
     def fold_xy(self, a):
-        return tr.xy_fold(a, self.grid.u_axes, mode=self.mode)
+        return self.fold_step(self._step("xy"), a)
 
     def unfold_xy(self, a):
-        return tr.xy_unfold(a, self.grid.u_axes, mode=self.mode)
+        return self.unfold_step(self._step("xy"), a)
 
     def fold_yz(self, a):
-        return tr.yz_fold(a, self.grid.v_axes, mode=self.mode)
+        return self.fold_step(self._step("yz"), a)
 
     def unfold_yz(self, a):
-        return tr.yz_unfold(a, self.grid.v_axes, mode=self.mode)
+        return self.unfold_step(self._step("yz"), a)
 
-    def fold(self, which: str, a):
-        return self.fold_xy(a) if which == "xy" else self.fold_yz(a)
+    def fold(self, which, a):
+        return self.fold_step(self._step(which), a)
 
-    def unfold(self, which: str, a):
-        return self.unfold_xy(a) if which == "xy" else self.unfold_yz(a)
-
-    def _axes(self, which: str):
-        return self.grid.u_axes if which == "xy" else self.grid.v_axes
-
-    def _ranks(self, which: str) -> int:
-        return self.grid.pu if which == "xy" else self.grid.pv
+    def unfold(self, which, a):
+        return self.unfold_step(self._step(which), a)
 
     # ---- scheduling contract ---------------------------------------------
-    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        """Forward phase: butterflies (``compute``) then the ``fold`` relayout.
+    def run_fold(self, step: dec.CommStep, compute, arrs):
+        """Forward phase: butterflies (``compute``) then the step's fold.
 
-        ``compute(*slab) -> tuple`` runs the 1D FFT of the phase; ``slab_axis``
-        is a local axis untouched by the fold, along which the engine may
-        slice the volume without changing the result.
+        ``compute(*slab) -> tuple`` runs the 1D FFT of the phase; the
+        step's ``slab_offset`` names a local axis untouched by the fold,
+        along which the engine may slice the volume without changing the
+        result.
         """
         def phase(*sl):
-            return tuple(self.fold(fold, o) for o in compute(*sl))
-        return run_chunked(phase, arrs, axis=slab_axis, chunks=self.chunks)
+            return tuple(self.fold_step(step, o) for o in compute(*sl))
+        return run_chunked(phase, arrs, axis=step.slab_offset,
+                           chunks=self.chunks)
+
+    def run_unfold(self, step: dec.CommStep, compute, arrs):
+        """Inverse phase: the step's unfold relayout then butterflies."""
+        def phase(*sl):
+            return compute(*(self.unfold_step(step, a) for a in sl))
+        return run_chunked(phase, arrs, axis=step.slab_offset,
+                           chunks=self.chunks)
+
+    # ---- deprecated pre-DAG scheduling surface ---------------------------
+    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
+        """Deprecated: use ``run_fold(step, compute, arrs)`` with a
+        ``CommStep`` (see ``decomposition.fft3d_dag``)."""
+        warnings.warn(
+            "fold_phase(..., fold=tag, slab_axis=...) is deprecated; use "
+            "run_fold(step, compute, arrs) with a decomposition.CommStep",
+            DeprecationWarning, stacklevel=2)
+        step = self._step(fold).replace(slab_offset=slab_axis)
+        return self.run_fold(step, compute, arrs)
 
     def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        """Inverse phase: the ``unfold`` relayout then butterflies."""
-        def phase(*sl):
-            return compute(*(self.unfold(fold, a) for a in sl))
-        return run_chunked(phase, arrs, axis=slab_axis, chunks=self.chunks)
+        """Deprecated: use ``run_unfold(step, compute, arrs)``."""
+        warnings.warn(
+            "unfold_phase(..., fold=tag, slab_axis=...) is deprecated; use "
+            "run_unfold(step, compute, arrs) with a decomposition.CommStep",
+            DeprecationWarning, stacklevel=2)
+        step = self._step(fold).replace(slab_offset=slab_axis)
+        return self.run_unfold(step, compute, arrs)
 
 
 @_register
@@ -205,7 +293,13 @@ class SwitchedEngine(TransposeEngine):
 
 @_register
 class TorusEngine(TransposeEngine):
-    """P−1 ``lax.ppermute`` ring rounds per fold — Fig. 5.9 / Eq. 5.6."""
+    """P−1 ``lax.ppermute`` ring rounds per fold — Fig. 5.9 / Eq. 5.6.
+
+    A grid dimension spanning several mesh axes runs the staged per-axis
+    ring of ``transpose.staged_exchange`` (Σ(qᵢ−1) rounds, neighbor hops
+    only) — ``all_to_all_blocks(mode="torus")`` routes through
+    ``ring_exchange``, which stages multi-axis tuples itself.
+    """
 
     name = "torus"
     mode = "torus"
@@ -216,24 +310,18 @@ class TorusEngine(TransposeEngine):
 # overlap ring: the ring with butterflies emitted between its rounds
 # ---------------------------------------------------------------------------
 
-# (split_axis, concat_axis, post-transpose) of each fold's block exchange,
-# as offsets from ndim — mirrors transpose.xy_fold / yz_fold exactly.
-_FOLD_GEOM = {"xy": (-1, -3, tr._swap_last3), "yz": (-1, -2, tr._swap_last2)}
-# (pre-transpose, split_axis, concat_axis) of each unfold
-_UNFOLD_GEOM = {"xy": (tr._swap_last3, -3, -1), "yz": (tr._swap_last2, -2, -1)}
-
-
 @_register
 class OverlapRingEngine(TorusEngine):
     """The ring with the 1D FFT fused into it (paper Fig. 4.3, tasks C/G).
 
-    Forward: the local volume is cut into slabs along ``slab_axis`` (one per
-    ring rank by default, so compute granularity matches block granularity);
-    slab i+1's butterflies are emitted between slab i's ppermute rounds.
-    Inverse: slab i−1's butterflies (on blocks already received) run between
-    slab i's rounds — "ship one block while the previously-received block's
-    butterflies run". The relayout itself is the shared ring primitive, so
-    results match the other engines' (same blocks, same order).
+    Forward: the local volume is cut into slabs along the step's slab axis
+    (one per ring rank by default, so compute granularity matches block
+    granularity); slab i+1's butterflies are emitted between slab i's
+    ppermute rounds. Inverse: slab i−1's butterflies (on blocks already
+    received) run between slab i's rounds — "ship one block while the
+    previously-received block's butterflies run". The relayout itself is
+    the shared ring primitive, so results match the other engines' (same
+    blocks, same order).
 
     Every exchange — the fold/unfold relayout primitives *and* the
     overlapped phases — goes through ``self._exchange``, the one hook a
@@ -245,58 +333,53 @@ class OverlapRingEngine(TorusEngine):
     mode = "torus"
     fabric = "torus"
 
-    #: wire rounds one exchange costs over a P-rank dimension — the round
-    #: model the ``exchange_rounds`` counter accumulates (pure Python, so
-    #: the complexity claim is unit-testable without devices)
+    #: wire rounds one exchange costs over a q-rank mesh axis — the round
+    #: model the ``exchange_rounds`` counter accumulates per communicating
+    #: axis (pure Python, so the complexity claim is unit-testable without
+    #: devices)
     wire_rounds = staticmethod(tr.ring_rounds)
+
+    def _count_rounds(self, axes):
+        """Σ ``wire_rounds(qᵢ)`` over the communicating mesh axes — the
+        per-axis round model of the staged multi-axis exchange."""
+        self.exchange_rounds += sum(self.wire_rounds(q)
+                                    for q in tr.comm_axis_sizes(axes))
 
     # ---- the transport hook ----------------------------------------------
     def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,
                   interleave=None):
         """Tiled ring all-to-all of same-shaped ``arrs`` (+ fused thunk)."""
-        self.exchange_rounds += self.wire_rounds(tr._axis_size(axes))
+        self._count_rounds(axes)
         return tr.ring_exchange(arrs, axes, split_axis=split_axis,
                                 concat_axis=concat_axis, interleave=interleave)
 
     # ---- relayout primitives routed through the transport hook -----------
     # (folds over a 1-rank dimension never communicate: defer to the base
-    # leaf methods, which degenerate to pure local transposes)
-    def _fold_ring(self, which: str, a):
-        split_off, concat_off, post = _FOLD_GEOM[which]
+    # methods, which degenerate to pure local transposes)
+    def _fold_ring(self, step: dec.CommStep, a):
         d = a.ndim
-        outs, _ = self._exchange((a,), self._axes(which),
-                                 split_axis=d + split_off,
-                                 concat_axis=d + concat_off)
-        return post(outs[0])
+        outs, _ = self._exchange((a,), self._axes(step),
+                                 split_axis=d + step.split_offset,
+                                 concat_axis=d + step.concat_offset)
+        return tr.permute_last3(outs[0], step.permute)
 
-    def _unfold_ring(self, which: str, a):
-        pre, split_off, concat_off = _UNFOLD_GEOM[which]
-        b = pre(a)
+    def _unfold_ring(self, step: dec.CommStep, a):
+        b = tr.permute_last3(a, step.permute)
         d = b.ndim
-        outs, _ = self._exchange((b,), self._axes(which),
-                                 split_axis=d + split_off,
-                                 concat_axis=d + concat_off)
+        outs, _ = self._exchange((b,), self._axes(step),
+                                 split_axis=d + step.unfold_split,
+                                 concat_axis=d + step.unfold_concat)
         return outs[0]
 
-    def fold_xy(self, a):
-        if self._ranks("xy") <= 1:
-            return super().fold_xy(a)
-        return self._fold_ring("xy", a)
+    def fold_step(self, step: dec.CommStep, a):
+        if self.grid.dim_ranks(step.grid_dim) <= 1:
+            return super().fold_step(step, a)
+        return self._fold_ring(step, a)
 
-    def fold_yz(self, a):
-        if self._ranks("yz") <= 1:
-            return super().fold_yz(a)
-        return self._fold_ring("yz", a)
-
-    def unfold_xy(self, a):
-        if self._ranks("xy") <= 1:
-            return super().unfold_xy(a)
-        return self._unfold_ring("xy", a)
-
-    def unfold_yz(self, a):
-        if self._ranks("yz") <= 1:
-            return super().unfold_yz(a)
-        return self._unfold_ring("yz", a)
+    def unfold_step(self, step: dec.CommStep, a):
+        if self.grid.dim_ranks(step.grid_dim) <= 1:
+            return super().unfold_step(step, a)
+        return self._unfold_ring(step, a)
 
     # ---- overlapped phase schedules --------------------------------------
     def _n_slabs(self, size: int, ranks: int) -> int:
@@ -306,20 +389,18 @@ class OverlapRingEngine(TorusEngine):
             ns -= 1
         return max(ns, 1)
 
-    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        p = self._ranks(fold)
+    def run_fold(self, step: dec.CommStep, compute, arrs):
+        p = self.grid.dim_ranks(step.grid_dim)
         if p <= 1:  # fold never communicates — nothing to overlap
-            return super().fold_phase(compute, arrs, fold=fold,
-                                      slab_axis=slab_axis)
-        axis = slab_axis % arrs[0].ndim
+            return super().run_fold(step, compute, arrs)
+        axis = step.slab_offset % arrs[0].ndim
         size = arrs[0].shape[axis]
         ns = self._n_slabs(size, p)
-        step = size // ns
-        split_off, concat_off, post = _FOLD_GEOM[fold]
-        axes = self._axes(fold)
+        stride = size // ns
+        axes = self._axes(step)
 
         def slab(i):
-            return tuple(lax.slice_in_dim(a, i * step, (i + 1) * step,
+            return tuple(lax.slice_in_dim(a, i * stride, (i + 1) * stride,
                                           axis=axis) for a in arrs)
 
         cur = compute(*slab(0))
@@ -328,36 +409,36 @@ class OverlapRingEngine(TorusEngine):
             nxt = (lambda j=i + 1: compute(*slab(j))) if i + 1 < ns else None
             d = cur[0].ndim
             (fr, fi), follow = self._exchange(
-                (cur[0], cur[1]), axes, split_axis=d + split_off,
-                concat_axis=d + concat_off, interleave=nxt)
-            outs.append((post(fr), post(fi)))
+                (cur[0], cur[1]), axes, split_axis=d + step.split_offset,
+                concat_axis=d + step.concat_offset, interleave=nxt)
+            outs.append((tr.permute_last3(fr, step.permute),
+                         tr.permute_last3(fi, step.permute)))
             cur = follow
         return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
                      for k in range(2))
 
-    def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        p = self._ranks(fold)
+    def run_unfold(self, step: dec.CommStep, compute, arrs):
+        p = self.grid.dim_ranks(step.grid_dim)
         if p <= 1:
-            return super().unfold_phase(compute, arrs, fold=fold,
-                                        slab_axis=slab_axis)
-        axis = slab_axis % arrs[0].ndim
+            return super().run_unfold(step, compute, arrs)
+        axis = step.slab_offset % arrs[0].ndim
         size = arrs[0].shape[axis]
         ns = self._n_slabs(size, p)
-        step = size // ns
-        pre, split_off, concat_off = _UNFOLD_GEOM[fold]
-        axes = self._axes(fold)
+        stride = size // ns
+        axes = self._axes(step)
 
         outs = []
         prev = None
         for i in range(ns):
-            sl = [lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis)
+            sl = [lax.slice_in_dim(a, i * stride, (i + 1) * stride, axis=axis)
                   for a in arrs]
-            br, bi = pre(sl[0]), pre(sl[1])
+            br = tr.permute_last3(sl[0], step.permute)
+            bi = tr.permute_last3(sl[1], step.permute)
             d = br.ndim
             thunk = (lambda c=prev: compute(*c)) if prev is not None else None
             (ur, ui), done = self._exchange(
-                (br, bi), axes, split_axis=d + split_off,
-                concat_axis=d + concat_off, interleave=thunk)
+                (br, bi), axes, split_axis=d + step.unfold_split,
+                concat_axis=d + step.unfold_concat, interleave=thunk)
             if done is not None:
                 outs.append(done)
             prev = (ur, ui)
@@ -376,13 +457,15 @@ class PallasRingEngine(OverlapRingEngine):
     async-RDMA kernel of ``kernels.ring_rdma`` (paper §4.2's NIC engine).
 
     On TPU every exchange is one fused kernel of P−1 double-buffered
-    ``make_async_remote_copy`` rounds — and when the phase butterflies are
-    the radix-2 c2c engine (``backend="pallas"``, complex data), they run
-    *inside* the kernel between a round's ``start`` and ``wait``, making
-    the send/compute overlap explicit rather than scheduler-dependent.
-    Off-TPU the kernel's interpret fallback keeps the identical schedule
-    and block order (ppermute wire hop + Pallas NIC staging kernels), so
-    the engine is bit-exact vs ``torus`` everywhere it runs.
+    ``make_async_remote_copy`` rounds per mesh axis (multi-axis grid
+    dimensions stage one kernel per axis) — and when the phase butterflies
+    are the radix-2 c2c engine (``backend="pallas"``, a ``c2c`` CommStep),
+    they run *inside* the kernel between a round's ``start`` and ``wait``,
+    making the send/compute overlap explicit rather than
+    scheduler-dependent. Off-TPU the kernel's interpret fallback keeps the
+    identical schedule and block order (ppermute wire hop + Pallas NIC
+    staging kernels), so the engine is bit-exact vs ``torus`` everywhere
+    it runs.
     """
 
     name = "pallas_ring"
@@ -399,8 +482,9 @@ class PallasRingEngine(OverlapRingEngine):
     def _rdma(self, arrs, axes, **kw):
         """Counted transport: every exchange — the ``_exchange`` hook *and*
         the fused phases' in-kernel payload path — goes through here, so
-        ``exchange_rounds`` reflects the kernel's real round complexity."""
-        self.exchange_rounds += self.wire_rounds(tr._axis_size(axes))
+        ``exchange_rounds`` reflects the kernel's real round complexity
+        (summed per communicating mesh axis under staging)."""
+        self._count_rounds(axes)
         return self._transport(arrs, axes, **kw)
 
     def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,
@@ -409,30 +493,28 @@ class PallasRingEngine(OverlapRingEngine):
                           concat_axis=concat_axis, interleave=interleave)
 
     # ---- in-kernel butterfly fusion (TPU only) ---------------------------
-    def _fusable(self, fold: str, pair) -> bool:
+    def _fusable(self, step: dec.CommStep, pair) -> bool:
         """When in-kernel radix-2 butterflies reproduce the phase compute:
-        the plan's engine is the Pallas radix-2 kernel and the phase is a
-        plain c2c transform (the r2c X phase pads/packs — not fusable)."""
+        the plan's engine is the Pallas radix-2 kernel and the step wraps a
+        plain c2c transform (the r2c X phase pads/packs — not fusable).
+        Multi-axis steps fuse too: the payload rides the first staged
+        ring; later stages relay the already-butterflied blocks."""
         from repro.kernels import ring_rdma
         return (ring_rdma.use_rdma() and self.backend == "pallas"
-                and (fold == "yz" or not self.real)
-                and len(self._axes(fold)) == 1
-                and ring_rdma.fusable_payload(pair))
+                and step.c2c and ring_rdma.fusable_payload(pair))
 
-    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        p = self._ranks(fold)
-        if p <= 1 or not self._fusable(fold, tuple(arrs[:2])):
-            return super().fold_phase(compute, arrs, fold=fold,
-                                      slab_axis=slab_axis)
-        axis = slab_axis % arrs[0].ndim
+    def run_fold(self, step: dec.CommStep, compute, arrs):
+        p = self.grid.dim_ranks(step.grid_dim)
+        if p <= 1 or not self._fusable(step, tuple(arrs[:2])):
+            return super().run_fold(step, compute, arrs)
+        axis = step.slab_offset % arrs[0].ndim
         size = arrs[0].shape[axis]
         ns = self._n_slabs(size, p)
-        step = size // ns
-        split_off, concat_off, post = _FOLD_GEOM[fold]
-        axes = self._axes(fold)
+        stride = size // ns
+        axes = self._axes(step)
 
         def slab(i):
-            return tuple(lax.slice_in_dim(a, i * step, (i + 1) * step,
+            return tuple(lax.slice_in_dim(a, i * stride, (i + 1) * stride,
                                           axis=axis) for a in arrs)
 
         cur = compute(*slab(0))
@@ -441,35 +523,36 @@ class PallasRingEngine(OverlapRingEngine):
             payload = slab(i + 1) if i + 1 < ns else None
             d = cur[0].ndim
             ex, follow = self._rdma(
-                (cur[0], cur[1]), axes, split_axis=d + split_off,
-                concat_axis=d + concat_off, payload=payload)
-            outs.append((post(ex[0]), post(ex[1])))
+                (cur[0], cur[1]), axes, split_axis=d + step.split_offset,
+                concat_axis=d + step.concat_offset, payload=payload)
+            outs.append((tr.permute_last3(ex[0], step.permute),
+                         tr.permute_last3(ex[1], step.permute)))
             cur = follow
         return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
                      for k in range(2))
 
-    def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        p = self._ranks(fold)
-        if p <= 1 or not self._fusable(fold, tuple(arrs[:2])):
-            return super().unfold_phase(compute, arrs, fold=fold,
-                                        slab_axis=slab_axis)
-        axis = slab_axis % arrs[0].ndim
+    def run_unfold(self, step: dec.CommStep, compute, arrs):
+        p = self.grid.dim_ranks(step.grid_dim)
+        if p <= 1 or not self._fusable(step, tuple(arrs[:2])):
+            return super().run_unfold(step, compute, arrs)
+        axis = step.slab_offset % arrs[0].ndim
         size = arrs[0].shape[axis]
         ns = self._n_slabs(size, p)
-        step = size // ns
-        pre, split_off, concat_off = _UNFOLD_GEOM[fold]
-        axes = self._axes(fold)
+        stride = size // ns
+        axes = self._axes(step)
 
         outs = []
         prev = None
         for i in range(ns):
-            sl = [lax.slice_in_dim(a, i * step, (i + 1) * step, axis=axis)
+            sl = [lax.slice_in_dim(a, i * stride, (i + 1) * stride, axis=axis)
                   for a in arrs]
-            br, bi = pre(sl[0]), pre(sl[1])
+            br = tr.permute_last3(sl[0], step.permute)
+            bi = tr.permute_last3(sl[1], step.permute)
             d = br.ndim
             ex, done = self._rdma(
-                (br, bi), axes, split_axis=d + split_off,
-                concat_axis=d + concat_off, payload=prev, inverse=True)
+                (br, bi), axes, split_axis=d + step.unfold_split,
+                concat_axis=d + step.unfold_concat, payload=prev,
+                inverse=True)
             if done is not None:
                 outs.append(done)
             prev = (ex[0], ex[1])
@@ -491,17 +574,19 @@ class BidiRingEngine(PallasRingEngine):
     stream — round r ships block me+r one way and block me−r the other, on
     opposite links — so the exchange completes in ``ceil((P−1)/2)`` rounds
     instead of the unidirectional rings' P−1 (``wire_rounds``; asserted via
-    the ``exchange_rounds`` counter). P=2 degenerates to the plain ring
-    (both directions name the same neighbor, one round); odd P splits
-    (P−1)/2 blocks per direction every round; even P sends the shared
-    farthest block clockwise only on the last round.
+    the ``exchange_rounds`` counter, summed per mesh axis for multi-axis
+    grid dimensions). P=2 degenerates to the plain ring (both directions
+    name the same neighbor, one round); odd P splits (P−1)/2 blocks per
+    direction every round; even P sends the shared farthest block clockwise
+    only on the last round.
 
     Transports: on TPU the exchange is the bidirectional async-RDMA kernel
     (``kernels.ring_rdma.ring_exchange_bidi_rdma`` — double-buffered
     ``make_async_remote_copy`` sends to both neighbors per round with
     per-direction semaphores, in-kernel butterflies on fusable payloads
-    like ``pallas_ring``); off-TPU it is the two counter-rotating
-    ``ppermute`` streams of ``transpose.ring_exchange_bidi``, keeping the
+    like ``pallas_ring``, one staged kernel per mesh axis on multi-axis
+    grid dimensions); off-TPU it is the two counter-rotating ``ppermute``
+    streams of ``transpose.ring_exchange_bidi``, keeping the
     ``overlap_ring`` compute-overlap schedule with half the rounds and
     staying bit-exact vs ``torus``.
     """

@@ -13,6 +13,16 @@ P3DFFT and the thesis):
 
 The forward transform therefore lands in natural (kx, ky, kz) order, and the
 inverse retraces the pipeline back to X-pencils.
+
+Besides the grid itself this module owns the **communication DAG** describing
+the transpose pipeline: each :class:`CommStep` names the processor-grid
+dimension it exchanges over (``u`` or ``v`` — each possibly spanning several
+mesh axes), the local split/concat/permute geometry of the relayout, the
+slab axis untouched by the exchange (the overlap/pipelining axis), and
+whether the compute between the exchanges is plain c2c (in-kernel fusable).
+:func:`fft3d_dag` builds the two-step forward DAG (X↔Y fold on ``u``, Y↔Z
+fold on ``v``); the inverse walks the same steps backwards with the derived
+unfold geometry (:meth:`CommStep.unfold_split` / ``unfold_concat``).
 """
 
 from __future__ import annotations
@@ -26,24 +36,60 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 @dataclasses.dataclass(frozen=True)
 class PencilGrid:
-    """The Pu×Pv processor grid of the paper, bound to mesh axis names."""
+    """The Pu×Pv processor grid of the paper, bound to mesh axis names.
+
+    ``u_sizes``/``v_sizes`` record the per-mesh-axis factorization of each
+    grid dimension (e.g. ``u_axes=("pod", "data")`` on a 2×4×… mesh gives
+    ``u_sizes=(2, 4)``): the ring engines run one ring per mesh axis, so the
+    perf model prices Σᵢ(qᵢ−1) rounds rather than P−1.  When not supplied
+    they default to the flat ``(pu,)``/``(pv,)`` single-axis view.
+    """
 
     pu: int
     pv: int
     u_axes: tuple[str, ...] = ("data",)
     v_axes: tuple[str, ...] = ("model",)
+    u_sizes: tuple[int, ...] = ()
+    v_sizes: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.u_sizes:
+            object.__setattr__(self, "u_sizes", (self.pu,))
+        if not self.v_sizes:
+            object.__setattr__(self, "v_sizes", (self.pv,))
+        if math.prod(self.u_sizes) != self.pu:
+            raise ValueError(f"u_sizes {self.u_sizes} do not factor pu={self.pu}")
+        if math.prod(self.v_sizes) != self.pv:
+            raise ValueError(f"v_sizes {self.v_sizes} do not factor pv={self.pv}")
 
     @classmethod
     def from_mesh(cls, mesh: jax.sharding.Mesh,
                   u_axes=("data",), v_axes=("model",)) -> "PencilGrid":
         u_axes, v_axes = tuple(u_axes), tuple(v_axes)
-        pu = math.prod(mesh.shape[a] for a in u_axes)
-        pv = math.prod(mesh.shape[a] for a in v_axes)
-        return cls(pu=pu, pv=pv, u_axes=u_axes, v_axes=v_axes)
+        u_sizes = tuple(mesh.shape[a] for a in u_axes)
+        v_sizes = tuple(mesh.shape[a] for a in v_axes)
+        return cls(pu=math.prod(u_sizes), pv=math.prod(v_sizes),
+                   u_axes=u_axes, v_axes=v_axes,
+                   u_sizes=u_sizes or (1,), v_sizes=v_sizes or (1,))
 
     @property
     def p(self) -> int:
         return self.pu * self.pv
+
+    # ---- per-dimension views (CommStep.grid_dim -> mesh axes/ranks) ------
+    def dim_axes(self, dim: str) -> tuple[str, ...]:
+        """Mesh axis names spanned by grid dimension ``"u"`` or ``"v"``."""
+        if dim not in ("u", "v"):
+            raise ValueError(f"grid dimension must be 'u' or 'v', got {dim!r}")
+        return self.u_axes if dim == "u" else self.v_axes
+
+    def dim_ranks(self, dim: str) -> int:
+        """Total rank count of grid dimension ``"u"`` or ``"v"``."""
+        return self.pu if dim == "u" else self.pv
+
+    def dim_sizes(self, dim: str) -> tuple[int, ...]:
+        """Per-mesh-axis rank factorization of grid dimension ``dim``."""
+        return self.u_sizes if dim == "u" else self.v_sizes
 
     # ---- shardings -------------------------------------------------------
     def pencil_spec(self) -> P:
@@ -100,3 +146,114 @@ class PencilGrid:
         """V' = s(N³ + 2N²)/P (Eq. 3.4), N=Nx."""
         nx, ny, nz = n
         return s * (nx * ny * nz + 2 * ny * nz) // self.p
+
+
+# ---------------------------------------------------------------------------
+# Communication DAG: axis-labelled transpose steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CommStep:
+    """One distributed transpose of the pencil pipeline, axis-labelled.
+
+    A step is the *whole* contract an engine needs to execute (and overlap)
+    one fold: which processor-grid dimension carries the exchange, how the
+    local block is split/recombined around it, and which local axis stays
+    untouched (the slab/pipelining axis).  Offsets are negative (counted
+    from the trailing axis) so the same step applies under leading batch or
+    component axes.
+
+    ``name``          step label (``"xy"``, ``"yz"``)
+    ``grid_dim``      ``"u"`` or ``"v"`` — resolved to mesh axes via
+                      :meth:`PencilGrid.dim_axes`; a dimension spanning
+                      several mesh axes runs one ring per axis
+    ``split_offset``  local axis split across the ranks on the way out
+    ``concat_offset`` local axis the received blocks are merged into
+    ``permute``       permutation of the last three local axes applied after
+                      the fold exchange (and before the unfold exchange) —
+                      an involution for both pipeline steps
+    ``slab_offset``   local axis untouched by the exchange; phase compute is
+                      chunked/overlapped along it
+    ``c2c``           the compute paired with this step is plain c2c
+                      butterflies (eligible for in-kernel RDMA fusion); the
+                      r2c X-transform step sets this False
+    """
+
+    name: str
+    grid_dim: str
+    split_offset: int
+    concat_offset: int
+    permute: tuple[int, int, int]
+    slab_offset: int
+    c2c: bool = True
+
+    # unfold geometry is fully derived: the inverse exchange splits where the
+    # fold concatenated and concatenates where the fold split, with the same
+    # (involutive) local permute applied first.
+    @property
+    def unfold_split(self) -> int:
+        return self.concat_offset
+
+    @property
+    def unfold_concat(self) -> int:
+        return self.split_offset
+
+    def replace(self, **changes) -> "CommStep":
+        return dataclasses.replace(self, **changes)
+
+
+# The two steps of the forward 3D-FFT pipeline (§3.2.4): X-pencil → Y-pencil
+# over u, then Y-pencil → Z-pencil over v.  ``permute`` spells transpose.
+# _swap_last3 / _swap_last2 as explicit last-three-axes permutations.
+XY_STEP = CommStep(name="xy", grid_dim="u", split_offset=-1, concat_offset=-3,
+                   permute=(2, 1, 0), slab_offset=-2, c2c=True)
+YZ_STEP = CommStep(name="yz", grid_dim="v", split_offset=-1, concat_offset=-2,
+                   permute=(0, 2, 1), slab_offset=-3, c2c=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommDAG:
+    """The ordered transpose steps of one distributed transform.
+
+    Forward execution runs ``steps`` left to right (fold direction); the
+    inverse runs them right to left in unfold direction.  Engines consume
+    steps one at a time — the DAG is the plan-level object that `fft3d`
+    threads through :meth:`TransposeEngine.run_fold` / ``run_unfold``.
+    """
+
+    steps: tuple[CommStep, ...]
+
+    def __iter__(self):
+        return iter(self.steps)
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    def step(self, name: str) -> CommStep:
+        for s in self.steps:
+            if s.name == name:
+                return s
+        raise KeyError(f"no CommStep named {name!r} in "
+                       f"{tuple(s.name for s in self.steps)}")
+
+    def inverse_steps(self) -> tuple[CommStep, ...]:
+        """Steps in unfold order (right to left)."""
+        return tuple(reversed(self.steps))
+
+    def validate(self, grid: PencilGrid) -> None:
+        for s in self.steps:
+            grid.dim_axes(s.grid_dim)  # raises on unknown grid_dim
+            if sorted(s.permute) != [0, 1, 2]:
+                raise ValueError(f"step {s.name!r}: permute {s.permute} is "
+                                 "not a permutation of the last three axes")
+
+
+def fft3d_dag(real: bool = False) -> CommDAG:
+    """The two-step pencil-transpose DAG of the 3D FFT.
+
+    The X↔Y fold overlaps the X-line transforms: under the r2c data model
+    those are not plain c2c butterflies, so ``real=True`` clears the step's
+    ``c2c`` flag (disqualifying in-kernel RDMA butterfly fusion for that
+    step only — the Y↔Z fold always wraps c2c compute).
+    """
+    return CommDAG(steps=(XY_STEP.replace(c2c=not real), YZ_STEP))

@@ -1,0 +1,99 @@
+"""EngineSpec — the one way to say *how* the transposes run.
+
+Historically the engine configuration leaked through three surfaces with
+three spellings: ``comm.make_engine(name, grid, chunks, backend=..,
+real=..)``, ``topology.NetworkPlan.for_engine(engine, ..., n=...)`` and the
+kwarg tail of ``fft3d.make_fft3d`` (``backend=``, ``schedule=``,
+``chunks=``, ``net=``, ``comm_engine=``, ``vector_mode=``,
+``r2c_packed=``).  :class:`EngineSpec` collapses them into one frozen
+dataclass consumed uniformly by ``core.comm`` (:func:`~repro.core.comm.
+build_engine`), ``core.fft3d`` (``make_fft3d(..., spec=...)``),
+``core.perfmodel`` (``estimate_plan_seconds(..., spec=...)``),
+``core.topology`` (``NetworkPlan.for_spec``) and ``tuning.space``
+(``Candidate.spec()`` / ``Candidate.from_spec``).
+
+Migration table (old → new)::
+
+    comm.make_engine(name, grid, k, backend=b, real=r)
+        → comm.build_engine(EngineSpec(engine=name, chunks=k,
+                                       backend=b, real=r), grid)
+    NetworkPlan.for_engine(name, p, r, f, n=n)
+        → NetworkPlan.for_spec(EngineSpec(engine=name), p, r, f, n=n)
+    make_fft3d(mesh, n, comm_engine=e, backend=b, schedule=s, chunks=k)
+        → make_fft3d(mesh, n, spec=EngineSpec(engine=e, backend=b,
+                                              schedule=s, chunks=k))
+
+The old spellings keep working behind thin shims that emit
+``DeprecationWarning``.
+
+This module is deliberately **jax-free** (like ``core.perfmodel``, which
+imports it): specs must be constructible in planning tools and on hosts
+without an accelerator stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+# Which network fabric each comm engine presumes (paper §4.2/§5.5): the
+# switched engine models the Eq. 5.2 switched fabric, every ring engine the
+# Eq. 5.3/5.4 torus.  Single source of truth for comm/perfmodel/topology.
+ENGINE_FABRIC = {
+    "switched": "switched",
+    "torus": "torus",
+    "overlap_ring": "torus",
+    "pallas_ring": "torus",
+    "bidi_ring": "torus",
+}
+
+SCHEDULES = ("sequential", "pipelined")
+VECTOR_MODES = ("streaming", "parallel")
+BACKENDS = ("jnp", "ref", "pallas", "mxu")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """How the distributed transposes (and the compute between them) run.
+
+    ``engine``      registered comm engine name (``ENGINE_FABRIC`` keys)
+    ``backend``     1D-FFT compute backend (``jnp``/``ref``/``pallas``/``mxu``)
+    ``schedule``    ``sequential`` or ``pipelined`` (chunked overlap)
+    ``chunks``      pipeline depth; forced to 1 under ``sequential``
+    ``real``        r2c data model (real input, Hermitian spectrum)
+    ``r2c_packed``  pack the real transform into the half-spectrum layout
+    ``vector_mode`` multi-component transforms: ``streaming`` or ``parallel``
+    """
+
+    engine: str = "switched"
+    backend: str = "jnp"
+    schedule: str = "sequential"
+    chunks: int = 1
+    real: bool = False
+    r2c_packed: bool = False
+    vector_mode: str = "streaming"
+
+    def __post_init__(self):
+        if self.engine not in ENGINE_FABRIC:
+            raise ValueError(f"unknown comm engine {self.engine!r}; "
+                             f"have {sorted(ENGINE_FABRIC)}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                             f"got {self.schedule!r}")
+        if self.vector_mode not in VECTOR_MODES:
+            raise ValueError(f"vector_mode must be one of {VECTOR_MODES}, "
+                             f"got {self.vector_mode!r}")
+        if self.chunks < 1:
+            raise ValueError(f"chunks must be >= 1, got {self.chunks}")
+        if self.schedule == "sequential" and self.chunks != 1:
+            object.__setattr__(self, "chunks", 1)
+
+    @property
+    def fabric(self) -> str:
+        """The network fabric this engine presumes (``switched``/``torus``)."""
+        return ENGINE_FABRIC[self.engine]
+
+    def replace(self, **changes) -> "EngineSpec":
+        return dataclasses.replace(self, **changes)
+
+
+DEFAULT_SPEC = EngineSpec()

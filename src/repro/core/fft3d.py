@@ -15,15 +15,27 @@ FFT → Y↔Z fold → local Z FFT, with the task-organization models of Chapter
   processed either simultaneously (leading component axis, ~μ× live memory;
   §4.4.1) or as a per-dimension stream (unrolled loop, §4.4.2/Fig. 4.6).
 
-Communication: every fold phase goes through a pluggable **TransposeEngine**
-(``core.comm``): ``comm_engine="switched"`` (single all-to-all, Fig. 5.10),
-``"torus"`` (ppermute ring, Fig. 5.9), ``"overlap_ring"`` (the ring with
-the 1D FFT fused between its rounds — block-granular compute/communication
-overlap, the paper's task C/G ↔ engine pipelining of Fig. 4.3) or
-``"pallas_ring"`` (the same schedule as a Pallas async-RDMA kernel with
-explicit double-buffered neighbor DMA — the paper's NIC offload; interpret
-mode off-TPU). ``net`` is the derived §5.5 fabric ("switched" | "torus")
-the chosen engine runs on.
+Configuration rides one object: ``make_fft3d(mesh, n, spec=EngineSpec(...))``
+picks the comm engine, compute backend, schedule/chunks and vector mode in a
+single frozen dataclass (``core.engine_spec``; the pre-spec kwarg tail —
+``comm_engine=``, ``backend=``, ``schedule=``, ``chunks=``, ``net=``, ... —
+still works behind a DeprecationWarning shim).
+
+Communication: the plan walks the axis-labelled :class:`CommDAG` from
+``core.decomposition`` — the ``xy`` step exchanges over the grid's ``u``
+dimension, the ``yz`` step over ``v`` — and hands each step to a pluggable
+**TransposeEngine** (``core.comm``): ``engine="switched"`` (single
+all-to-all, Fig. 5.10), ``"torus"`` (ppermute ring, Fig. 5.9),
+``"overlap_ring"`` (the ring with the 1D FFT fused between its rounds —
+block-granular compute/communication overlap, the paper's task C/G ↔ engine
+pipelining of Fig. 4.3), ``"pallas_ring"`` (the same schedule as a Pallas
+async-RDMA kernel with explicit double-buffered neighbor DMA — the paper's
+NIC offload; interpret mode off-TPU) or ``"bidi_ring"`` (two-NIC
+bidirectional ring, ⌈(P−1)/2⌉ rounds). When a grid dimension spans several
+mesh axes (``u_axes=("pod", "data")`` on a 3-axis mesh) every engine runs
+the staged per-axis exchange — one ring per mesh axis — instead of one flat
+ring over the product group; ``spec.fabric`` is the derived §5.5 fabric
+("switched" | "torus") the chosen engine runs on.
 
 Real-to-complex: the X phase uses the general complex engine on real input
 and keeps N/2+1 bins (padded to a Pu-divisible length), exactly the paper's
@@ -38,6 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Literal
 
 import jax
@@ -46,7 +59,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import comm, precision
-from repro.core.decomposition import PencilGrid
+from repro.core.decomposition import CommDAG, PencilGrid, fft3d_dag
+from repro.core.engine_spec import EngineSpec
 from repro.kernels import ops as kops
 
 Schedule = Literal["sequential", "pipelined"]
@@ -83,11 +97,29 @@ class FFT3DPlan:
         object.__setattr__(self, "comm_engine", engine)
         object.__setattr__(self, "net", comm.engine_fabric(engine))
 
+    def spec(self) -> EngineSpec:
+        """This plan's engine configuration as one :class:`EngineSpec`."""
+        return EngineSpec(engine=self.comm_engine, backend=self.backend,
+                          schedule=self.schedule, chunks=self.chunks,
+                          real=self.real, r2c_packed=self.r2c_packed)
+
+    @classmethod
+    def from_spec(cls, n, grid: PencilGrid, spec: EngineSpec,
+                  dtype: str = "") -> "FFT3DPlan":
+        """Build a plan from an :class:`EngineSpec` (the new spelling)."""
+        return cls(n=tuple(n), grid=grid, real=spec.real,
+                   backend=spec.backend, schedule=spec.schedule,
+                   chunks=spec.chunks, r2c_packed=spec.r2c_packed,
+                   comm_engine=spec.engine, dtype=dtype)
+
+    def dag(self) -> CommDAG:
+        """The axis-labelled transpose DAG this plan executes (X↔Y fold on
+        grid dimension ``u``, Y↔Z fold on ``v``)."""
+        return fft3d_dag(self.real)
+
     def engine(self) -> comm.TransposeEngine:
         """The TransposeEngine instance scheduling this plan's fold phases."""
-        return comm.make_engine(self.comm_engine, self.grid,
-                                chunks=self.chunks, backend=self.backend,
-                                real=self.real)
+        return comm.build_engine(self.spec(), self.grid)
 
     @property
     def kx(self) -> int:
@@ -129,20 +161,22 @@ def fft3d_local(plan: FFT3DPlan, xr, xi=None):
     Out: Z-pencil ``(..., Kx/Pu, Ny/Pv, Nz)`` planar complex, natural order.
     """
     eng = plan.engine()
+    dag = plan.dag()
     if xi is None:
         xi = jnp.zeros_like(xr)
 
-    # Phase X + X↔Y fold (hardware tasks A–D), slabbable along local z (-2)
+    # Phase X + X↔Y fold over grid dim u (hardware tasks A–D), slabbable
+    # along local z (the step's slab axis)
     def butterflies_x(cr, ci):
         return _fftx(plan, cr, ci)
 
-    yr, yi = eng.fold_phase(butterflies_x, (xr, xi), fold="xy", slab_axis=-2)
+    yr, yi = eng.run_fold(dag.step("xy"), butterflies_x, (xr, xi))
 
-    # Phase Y + Y↔Z fold (tasks E–H), slabbable along local kx (-3)
+    # Phase Y + Y↔Z fold over grid dim v (tasks E–H), slabbable along kx
     def butterflies_y(cr, ci):
         return kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
 
-    yr, yi = eng.fold_phase(butterflies_y, (yr, yi), fold="yz", slab_axis=-3)
+    yr, yi = eng.run_fold(dag.step("yz"), butterflies_y, (yr, yi))
 
     # Phase Z (tasks I–K)
     return kops.fft1d(yr, yi, axis=-1, backend=plan.backend)
@@ -154,21 +188,20 @@ def ifft3d_local(plan: FFT3DPlan, kr, ki):
     Returns real array if ``plan.real`` else a planar (re, im) pair.
     """
     eng = plan.engine()
+    dag = plan.dag()
     yr, yi = kops.fft1d(kr, ki, axis=-1, backend=plan.backend, inverse=True)
 
     def butterflies_y_inv(ur, ui):
         return kops.fft1d(ur, ui, axis=-1, backend=plan.backend, inverse=True)
 
-    yr, yi = eng.unfold_phase(butterflies_y_inv, (yr, yi), fold="yz",
-                              slab_axis=-3)
+    yr, yi = eng.run_unfold(dag.step("yz"), butterflies_y_inv, (yr, yi))
 
     def butterflies_x_inv(ur, ui):
         if plan.real:
             return (_ifftx(plan, ur, ui),)
         return _ifftx(plan, ur, ui)
 
-    out = eng.unfold_phase(butterflies_x_inv, (yr, yi), fold="xy",
-                           slab_axis=-2)
+    out = eng.run_unfold(dag.step("xy"), butterflies_x_inv, (yr, yi))
     if plan.real:
         return out[0] if isinstance(out, tuple) and len(out) == 1 else out
     return out
@@ -205,46 +238,74 @@ def ifft3d_vector_local(plan: FFT3DPlan, kr, ki,
 # global entry points
 # ---------------------------------------------------------------------------
 
-def make_fft3d(mesh, n, *, u_axes=("data",), v_axes=("model",),
-               real: bool = False, backend: str = "jnp",
-               schedule: Schedule = "sequential", chunks: int = 1,
-               net: str = "switched", components: int = 0,
-               vector_mode: VectorMode = "streaming", r2c_packed: bool = False,
-               comm_engine: str = "",
-               autotune: bool = False, tune_kwargs: dict | None = None):
+#: legacy make_fft3d kwargs absorbed into EngineSpec (still accepted behind
+#: a DeprecationWarning; each overrides the matching spec field)
+_DEPRECATED_FFT3D_KWARGS = ("backend", "schedule", "chunks", "net",
+                            "comm_engine", "vector_mode", "r2c_packed")
+
+
+def make_fft3d(mesh, n, *, spec: EngineSpec | None = None,
+               u_axes=("data",), v_axes=("model",), real: bool | None = None,
+               components: int = 0, autotune: bool = False,
+               tune_kwargs: dict | None = None, **deprecated_kwargs):
     """Build jitted (forward, inverse, plan) over globally-sharded arrays.
 
     Global input layout: X-pencil ``(Ny, Nz, Nx)`` sharded ``P(u, v, None)``
     (plus a leading component axis if ``components``); output Z-pencil
     ``(Kx, Ny, Nz)`` sharded the same way.
 
-    ``comm_engine`` selects the TransposeEngine scheduling the fold phases
-    (``"switched"``/``"torus"``/``"overlap_ring"``/``"pallas_ring"``); when
-    empty, the engine named by the legacy ``net`` knob is used.
+    ``spec`` is the one engine-configuration knob (engine, backend,
+    schedule, chunks, vector_mode, r2c_packed — see
+    :class:`~repro.core.engine_spec.EngineSpec`); ``real`` stays a separate
+    argument because it describes the *problem* (the data model of the
+    field being transformed), overriding ``spec.real`` when given. The old
+    kwarg tail (``backend=``, ``schedule=``, ``chunks=``, ``net=``,
+    ``comm_engine=``, ``vector_mode=``, ``r2c_packed=``) still works and
+    overrides the matching spec fields, behind a ``DeprecationWarning``.
 
-    ``autotune=True`` ignores the explicit ``backend/schedule/chunks/
-    comm_engine/vector_mode/r2c_packed`` arguments and instead sweeps the
-    plan space for this ``(n, mesh, real, components)`` problem (see
-    ``repro.tuning``), reusing the persistent plan cache when a prior run
-    already timed it. ``tune_kwargs`` forwards extra options to
-    ``repro.tuning.autotune`` (``cache_path``, ``max_candidates``,
+    ``u_axes``/``v_axes`` bind the two grid dimensions to mesh axes; either
+    may span several (e.g. ``u_axes=("pod", "data")``), in which case every
+    engine — including the RDMA rings — runs one per-axis exchange per
+    mesh axis (the staged multi-axis schedule of ``core.transpose``).
+
+    ``autotune=True`` ignores the explicit engine configuration and
+    instead sweeps the plan space for this ``(n, mesh, real, components)``
+    problem (see ``repro.tuning``), reusing the persistent plan cache when
+    a prior run already timed it. ``tune_kwargs`` forwards extra options
+    to ``repro.tuning.autotune`` (``cache_path``, ``max_candidates``,
     ``iters``, ``fwd_weight``, ``inv_weight``, ...).
     """
     n = (n, n, n) if isinstance(n, int) else tuple(n)
+    unknown = set(deprecated_kwargs) - set(_DEPRECATED_FFT3D_KWARGS)
+    if unknown:
+        raise TypeError(f"make_fft3d() got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    if deprecated_kwargs:
+        warnings.warn(
+            f"make_fft3d kwargs {sorted(deprecated_kwargs)} are deprecated; "
+            "pass spec=EngineSpec(...) instead", DeprecationWarning,
+            stacklevel=2)
+    s = spec if spec is not None else EngineSpec()
+    changes = {"engine": (deprecated_kwargs.get("comm_engine")
+                          or deprecated_kwargs.get("net") or s.engine)}
+    for k in ("backend", "schedule", "chunks", "vector_mode", "r2c_packed"):
+        if k in deprecated_kwargs:
+            changes[k] = deprecated_kwargs[k]
+    s = s.replace(**changes)
+    if real is not None:
+        s = s.replace(real=bool(real))
     if autotune:
         from repro.tuning import autotune as _autotune
         from repro.tuning.space import Candidate
-        result = _autotune(mesh, n, real=real, components=components,
+        result = _autotune(mesh, n, real=s.real, components=components,
                            u_axes=u_axes, v_axes=v_axes,
                            **(tune_kwargs or {}))
         best = Candidate.from_config(result.best_config)  # legacy-net aware
-        backend, schedule = best.backend, best.schedule
-        chunks, comm_engine = best.chunks, best.comm_engine
-        vector_mode, r2c_packed = best.vector_mode, best.r2c_packed
+        s = best.spec(real=s.real)
     grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
-    plan = FFT3DPlan(n=n, grid=grid, real=real, backend=backend,
-                     schedule=schedule, chunks=chunks, net=net,
-                     r2c_packed=r2c_packed, comm_engine=comm_engine)
+    plan = FFT3DPlan.from_spec(n, grid, s)
+    real = s.real
+    vector_mode = s.vector_mode
     base = grid.pencil_spec()
     spec = P(*((None,) + tuple(base))) if components else base
 

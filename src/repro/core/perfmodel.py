@@ -225,11 +225,10 @@ def table_5_7(mu: int = 1, r: int = 4, k: int = 1, f_hz: float = 180e6):
 BACKEND_COMPUTE_WEIGHT = {"jnp": 1.0, "mxu": 3.0, "ref": 10.0, "pallas": 30.0}
 
 
-#: Which §5.5 fabric each TransposeEngine's traffic is priced on (kept in
-#: sync with ``core.comm`` — validated by tests to avoid a jax import here).
-ENGINE_FABRIC = {"switched": "switched", "torus": "torus",
-                 "overlap_ring": "torus", "pallas_ring": "torus",
-                 "bidi_ring": "torus"}
+#: Which §5.5 fabric each TransposeEngine's traffic is priced on. Owned by
+#: the jax-free ``core.engine_spec`` (shared with ``core.comm`` and
+#: ``core.topology``); re-exported here for backward compatibility.
+from repro.core.engine_spec import ENGINE_FABRIC, EngineSpec  # noqa: E402,F401
 
 
 #: Exposed per-message overhead (seconds, nominal FPGA) each engine pays on
@@ -329,13 +328,26 @@ def bidi_round_ratio(q: int) -> float:
     return (q // 2) / (q - 1)
 
 
-def fold_messages(q: int, fabric: str, engine: str = "") -> int:
+def fold_messages(q, fabric: str, engine: str = "") -> int:
     """Exposed message dispatches one rank pays for one fold over a
     ``q``-rank dimension: one tiled all-to-all on the switched fabric, q−1
     ring rounds on the torus (Fig. 5.9/5.10) — except the bidirectional
     ring, whose two per-round sends are posted concurrently on opposite
     links, leaving ``ceil((q−1)/2)`` round dispatches on the critical path.
-    Zero when the fold never communicates."""
+    Zero when the fold never communicates.
+
+    ``q`` may be a tuple of per-mesh-axis sizes (a grid dimension spanning
+    several mesh axes, e.g. ``(Pu₀, Pu₁)``): the ring engines stage one
+    ring per axis, so the torus fabrics pay Σᵢ ``fold_messages(qᵢ)`` round
+    dispatches, while the switched fabric still dispatches one all-to-all
+    over the whole product group."""
+    if isinstance(q, (tuple, list)):
+        sizes = [int(x) for x in q if int(x) > 1]
+        if not sizes:
+            return 0
+        if fabric == "switched":
+            return 1
+        return sum(fold_messages(x, fabric, engine) for x in sizes)
     if q <= 1:
         return 0
     if fabric == "switched":
@@ -345,14 +357,34 @@ def fold_messages(q: int, fabric: str, engine: str = "") -> int:
     return q - 1
 
 
+def _dim_sizes(q: int, q_axes) -> tuple[int, ...]:
+    """Normalize a grid dimension to its per-mesh-axis factorization.
+
+    ``q_axes=None`` means the flat single-axis view ``(q,)``; an explicit
+    factorization must multiply out to ``q``.
+    """
+    if q_axes is None:
+        return (max(int(q), 1),)
+    sizes = tuple(int(x) for x in q_axes)
+    if math.prod(sizes) != max(int(q), 1):
+        raise ValueError(f"per-axis sizes {sizes} do not factor P={q}")
+    return sizes
+
+
 def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
                       schedule: str, mu: int, r2c_packed: bool, r: int,
                       f_hz: float, link_bytes_per_s: float,
-                      s: int, bidi: bool = False) -> tuple[float, float]:
+                      s: int, bidi: bool = False,
+                      pu_axes=None, pv_axes=None) -> tuple[float, float]:
     """(T_comp, T_net) of one transform: Eq. 4.14/4.15 compute and the
     per-fold V′ traffic of Eq. 3.4 with the Eq. 5.5/5.6 fabric penalty.
     ``bidi`` scales each fold's wire time by the bidirectional ring's
     round ratio (both torus directions carry blocks concurrently).
+    ``pu_axes``/``pv_axes`` give the per-mesh-axis factorization of each
+    grid dimension: on the torus fabrics a fold over several axes runs one
+    staged ring per axis, so its wire time is Σᵢ over single-axis rings
+    (each with that axis' own q/2 multi-hop penalty) instead of one flat
+    ring over the product — the multi-axis schedule is strictly cheaper.
     Shared by :func:`estimate_plan_seconds` and :func:`optimal_chunks`."""
     nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
     p = max(pu, 1) * max(pv, 1)
@@ -371,9 +403,8 @@ def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
 
     v_prime = mu * s * (vol + 2 * ny * nz) / p                  # Eq. 3.4
 
-    def fold_seconds(q: int) -> float:
-        if q <= 1:
-            return 0.0
+    def axis_seconds(q: int) -> float:
+        # one single-axis exchange over a q-rank mesh axis
         t = v_prime * (q - 1) / q / link_bytes_per_s
         if fabric == "torus":
             t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
@@ -381,7 +412,17 @@ def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
             t *= bidi_round_ratio(q)  # both directions stream concurrently
         return t
 
-    return t_comp, fold_seconds(pu) + fold_seconds(pv)
+    def fold_seconds(sizes: tuple[int, ...]) -> float:
+        sizes = tuple(q for q in sizes if q > 1)
+        if not sizes:
+            return 0.0
+        if fabric == "switched":
+            # one all-to-all over the product group regardless of staging
+            return axis_seconds(math.prod(sizes))
+        return sum(axis_seconds(q) for q in sizes)
+
+    return t_comp, (fold_seconds(_dim_sizes(pu, pu_axes))
+                    + fold_seconds(_dim_sizes(pv, pv_axes)))
 
 
 def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
@@ -391,7 +432,8 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
                           r2c_packed: bool = False, r: int = 4,
                           f_hz: float = 180e6,
                           link_bytes_per_s: float = 25e9,
-                          s: int = S_BYTES) -> float:
+                          s: int = S_BYTES, spec: EngineSpec | None = None,
+                          pu_axes=None, pv_axes=None) -> float:
     """Analytic time estimate for one ``FFT3DPlan`` configuration.
 
     This is the paper's model wearing an autotuner hat: compute follows the
@@ -415,9 +457,20 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     and round dispatches by ``ceil((q−1)/2)/(q−1)``. Message overheads and
     backend weights come from the active measured calibration when one
     exists (``repro.tuning.calibrate``), else the built-in priors.
-    Absolute numbers are nominal-FPGA seconds; the autotuner only uses the
-    *ordering* to prune the sweep.
+    ``spec`` supplies the engine configuration as one
+    :class:`~repro.core.engine_spec.EngineSpec`, overriding the individual
+    ``backend/schedule/chunks/comm_engine/r2c_packed`` arguments.
+    ``pu_axes``/``pv_axes`` give the per-mesh-axis factorization of the
+    grid dimensions (``PencilGrid.u_sizes``/``v_sizes``): the ring engines
+    then pay per-axis rounds — Σᵢ(qᵢ−1) instead of P−1 — with each staged
+    ring priced at its own axis' multi-hop penalty. Absolute numbers are
+    nominal-FPGA seconds; the autotuner only uses the *ordering* to prune
+    the sweep.
     """
+    if spec is not None:
+        backend, schedule = spec.backend, spec.schedule
+        chunks, comm_engine = spec.chunks, spec.engine
+        r2c_packed = spec.r2c_packed
     engine = comm_engine or net
     if engine not in ENGINE_FABRIC:
         raise ValueError(f"unknown comm engine {engine!r}; "
@@ -427,9 +480,11 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     t_comp, t_net = _comp_net_seconds(
         n, pu, pv, fabric=fabric, backend=backend, schedule=schedule, mu=mu,
         r2c_packed=r2c_packed, r=r, f_hz=f_hz,
-        link_bytes_per_s=link_bytes_per_s, s=s, bidi=engine == "bidi_ring")
+        link_bytes_per_s=link_bytes_per_s, s=s, bidi=engine == "bidi_ring",
+        pu_axes=pu_axes, pv_axes=pv_axes)
     t_msg = message_overhead_s(engine)
-    msgs = fold_messages(pu, fabric, engine) + fold_messages(pv, fabric, engine)
+    msgs = (fold_messages(_dim_sizes(pu, pu_axes), fabric, engine)
+            + fold_messages(_dim_sizes(pv, pv_axes), fabric, engine))
     if engine in ("overlap_ring", "pallas_ring", "bidi_ring") \
             and (pu > 1 or pv > 1):
         # block-granular overlap: every ring round's latency hides under
@@ -464,11 +519,12 @@ MAX_MODEL_CHUNKS = 32          # finest slab granularity the model proposes
 _FALLBACK_CHUNKS = (2, 4, 8)   # engine-blind legacy choices (no-comm grids)
 
 
-def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str,
+def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str = "",
                    backend: str = "jnp", schedule: str = "pipelined",
                    mu: int = 1, r2c_packed: bool = False, r: int = 4,
                    f_hz: float = 180e6, link_bytes_per_s: float = 25e9,
-                   s: int = S_BYTES) -> int:
+                   s: int = S_BYTES, spec: EngineSpec | None = None,
+                   pu_axes=None, pv_axes=None) -> int:
     """Model-optimal slab count for one engine on one problem.
 
     Chunking trades the pipeline-fill exposure (the ``(T_comp+T_net)/k``
@@ -486,22 +542,32 @@ def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str,
     when a calibration is active, else the prior; the Pallas RDMA rings'
     cheap NIC-doorbell sends support finer slabs than the XLA rings) and
     the per-slab message count ``m`` (``fold_messages`` on the engine's
-    fabric — halved round dispatches for ``bidi_ring``). Returns 1 when no
-    fold communicates (nothing to overlap).
+    fabric — halved round dispatches for ``bidi_ring``, summed per mesh
+    axis when ``pu_axes``/``pv_axes`` factor a grid dimension over several).
+    ``spec`` supplies ``comm_engine``/``backend``/``r2c_packed`` in one
+    object (its ``schedule`` is ignored — the answer is by definition for
+    the pipelined schedule). Returns 1 when no fold communicates
+    (nothing to overlap).
     """
+    if spec is not None:
+        # schedule stays "pipelined": the question this model answers is what
+        # slab count the pipelined schedule should run at for spec's engine.
+        comm_engine, backend = spec.engine, spec.backend
+        r2c_packed = spec.r2c_packed
     if comm_engine not in ENGINE_FABRIC:
         raise ValueError(f"unknown comm engine {comm_engine!r}; "
                          f"have {sorted(ENGINE_FABRIC)}")
     fabric = ENGINE_FABRIC[comm_engine]
-    msgs = fold_messages(pu, fabric, comm_engine) \
-        + fold_messages(pv, fabric, comm_engine)
+    msgs = (fold_messages(_dim_sizes(pu, pu_axes), fabric, comm_engine)
+            + fold_messages(_dim_sizes(pv, pv_axes), fabric, comm_engine))
     t_msg = message_overhead_s(comm_engine)
     if msgs == 0 or t_msg <= 0:
         return 1
     t_comp, t_net = _comp_net_seconds(
         n, pu, pv, fabric=fabric, backend=backend, schedule=schedule, mu=mu,
         r2c_packed=r2c_packed, r=r, f_hz=f_hz,
-        link_bytes_per_s=link_bytes_per_s, s=s, bidi=comm_engine == "bidi_ring")
+        link_bytes_per_s=link_bytes_per_s, s=s, bidi=comm_engine == "bidi_ring",
+        pu_axes=pu_axes, pv_axes=pv_axes)
     k_star = math.sqrt((t_comp + t_net) / (msgs * t_msg))
     if k_star <= 1.0:
         return 1

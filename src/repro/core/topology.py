@@ -10,8 +10,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 
 from repro.core import perfmodel as pm
+from repro.core.engine_spec import EngineSpec
 
 LINK_CAPS_GBPS = (100.0, 200.0, 400.0)      # thesis reference lines
 FREQS_MHZ = (180.0, 250.0, 380.0)           # slow / standard / very fast engine
@@ -29,7 +31,7 @@ ENGINE_FABRIC = pm.ENGINE_FABRIC
 class NetworkPlan:
     """Sizing of one fabric choice for a √P×√P grid.
 
-    ``engine``/``chunks`` are filled by :meth:`for_engine`: the engine the
+    ``engine``/``chunks`` are filled by :meth:`for_spec`: the engine the
     fabric serves and — when the problem size ``n`` is known — the
     engine-aware optimal slab count from ``perfmodel.optimal_chunks``
     (finer slabs need no extra links, but they decide how many messages
@@ -44,23 +46,21 @@ class NetworkPlan:
     chunks: int = 0         # model-optimal slab count (0 = problem unknown)
 
     @classmethod
-    def for_engine(cls, engine: str, p: int, r: int, f_mhz: float,
-                   *, n=None, mu: int = 1, pu: int = 0,
-                   pv: int = 0) -> "NetworkPlan":
-        """Fabric sizing for a ``core.comm`` TransposeEngine choice.
+    def for_spec(cls, spec: EngineSpec, p: int, r: int, f_mhz: float,
+                 *, n=None, mu: int = 1, pu: int = 0, pv: int = 0,
+                 pu_axes=None, pv_axes=None) -> "NetworkPlan":
+        """Fabric sizing for an :class:`~repro.core.engine_spec.EngineSpec`.
 
         With a problem size ``n`` (int or (nx, ny, nz)), the plan also
         carries the engine-aware optimal ``chunks`` — the slab count the
         NIC schedule should run at on this fabric. Pass the actual pencil
         grid via ``pu``/``pv`` (must multiply to ``p``); by default the
         closest-to-square factorization of ``p`` is used (exactly √P×√P
-        when ``p`` is a perfect square, e.g. 8 → 4×2).
+        when ``p`` is a perfect square, e.g. 8 → 4×2). On ≥2D meshes the
+        per-mesh-axis factorizations ``pu_axes``/``pv_axes`` price each
+        staged per-axis ring round separately.
         """
-        try:
-            topo = ENGINE_FABRIC[engine]
-        except KeyError:
-            raise ValueError(f"unknown comm engine {engine!r}; "
-                             f"have {sorted(ENGINE_FABRIC)}") from None
+        topo = spec.fabric
         if pu or pv:
             if pu * pv != p:
                 raise ValueError(f"pu*pv must equal p, got {pu}x{pv} != {p}")
@@ -70,10 +70,26 @@ class NetworkPlan:
             pu = p // pv
         chunks = 0
         if n is not None:
-            chunks = pm.optimal_chunks(n, pu, pv, comm_engine=engine, mu=mu,
-                                       r=r, f_hz=f_mhz * 1e6)
-        return cls(topology=topo, p=p, r=r, f_mhz=f_mhz, engine=engine,
+            chunks = pm.optimal_chunks(n, pu, pv, spec=spec, mu=mu,
+                                       r=r, f_hz=f_mhz * 1e6,
+                                       pu_axes=pu_axes, pv_axes=pv_axes)
+        return cls(topology=topo, p=p, r=r, f_mhz=f_mhz, engine=spec.engine,
                    chunks=chunks)
+
+    @classmethod
+    def for_engine(cls, engine: str, p: int, r: int, f_mhz: float,
+                   *, n=None, mu: int = 1, pu: int = 0,
+                   pv: int = 0) -> "NetworkPlan":
+        """Deprecated spelling of :meth:`for_spec` taking a bare engine name."""
+        warnings.warn(
+            "NetworkPlan.for_engine(name, ...) is deprecated; use "
+            "NetworkPlan.for_spec(EngineSpec(engine=name), ...)",
+            DeprecationWarning, stacklevel=2)
+        if engine not in ENGINE_FABRIC:
+            raise ValueError(f"unknown comm engine {engine!r}; "
+                             f"have {sorted(ENGINE_FABRIC)}")
+        return cls.for_spec(EngineSpec(engine=engine), p, r, f_mhz,
+                            n=n, mu=mu, pu=pu, pv=pv)
 
     @property
     def message_overhead_s(self) -> float:

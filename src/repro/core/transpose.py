@@ -24,6 +24,8 @@ belongs to the TransposeEngine implementations in ``core.comm``.
 
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 from jax import lax
 
@@ -35,6 +37,21 @@ MODES = ("switched", "torus")
 _flat_axis_index = compat.flat_axis_index
 _axis_size = compat.axes_size
 _ppermute = lax.ppermute   # one wire-hop primitive (patchable in unit tests)
+
+
+def axis_sizes(axes) -> tuple[int, ...]:
+    """Per-mesh-axis bound sizes of a tuple of axis names (static ints)."""
+    return tuple(_axis_size((a,)) for a in axes)
+
+
+def comm_axis_sizes(axes) -> tuple[int, ...]:
+    """Sizes of the axes that actually communicate (size > 1).
+
+    The per-axis ring round model sums over exactly these: a grid dimension
+    spanning mesh axes of sizes (q₀, …) costs Σᵢ ``wire_rounds(qᵢ)`` rounds,
+    not ``wire_rounds(Πqᵢ)``.
+    """
+    return tuple(q for q in axis_sizes(axes) if q > 1)
 
 
 def ring_rounds(p: int) -> int:
@@ -91,6 +108,50 @@ def merge_blocks(o, p: int, concat_axis: int):
                      + o.shape[concat_axis + 2:])
 
 
+def staged_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
+                    exchange, interleave=None, **first_stage_kw):
+    """Factor one tiled all-to-all over several mesh axes into sequential
+    **per-axis** exchanges — the multi-axis contract of every ring engine.
+
+    A flat ring over the product group Π qᵢ would route most hops across
+    pods; running one ring per mesh axis keeps every hop a single-axis
+    neighbor exchange (the wafer-scale "all communication is local" layout
+    of Orenes-Vera et al.) and costs Σᵢ ``rounds(qᵢ)`` instead of
+    ``rounds(Πqᵢ)`` rounds. Because :func:`compat.flat_axis_index` is
+    row-major over ``axes``, staging the single-axis exchanges innermost
+    axis first reproduces the flat tiled all-to-all **bit-exactly**: the
+    result equals ``exchange(arrs, axes, ...)`` over the whole tuple.
+
+    ``exchange(arrs, (axis,), *, split_axis, concat_axis, **kw)`` is the
+    single-axis primitive (:func:`ring_exchange`, :func:`ring_exchange_bidi`,
+    or the RDMA kernels of ``kernels.ring_rdma``). ``interleave`` and any
+    ``first_stage_kw`` (e.g. a fusable RDMA ``payload``) ride the first
+    executed stage only — later stages exchange already-transformed blocks.
+    """
+    axes = tuple(axes)
+    sizes = axis_sizes(axes)
+    p = math.prod(sizes)
+    k = len(axes)
+    xss = [stack_blocks(x, p, split_axis) for x in arrs]
+    # leading flat-rank axis -> one axis per mesh axis, row-major like the
+    # flat rank index, so axis i of the block grid addresses mesh axis i
+    xss = [x.reshape(sizes + x.shape[1:]) for x in xss]
+    follow, first = None, True
+    for i in reversed(range(k)):
+        if sizes[i] <= 1:
+            continue
+        cur = tuple(jnp.moveaxis(x, i, 0) for x in xss)
+        kw = dict(first_stage_kw) if first else {}
+        if first and interleave is not None:
+            kw["interleave"] = interleave
+        outs, fl = exchange(cur, (axes[i],), split_axis=0, concat_axis=0, **kw)
+        if first:
+            follow, first = fl, False
+        xss = [jnp.moveaxis(o, 0, i) for o in outs]
+    xss = [x.reshape((p,) + x.shape[k:]) for x in xss]
+    return [merge_blocks(x, p, concat_axis) for x in xss], follow
+
+
 def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
                   interleave=None):
     """P−1 ppermute rounds over same-shaped ``arrs``; round r ships the block
@@ -98,12 +159,22 @@ def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
     (``torus`` and ``overlap_ring`` in ``core.comm`` — one implementation, so
     their relayouts cannot drift apart).
 
+    When ``axes`` spans several communicating mesh axes the exchange is
+    staged per axis (:func:`staged_exchange`): one ring per mesh axis, bit
+    exact vs the flat multi-axis ring but with only neighbor hops per stage.
+
     ``interleave()`` — compute that is data-independent of the in-flight
     blocks — is emitted right after the first round's sends, so XLA's
     scheduler can run it underneath the remaining P−2 rounds (the
     block-granular overlap of paper Fig. 4.3). Returns
     ``(outs, interleave_result)``; the result is None when no callback ran.
     """
+    axes = tuple(axes)
+    if len(comm_axis_sizes(axes)) > 1:
+        comm_axes = tuple(a for a, q in zip(axes, axis_sizes(axes)) if q > 1)
+        return staged_exchange(arrs, comm_axes, split_axis=split_axis,
+                               concat_axis=concat_axis, exchange=ring_exchange,
+                               interleave=interleave)
     p = _axis_size(axes)
     me = _flat_axis_index(axes)
     name = axes if len(axes) > 1 else axes[0]
@@ -140,7 +211,17 @@ def ring_exchange_bidi(arrs, axes, *, split_axis: int, concat_axis: int,
     the directions and goes clockwise only. Same contract, block order, and
     rank-major merge as :func:`ring_exchange` — the relayout is
     bit-identical; only the schedule (and the round count) changes.
+
+    Multi-axis tuples stage per axis like :func:`ring_exchange`, with both
+    directions driven within every stage.
     """
+    axes = tuple(axes)
+    if len(comm_axis_sizes(axes)) > 1:
+        comm_axes = tuple(a for a, q in zip(axes, axis_sizes(axes)) if q > 1)
+        return staged_exchange(arrs, comm_axes, split_axis=split_axis,
+                               concat_axis=concat_axis,
+                               exchange=ring_exchange_bidi,
+                               interleave=interleave)
     p = _axis_size(axes)
     me = _flat_axis_index(axes)
     name = axes if len(axes) > 1 else axes[0]
@@ -192,6 +273,17 @@ def _ring_all_to_all(x, axes, *, split_axis: int, concat_axis: int):
 # axes pass through untouched — this is what the paper's "parallel vector
 # processing" (§4.4.1) rides on.
 # ---------------------------------------------------------------------------
+
+def permute_last3(a, perm: tuple[int, int, int]):
+    """Apply a permutation of the LAST THREE axes; leading axes untouched.
+
+    This is the ``CommStep.permute`` executor: ``(2, 1, 0)`` is the X↔Y
+    fold's transpose (`_swap_last3`), ``(0, 2, 1)`` the Y↔Z fold's
+    (`_swap_last2`).
+    """
+    d = a.ndim
+    return a.transpose(tuple(range(d - 3)) + tuple(d - 3 + i for i in perm))
+
 
 def _swap_last3(a):
     perm = tuple(range(a.ndim - 3)) + (a.ndim - 1, a.ndim - 2, a.ndim - 3)

@@ -1,0 +1,1 @@
+"""Deterministic, stateless data pipeline."""

@@ -1,0 +1,1 @@
+"""Cross-pod distribution utilities: sharding rules, gradient compression."""

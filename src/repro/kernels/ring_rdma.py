@@ -35,6 +35,13 @@ exchange finishes in ``ceil((P−1)/2)`` double-buffered rounds instead of
 P−1; off-TPU it lowers to the counter-rotating ``ppermute`` streams of
 ``transpose.ring_exchange_bidi``.
 
+When a grid dimension spans several mesh axes (a ``CommStep`` whose
+``grid_dim`` resolves to e.g. ``("pod", "data")``), both entry points run
+**one ring per mesh axis** via ``transpose.staged_exchange``: every hop
+stays a single-axis neighbor RDMA, the round count drops to
+Σᵢ rounds(qᵢ), and the composition is bit-exact vs the flat ring over the
+product group.
+
 All entry points run *inside* ``shard_map`` over the FFT mesh axes.
 """
 
@@ -373,31 +380,42 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
     (interpret path — XLA schedules it under the remaining hops), a payload
     is transformed *inside* the kernel between ``start`` and ``wait``
     (TPU path). ``inverse`` applies the conjugate-trick inverse FFT to the
-    payload. Multi-axis rings (flattened Pu over several mesh axes) have no
-    single-axis ``device_id`` and fall back to the shared ppermute ring.
+    payload.
+
+    A grid dimension spanning several communicating mesh axes is **staged
+    per axis** (``transpose.staged_exchange``): one double-buffered RDMA
+    ring kernel per mesh axis, each with a proper single-axis neighbor
+    ``device_id`` — never the flat ``ppermute`` fallback. The payload (or
+    thunk) rides the first stage; later stages relay the already
+    transformed blocks. The composition is bit-exact vs the flat ring.
     """
     assert interleave is None or payload is None, \
         "interleave (JAX-level thunk) and payload (in-kernel) are exclusive"
+    axes = tuple(axes)
     p = compat.axes_size(axes)
     if p <= 1:
         return [jnp.asarray(a) for a in arrs], None
     if interpret is None:
         interpret = not use_rdma()
-    if not interpret and len(axes) == 1:
+    comm_axes = tuple(a for a in axes if compat.axes_size((a,)) > 1)
+    if len(comm_axes) > 1:
+        ex = functools.partial(ring_exchange_rdma, interpret=interpret)
+        return tr.staged_exchange(arrs, comm_axes, split_axis=split_axis,
+                                  concat_axis=concat_axis, exchange=ex,
+                                  interleave=interleave, payload=payload,
+                                  inverse=inverse)
+    if not interpret:
         # the fused kernel is atomic — a JAX-level thunk can't run between
         # its rounds, so non-fusable compute is emitted before the kernel
         # (serialized; the chunk model prices this, and fusable compute
         # takes the in-kernel payload path instead). The contract still
         # returns the thunk's result so callers' slab pipelines advance.
         follow = interleave() if interleave is not None else None
-        outs, fused = _ring_rdma_tpu(arrs, axes, split_axis=split_axis,
+        outs, fused = _ring_rdma_tpu(arrs, comm_axes,
+                                     split_axis=split_axis,
                                      concat_axis=concat_axis, payload=payload,
                                      inverse=inverse)
         return outs, (fused if payload is not None else follow)
-    if not interpret:
-        # multi-axis ring on TPU: no single-axis device_id — shared ring
-        return tr.ring_exchange(arrs, axes, split_axis=split_axis,
-                                concat_axis=concat_axis, interleave=interleave)
     if payload is not None:
         # no in-kernel butterflies off-TPU: degrade to the thunk contract
         raise ValueError("payload fusion requires the TPU RDMA lowering; "
@@ -420,23 +438,33 @@ def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
     double-buffered ``make_async_remote_copy`` sends to *both* neighbors
     per round with per-direction semaphores (``_rdma_bidi_kernel``); a
     fusable ``payload`` pair is butterflied in-kernel exactly like the
-    unidirectional kernel. Off-TPU (and for multi-axis rings, which have no
-    single-axis ``device_id``) the exchange is the two counter-rotating
+    unidirectional kernel. Off-TPU the exchange is the two counter-rotating
     ``ppermute`` streams of ``transpose.ring_exchange_bidi`` — the
-    interpret-portable schedule CI pins bit-exact vs ``torus``.
+    interpret-portable schedule CI pins bit-exact vs ``torus``. Multi-axis
+    grid dimensions stage one bidirectional ring per mesh axis
+    (``transpose.staged_exchange``), exactly like ``ring_exchange_rdma``.
     """
     assert interleave is None or payload is None, \
         "interleave (JAX-level thunk) and payload (in-kernel) are exclusive"
+    axes = tuple(axes)
     p = compat.axes_size(axes)
     if p <= 1:
         return [jnp.asarray(a) for a in arrs], None
     if interpret is None:
         interpret = not use_rdma()
-    if not interpret and len(axes) == 1:
+    comm_axes = tuple(a for a in axes if compat.axes_size((a,)) > 1)
+    if len(comm_axes) > 1:
+        ex = functools.partial(ring_exchange_bidi_rdma, interpret=interpret)
+        return tr.staged_exchange(arrs, comm_axes, split_axis=split_axis,
+                                  concat_axis=concat_axis, exchange=ex,
+                                  interleave=interleave, payload=payload,
+                                  inverse=inverse)
+    if not interpret:
         # the fused kernel is atomic (see ring_exchange_rdma): non-fusable
         # compute is emitted before it, fusable compute rides the payload
         follow = interleave() if interleave is not None else None
-        outs, fused = _ring_rdma_tpu(arrs, axes, split_axis=split_axis,
+        outs, fused = _ring_rdma_tpu(arrs, comm_axes,
+                                     split_axis=split_axis,
                                      concat_axis=concat_axis, payload=payload,
                                      inverse=inverse, bidi=True)
         return outs, (fused if payload is not None else follow)

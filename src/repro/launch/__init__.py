@@ -1,0 +1,1 @@
+"""Launchers: mesh setup, dry-run planning, HLO cost inspection, serving."""

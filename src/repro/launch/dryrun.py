@@ -185,6 +185,7 @@ def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
     mesh (pencil grid = (pod·data, model))."""
     import math as _math
 
+    from repro.core.engine_spec import EngineSpec
     from repro.core.fft3d import make_fft3d
 
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
@@ -196,10 +197,11 @@ def run_fft_cell(n: int, multi_pod: bool, out_dir: str, *,
     t0 = time.time()
     try:
         with compat.set_mesh(mesh):
+            spec = EngineSpec(engine=comm_engine or net, backend=backend,
+                              schedule=schedule, chunks=chunks, real=True,
+                              r2c_packed=r2c_packed)
             fwd, inv, plan = make_fft3d(
-                mesh, (n, n, n), u_axes=u_axes, v_axes=("model",), real=True,
-                backend=backend, schedule=schedule, chunks=chunks, net=net,
-                comm_engine=comm_engine, r2c_packed=r2c_packed)
+                mesh, (n, n, n), u_axes=u_axes, v_axes=("model",), spec=spec)
             x = jax.ShapeDtypeStruct(
                 (n, n, n), jnp.float32,
                 sharding=plan.grid.sharding(mesh))

@@ -1,0 +1,1 @@
+"""Optimizers (pure-pytree AdamW)."""

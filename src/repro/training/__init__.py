@@ -1,0 +1,1 @@
+"""Training step factory and loop."""

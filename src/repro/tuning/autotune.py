@@ -41,9 +41,8 @@ class TuneResult:
 
 def _estimate(cand: Candidate, n, grid: PencilGrid, components: int) -> float:
     return pm.estimate_plan_seconds(
-        n, grid.pu, grid.pv, backend=cand.backend, schedule=cand.schedule,
-        chunks=cand.chunks, comm_engine=cand.comm_engine,
-        mu=max(components, 1), r2c_packed=cand.r2c_packed)
+        n, grid.pu, grid.pv, spec=cand.spec(), mu=max(components, 1),
+        pu_axes=grid.u_sizes, pv_axes=grid.v_sizes)
 
 
 def time_candidate_pair(mesh, n, cand: Candidate, *, real: bool = False,
@@ -62,9 +61,7 @@ def time_candidate_pair(mesh, n, cand: Candidate, *, real: bool = False,
 
     fwd, inv, _plan = make_fft3d(
         mesh, n, u_axes=u_axes, v_axes=v_axes, real=real,
-        components=components, backend=cand.backend, schedule=cand.schedule,
-        chunks=cand.chunks, comm_engine=cand.comm_engine,
-        vector_mode=cand.vector_mode, r2c_packed=cand.r2c_packed)
+        components=components, spec=cand.spec(real=real))
     nx, ny, nz = n
     shape = ((components,) if components else ()) + (ny, nz, nx)
     rng = np.random.RandomState(0)
@@ -128,7 +125,8 @@ def autotune(mesh, n, *, real: bool = False, components: int = 0,
                               key=key, rows=entry.get("rows", []))
 
     cands = candidate_space(n, grid.pu, grid.pv, real=real,
-                            components=components)
+                            components=components,
+                            pu_axes=grid.u_sizes, pv_axes=grid.v_sizes)
     cands.sort(key=lambda c: _estimate(c, n, grid, components))
     keep = cands[:max(max_candidates, 1)]
     if DEFAULT_CANDIDATE not in keep:

@@ -161,7 +161,7 @@ def measure_engine_overheads(mesh, *, iters: int = 5,
         msgs = pm.fold_messages(grid.pu, pm.ENGINE_FABRIC[name], name)
         if msgs <= 0:
             continue
-        eng = comm.make_engine(name, grid)
+        eng = comm.build_engine(comm.EngineSpec(engine=name), grid)
         fold = jax.jit(compat.shard_map(
             lambda a, e=eng: e.fold_xy(a), mesh=mesh, in_specs=(spec,),
             out_specs=spec, check_vma=False))

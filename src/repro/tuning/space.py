@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.engine_spec import EngineSpec
 from repro.core.perfmodel import ENGINE_FABRIC, chunk_candidates
 from repro.kernels.ref import is_pow2
 
@@ -47,6 +48,19 @@ class Candidate:
         fields = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in cfg.items() if k in fields})
 
+    def spec(self, real: bool = False) -> EngineSpec:
+        """The :class:`EngineSpec` this candidate configures."""
+        return EngineSpec(engine=self.comm_engine, backend=self.backend,
+                          schedule=self.schedule, chunks=self.chunks,
+                          real=real, r2c_packed=self.r2c_packed,
+                          vector_mode=self.vector_mode)
+
+    @classmethod
+    def from_spec(cls, spec: EngineSpec) -> "Candidate":
+        return cls(backend=spec.backend, schedule=spec.schedule,
+                   chunks=spec.chunks, comm_engine=spec.engine,
+                   vector_mode=spec.vector_mode, r2c_packed=spec.r2c_packed)
+
 
 def normalize_config(cfg: dict) -> dict:
     """Copy of ``cfg`` with legacy knobs mapped onto the current ones.
@@ -65,8 +79,8 @@ DEFAULT_CANDIDATE = Candidate()  # the hardcoded status quo every caller used
 
 
 def candidate_space(n, pu: int, pv: int, *, real: bool = False,
-                    components: int = 0,
-                    backends=None) -> list[Candidate]:
+                    components: int = 0, backends=None,
+                    pu_axes=None, pv_axes=None) -> list[Candidate]:
     """All valid candidates for the problem.
 
     Validity rules:
@@ -81,6 +95,9 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
       optimum and the neighboring powers of two instead of an engine-blind
       global list — the per-message overhead of e.g. ``pallas_ring``'s
       NIC-doorbell sends supports finer slabs than the XLA rings.
+    * on ≥2D meshes the per-mesh-axis factorizations ``pu_axes``/``pv_axes``
+      (e.g. ``PencilGrid.u_sizes``) feed the chunk model, which prices each
+      staged per-axis ring round instead of one flat P-rank ring.
     * ``vector_mode`` only matters for μ-component fields (``components>0``).
     * ``r2c_packed`` needs a real transform with even power-of-two Nx.
     """
@@ -96,7 +113,8 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
     for backend in backends:
         for engine in engines:
             chunks_for = chunk_candidates(n, pu, pv, engine,
-                                          backend=backend, mu=max(components, 1))
+                                          backend=backend, mu=max(components, 1),
+                                          pu_axes=pu_axes, pv_axes=pv_axes)
             schedules = [("sequential", 1)] + [("pipelined", c)
                                                for c in chunks_for]
             for schedule, chunks in schedules:

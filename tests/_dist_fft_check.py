@@ -1,19 +1,36 @@
 """Multi-device distributed-FFT correctness checks (run in a subprocess so
 the fake-device XLA flag doesn't leak into the main pytest process).
 
-Usage: python tests/_dist_fft_check.py [--mesh PUxPV] [--engine NAME]
-(expects PYTHONPATH=src). ``--engine`` restricts the comm-engine sweep to
-one engine (the CI mesh-shape × comm-engine matrix runs one cell per job);
-the full run also covers backends, packed r2c, vector modes, and the
-multi-axis mesh. Prints CHECK <name> OK / raises on failure. Final line:
-ALL_OK.
+Usage: python tests/_dist_fft_check.py [--mesh PUxPV|AxBxC] [--engine NAME]
+(expects PYTHONPATH=src). ``--mesh AxBxC`` builds the 3-axis
+``("pod", "data", "model")`` mesh with the u grid dimension spanning
+``("pod", "data")`` — the staged per-axis transpose path. ``--engine``
+restricts the comm-engine sweep to one engine (the CI mesh-shape ×
+comm-engine matrix runs one cell per job); the full run also covers
+backends, packed r2c, vector modes, and the multi-axis mesh. Prints
+CHECK <name> OK / raises on failure. Final line: ALL_OK.
 """
 
 import argparse
+import math
+import sys
 
 from repro.launch.mesh import ensure_host_devices
 
-ensure_host_devices(8)
+
+def _parse_mesh(spec: str) -> tuple[int, ...]:
+    dims = tuple(int(t) for t in spec.lower().split("x"))
+    if len(dims) not in (2, 3) or any(d < 1 for d in dims):
+        raise SystemExit(f"bad --mesh {spec!r}; want e.g. 4x2 or 2x2x2")
+    return dims
+
+
+# the fake-device flag must be set before jax initializes, and the count
+# depends on the --mesh argument — peek at argv ahead of argparse
+_dims = (4, 2)
+if "--mesh" in sys.argv[:-1]:
+    _dims = _parse_mesh(sys.argv[sys.argv.index("--mesh") + 1])
+ensure_host_devices(max(8, math.prod(_dims)))
 
 import jax  # noqa: E402
 
@@ -23,6 +40,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro import compat  # noqa: E402
+from repro.core.engine_spec import EngineSpec  # noqa: E402
 from repro.core.fft3d import make_fft3d  # noqa: E402
 
 
@@ -35,8 +53,13 @@ def expected_c2c(g):
     return np.fft.fftn(np.asarray(g, np.complex128), axes=(0, 1, 2)).transpose(2, 0, 1)
 
 
-def run(pu: int = 4, pv: int = 2, engine: str = ""):
-    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+def run(dims: tuple[int, ...] = (4, 2), engine: str = ""):
+    if len(dims) == 2:
+        mesh = compat.make_mesh(dims, ("data", "model"))
+        axes_kw = dict(u_axes=("data",), v_axes=("model",))
+    else:
+        mesh = compat.make_mesh(dims, ("pod", "data", "model"))
+        axes_kw = dict(u_axes=("pod", "data"), v_axes=("model",))
     n = (16, 16, 16)
     ny, nz, nx = 16, 16, 16
     rng = np.random.RandomState(0)
@@ -51,23 +74,23 @@ def run(pu: int = 4, pv: int = 2, engine: str = ""):
         # one matrix cell: the selected engine sequential + pipelined, and
         # (below) its r2c path — vs the same analytic NumPy reference
         configs = [
-            (engine, dict(comm_engine=engine)),
+            (engine, EngineSpec(engine=engine)),
             (f"{engine}_pipelined4",
-             dict(comm_engine=engine, schedule="pipelined", chunks=4)),
+             EngineSpec(engine=engine, schedule="pipelined", chunks=4)),
         ]
     else:
         configs = [
-            ("switched_seq", dict()),
-            ("torus", dict(net="torus")),
-            ("overlap_ring", dict(comm_engine="overlap_ring")),
-            ("pallas_ring", dict(comm_engine="pallas_ring")),
-            ("pipelined4", dict(schedule="pipelined", chunks=4)),
-            ("pallas_backend", dict(backend="pallas")),
-            ("ref_backend", dict(backend="ref")),
+            ("switched_seq", EngineSpec()),
+            ("torus", EngineSpec(engine="torus")),
+            ("overlap_ring", EngineSpec(engine="overlap_ring")),
+            ("pallas_ring", EngineSpec(engine="pallas_ring")),
+            ("pipelined4", EngineSpec(schedule="pipelined", chunks=4)),
+            ("pallas_backend", EngineSpec(backend="pallas")),
+            ("ref_backend", EngineSpec(backend="ref")),
         ]
     base = None
-    for name, kw in configs:
-        fwd, inv, plan = make_fft3d(mesh, n, backend=kw.pop("backend", "jnp"), **kw)
+    for name, cfg in configs:
+        fwd, inv, plan = make_fft3d(mesh, n, spec=cfg, **axes_kw)
         kr, ki = fwd(xr, xi)
         got = np.asarray(kr) + 1j * np.asarray(ki)
         assert rel(got, want) < 1e-9, (name, rel(got, want))
@@ -80,8 +103,9 @@ def run(pu: int = 4, pv: int = 2, engine: str = ""):
         print("CHECK", name, "OK", flush=True)
 
     # real-to-complex path (paper §3.2.5 data model)
-    fwd, inv, plan = make_fft3d(mesh, n, real=True,
-                                comm_engine=engine or "switched")
+    fwd, inv, plan = make_fft3d(
+        mesh, n, spec=EngineSpec(engine=engine or "switched", real=True),
+        **axes_kw)
     kr, ki = fwd(xr)
     keep = nx // 2 + 1
     wr = np.fft.fftn(np.fft.rfft(g_re, axis=2), axes=(0, 1)).transpose(2, 0, 1)
@@ -96,7 +120,9 @@ def run(pu: int = 4, pv: int = 2, engine: str = ""):
         return
 
     # packed r2c (beyond-paper) must agree with the faithful path
-    fwdp, invp, _ = make_fft3d(mesh, n, real=True, r2c_packed=True, backend="ref")
+    fwdp, invp, _ = make_fft3d(
+        mesh, n, spec=EngineSpec(backend="ref", real=True, r2c_packed=True),
+        **axes_kw)
     kr2, ki2 = fwdp(xr)
     assert rel(np.asarray(kr2)[:keep] + 1j * np.asarray(ki2)[:keep], wr) < 1e-9
     print("CHECK r2c_packed OK", flush=True)
@@ -106,7 +132,8 @@ def run(pu: int = 4, pv: int = 2, engine: str = ""):
     v_im = jnp.asarray(rng.randn(3, ny, nz, nx))
     outs = {}
     for vm in ("streaming", "parallel"):
-        fwd, inv, plan = make_fft3d(mesh, n, components=3, vector_mode=vm)
+        fwd, inv, plan = make_fft3d(mesh, n, components=3,
+                                    spec=EngineSpec(vector_mode=vm), **axes_kw)
         kr, ki = fwd(v_re, v_im)
         outs[vm] = np.asarray(kr) + 1j * np.asarray(ki)
         br, bi = inv(kr, ki)
@@ -117,11 +144,15 @@ def run(pu: int = 4, pv: int = 2, engine: str = ""):
                    expected_c2c(np.asarray(v_re[c]) + 1j * np.asarray(v_im[c]))) < 1e-9
     print("CHECK vector_modes OK", flush=True)
 
-    # multi-axis u (multi-pod style): u over both axes of a (2,2,2) mesh
+    # multi-axis u (multi-pod style): u over both axes of a (2,2,2) mesh —
+    # on the ring engines this is the staged per-axis RDMA transpose path
     mesh3 = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    fwd, inv, plan = make_fft3d(mesh3, n, u_axes=("pod", "data"), v_axes=("model",))
-    kr, ki = fwd(xr, xi)
-    assert rel(np.asarray(kr) + 1j * np.asarray(ki), want) < 1e-9
+    for eng3 in ("switched", "pallas_ring", "bidi_ring"):
+        fwd, inv, plan = make_fft3d(mesh3, n, u_axes=("pod", "data"),
+                                    v_axes=("model",),
+                                    spec=EngineSpec(engine=eng3))
+        kr, ki = fwd(xr, xi)
+        assert rel(np.asarray(kr) + 1j * np.asarray(ki), want) < 1e-9, eng3
     print("CHECK multipod_u_axes OK", flush=True)
 
     print("ALL_OK", flush=True)
@@ -129,9 +160,9 @@ def run(pu: int = 4, pv: int = 2, engine: str = ""):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="4x2", help="PUxPV pencil grid")
+    ap.add_argument("--mesh", default="4x2",
+                    help="PUxPV pencil grid, or AxBxC for the 3-axis mesh")
     ap.add_argument("--engine", default="",
                     help="restrict the engine sweep to one comm engine")
     args = ap.parse_args()
-    pu, pv = (int(t) for t in args.mesh.lower().split("x"))
-    run(pu, pv, args.engine)
+    run(_parse_mesh(args.mesh), args.engine)

@@ -15,10 +15,18 @@ throwaway cache. Prints CHECK <case> OK per case, then ALL_OK.
 """
 
 import argparse
+import math
+import sys
 
 from repro.launch.mesh import ensure_host_devices
 
-ensure_host_devices(8)
+# the fake-device flag must be set before jax initializes, and the count
+# depends on the --mesh argument — peek at argv ahead of argparse
+_ndev = 8
+if "--mesh" in sys.argv[:-1]:
+    _dims = [int(t) for t in sys.argv[sys.argv.index("--mesh") + 1].split("x")]
+    _ndev = max(8, math.prod(_dims))
+ensure_host_devices(_ndev)
 
 import jax  # noqa: E402
 

@@ -1,26 +1,33 @@
 """Multi-device TransposeEngine equivalence checks (subprocess: the fake
 device-count XLA flag must be set before jax initializes).
 
-Usage: python tests/_dist_transpose_check.py PUxPV [--engine NAME]
-(expects PYTHONPATH=src). Asserts, for a non-trivial Pu×Pv grid and every
-registered engine (``switched`` all-to-all / ``torus`` ring /
-``overlap_ring`` fused ring / ``pallas_ring`` async-RDMA ring, which runs
-its Pallas kernels in interpret mode off-TPU / ``bidi_ring``, the
-bidirectional two-NIC ring — including the P=2 mesh where both directions
-hit the same neighbor and odd-P meshes with an unbalanced direction split,
-whose grid extent adapts to stay pencil-divisible):
+Usage: python tests/_dist_transpose_check.py MESH [--engine NAME]
+(expects PYTHONPATH=src). ``MESH`` is either ``PUxPV`` (2D mesh,
+``u=("data",)``, ``v=("model",)`` — e.g. ``4x2``, ``4x4``, ``8x4``) or
+``AxBxC`` (3-axis mesh ``("pod", "data", "model")`` with the u grid
+dimension spanning ``("pod", "data")`` — the multi-axis pencil where every
+ring engine must run one **staged per-axis ring per mesh axis**, never a
+flat ``ppermute`` over the product group). Asserts, for every registered
+engine (``switched`` all-to-all / ``torus`` ring / ``overlap_ring`` fused
+ring / ``pallas_ring`` async-RDMA ring, which runs its Pallas kernels in
+interpret mode off-TPU / ``bidi_ring``, the bidirectional two-NIC ring —
+including the P=2 mesh where both directions hit the same neighbor and
+odd-P meshes with an unbalanced direction split, whose grid extent adapts
+to stay pencil-divisible):
 
-* every engine's ``fold_xy``/``fold_yz`` relayout is **bit-identical** to the
-  ``switched`` reference (the two fabrics and the overlapped schedules compute
-  the same data movement, §5.5),
-* ``unfold ∘ fold`` is the identity for every engine (randomized over several
-  inputs — the property the whole pipeline rests on), and
+* every engine's ``fold("xy")``/``fold("yz")`` relayout is **bit-identical**
+  to the ``switched`` reference (the two fabrics and the overlapped
+  schedules compute the same data movement, §5.5),
+* ``unfold ∘ fold`` is the identity for every engine and every CommStep
+  (randomized over several inputs — the property the pipeline rests on),
 * the full distributed 3D FFT built on each engine is allclose (fp64,
   1e-10) to the ``switched`` build for forward and forward∘inverse,
   including the real and pipelined paths of the overlapped rings, and
-* every ring engine's ``exchange_rounds`` counter matches its round model —
-  P−1 wire rounds for the unidirectional rings, ``ceil((P−1)/2)`` for
-  ``bidi_ring`` (the two-NIC halving this engine exists for).
+* every ring engine's ``exchange_rounds`` counter matches the per-axis
+  round model — Σᵢ(qᵢ−1) wire rounds over the fold's communicating mesh
+  axes for the unidirectional rings, Σᵢ⌈(qᵢ−1)/2⌉ for ``bidi_ring`` (on a
+  multi-axis u dimension this is strictly fewer rounds than one flat ring
+  over Pu ranks — the staging win the per-axis perf model prices).
 
 ``--engine NAME`` restricts the sweep to one engine (always keeping the
 ``switched`` reference) — the CI mesh-shape × comm-engine matrix runs one
@@ -30,10 +37,26 @@ ALL_OK.
 
 import argparse
 import math
+import sys
 
 from repro.launch.mesh import ensure_host_devices
 
-ensure_host_devices(8)
+
+def _parse_shape(shape: str) -> tuple[int, ...]:
+    try:
+        dims = tuple(int(t) for t in shape.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"bad mesh shape {shape!r}; want e.g. 4x2 or 2x2x2")
+    if len(dims) not in (2, 3) or any(d < 1 for d in dims):
+        raise SystemExit(f"bad mesh shape {shape!r}; want 2 or 3 positive "
+                         f"x-separated sizes")
+    return dims
+
+
+# the device count depends on the mesh argument, and the fake-device flag
+# must be set before jax initializes — peek at argv ahead of argparse
+_dims = _parse_shape(sys.argv[1]) if len(sys.argv) > 1 else (4, 2)
+ensure_host_devices(max(8, math.prod(_dims)))
 
 import jax  # noqa: E402
 
@@ -46,6 +69,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro import compat  # noqa: E402
 from repro.core import comm  # noqa: E402
 from repro.core.decomposition import PencilGrid  # noqa: E402
+from repro.core.engine_spec import EngineSpec  # noqa: E402
 from repro.core.fft3d import make_fft3d  # noqa: E402
 
 TOL = 1e-10
@@ -56,7 +80,11 @@ def rel(a, b):
     return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30)
 
 
-def run(pu: int, pv: int, engine: str = "") -> None:
+def _engine(name, grid, **kw):
+    return comm.build_engine(EngineSpec(engine=name, **kw), grid)
+
+
+def run(dims: tuple[int, ...], engine: str = "") -> None:
     if engine and engine not in comm.ENGINE_NAMES:
         raise SystemExit(f"unknown --engine {engine!r}; "
                          f"have {sorted(comm.ENGINE_NAMES)}")
@@ -66,8 +94,14 @@ def run(pu: int, pv: int, engine: str = "") -> None:
                   if not engine or e in ("switched", engine))
     ring_names = tuple(e for e in names
                        if e in ("overlap_ring", "pallas_ring", "bidi_ring"))
-    mesh = compat.make_mesh((pu, pv), ("data", "model"))
-    grid = PencilGrid.from_mesh(mesh)
+    if len(dims) == 2:
+        mesh = compat.make_mesh(dims, ("data", "model"))
+        u_axes, v_axes = ("data",), ("model",)
+    else:
+        mesh = compat.make_mesh(dims, ("pod", "data", "model"))
+        u_axes, v_axes = ("pod", "data"), ("model",)
+    grid = PencilGrid.from_mesh(mesh, u_axes, v_axes)
+    pu, pv = grid.pu, grid.pv
     # smallest pencil-divisible cubic extent >= 12 (16 when it divides, the
     # historical value; e.g. the odd 3x2 mesh runs at 12^3)
     lcm = math.lcm(pu, pv)
@@ -87,7 +121,7 @@ def run(pu: int, pv: int, engine: str = "") -> None:
         folded = {}
         roundtrips = {}
         for name in names:
-            eng = comm.make_engine(name, grid)
+            eng = _engine(name, grid)
             folded[name] = sm(lambda a, e=eng, w=which: e.fold(w, a))
             roundtrips[name] = sm(
                 lambda a, e=eng, w=which: e.unfold(w, e.fold(w, a)))
@@ -109,9 +143,9 @@ def run(pu: int, pv: int, engine: str = "") -> None:
     bspec = P(None, *spec)
     outs = {}
     for name in names:
-        eng = comm.make_engine(name, grid)
+        eng = _engine(name, grid)
         f = jax.jit(compat.shard_map(
-            lambda a, e=eng: e.fold_yz(e.fold_xy(a)),
+            lambda a, e=eng: e.fold("yz", e.fold("xy", a)),
             mesh=mesh, in_specs=(bspec,), out_specs=bspec, check_vma=False))
         outs[name] = np.asarray(f(xb))
     for name in names[1:]:
@@ -119,26 +153,37 @@ def run(pu: int, pv: int, engine: str = "") -> None:
     print("CHECK composed_folds_bitexact OK", flush=True)
 
     # ---- exchange-round complexity (traced through the engine hooks) ------
-    # one fold over the Pu ranks costs wire_rounds(Pu) rounds: Pu−1 for the
-    # unidirectional rings, ceil((Pu−1)/2) for the bidirectional one
+    # one fold over the u grid dimension costs Σᵢ wire_rounds(qᵢ) rounds over
+    # its communicating mesh axes: a multi-axis dimension runs one staged
+    # ring per axis, NOT one flat ring over the Pu-rank product group
+    u_comm = tuple(q for q in grid.u_sizes if q > 1)
     for name in ring_names:
-        eng = comm.make_engine(name, grid)
-        f = sm(lambda a, e=eng: e.fold_xy(a))
+        eng = _engine(name, grid)
+        f = sm(lambda a, e=eng: e.fold("xy", a))
         np.asarray(f(x))
-        want = eng.wire_rounds(pu) if pu > 1 else 0
+        want = sum(eng.wire_rounds(q) for q in u_comm)
         assert eng.exchange_rounds == want, (name, eng.exchange_rounds, want)
         if name == "bidi_ring" and pu > 1:
-            assert want == (pu - 1 + 1) // 2  # ceil((P−1)/2)
+            assert want == sum((q - 1 + 1) // 2 for q in u_comm)  # Σ⌈(q−1)/2⌉
+        if len(u_comm) > 1:
+            # the staging win: never more rounds than one flat Pu ring
+            # (strictly fewer for the unidirectional rings; the bidi ring
+            # ties on (2,2) where both schedules need 2 rounds)
+            assert want <= eng.wire_rounds(pu), (name, want, pu)
+            if name != "bidi_ring":
+                assert want < eng.wire_rounds(pu), (name, want, pu)
     print("CHECK exchange_round_counts OK", flush=True)
 
     # ---- full distributed FFT per engine vs the switched reference --------
     xr = jnp.asarray(rng.randn(*n))
     xi = jnp.asarray(rng.randn(*n))
-    fwd0, inv0, _ = make_fft3d(mesh, n, comm_engine="switched")
+    fwd0, inv0, _ = make_fft3d(mesh, n, spec=EngineSpec(engine="switched"),
+                               u_axes=u_axes, v_axes=v_axes)
     kr0, ki0 = fwd0(xr, xi)
     want = np.asarray(kr0) + 1j * np.asarray(ki0)
     for name in names[1:]:
-        fwd, inv, plan = make_fft3d(mesh, n, comm_engine=name)
+        fwd, inv, plan = make_fft3d(mesh, n, spec=EngineSpec(engine=name),
+                                    u_axes=u_axes, v_axes=v_axes)
         kr, ki = fwd(xr, xi)
         got = np.asarray(kr) + 1j * np.asarray(ki)
         assert rel(got, want) < TOL, (name, rel(got, want))
@@ -149,16 +194,19 @@ def run(pu: int, pv: int, engine: str = "") -> None:
 
     # overlapped rings with the pipelined schedule and the real (r2c) data
     # model — the interpret-mode fallback of pallas_ring rides this path too
-    fwdr0, invr0, _ = make_fft3d(mesh, n, real=True, comm_engine="switched")
+    fwdr0, invr0, _ = make_fft3d(mesh, n, u_axes=u_axes, v_axes=v_axes,
+                                 spec=EngineSpec(engine="switched", real=True))
     krr0, kir0 = fwdr0(xr)
     for name in ring_names:
-        fwdp, invp, _ = make_fft3d(mesh, n, comm_engine=name,
-                                   schedule="pipelined", chunks=2)
+        fwdp, invp, _ = make_fft3d(
+            mesh, n, u_axes=u_axes, v_axes=v_axes,
+            spec=EngineSpec(engine=name, schedule="pipelined", chunks=2))
         krp, kip = fwdp(xr, xi)
         assert rel(np.asarray(krp) + 1j * np.asarray(kip), want) < TOL
         print(f"CHECK fft_{name}_pipelined OK", flush=True)
 
-        fwdr, invr, _ = make_fft3d(mesh, n, real=True, comm_engine=name)
+        fwdr, invr, _ = make_fft3d(mesh, n, u_axes=u_axes, v_axes=v_axes,
+                                   spec=EngineSpec(engine=name, real=True))
         krr, kir = fwdr(xr)
         assert rel(np.asarray(krr) + 1j * np.asarray(kir),
                    np.asarray(krr0) + 1j * np.asarray(kir0)) < TOL
@@ -171,10 +219,10 @@ def run(pu: int, pv: int, engine: str = "") -> None:
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("shape", help="PUxPV pencil grid, e.g. 4x2")
+    ap.add_argument("shape", help="mesh: PUxPV (e.g. 4x2, 8x4) or AxBxC "
+                                  "(3-axis mesh, u spans the first two)")
     ap.add_argument("--engine", default="",
                     help="restrict to one comm engine (default: all; the "
                          "switched reference always runs)")
     args = ap.parse_args()
-    pu, pv = (int(t) for t in args.shape.lower().split("x"))
-    run(pu, pv, args.engine)
+    run(_parse_shape(args.shape), args.engine)

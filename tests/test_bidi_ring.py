@@ -126,7 +126,7 @@ def test_bidi_engine_round_counter(p, monkeypatch):
     # the engine's exchange_rounds counter pins the complexity claim:
     # ceil((P-1)/2) rounds per exchange vs P-1 for the unidirectional rings
     grid = PencilGrid(pu=p, pv=1, u_axes=("data",), v_axes=())
-    engines = {name: [comm.make_engine(name, grid) for _ in range(p)]
+    engines = {name: [comm.build_engine(comm.EngineSpec(engine=name), grid) for _ in range(p)]
                for name in ("overlap_ring", "bidi_ring")}
     xs = _locals(p)
 
@@ -168,7 +168,7 @@ def test_bidi_engine_degenerate_grid_local_transposes():
     # on the 1x1 grid nothing communicates: folds reduce to pure local
     # transposes and unfold∘fold is the identity (no devices involved)
     grid = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
-    eng = comm.make_engine("bidi_ring", grid)
+    eng = comm.build_engine(comm.EngineSpec(engine="bidi_ring"), grid)
     x = jnp.asarray(np.random.RandomState(0).randn(4, 4, 4))
     for which in ("xy", "yz"):
         back = eng.unfold(which, eng.fold(which, x))

@@ -154,12 +154,15 @@ def test_calibration_changes_backend_weights():
 
 
 def test_network_plan_reports_calibrated_overhead():
+    from repro.core.engine_spec import EngineSpec
+
+    spec = EngineSpec(engine="pallas_ring")
     pm.set_calibration(synth_doc({"pallas_ring": 42e-6}))
-    plan = topo.NetworkPlan.for_engine("pallas_ring", p=64, r=4, f_mhz=180.0)
+    plan = topo.NetworkPlan.for_spec(spec, p=64, r=4, f_mhz=180.0)
     assert plan.message_overhead_s == pytest.approx(42e-6)
     pm.set_calibration(None)
-    assert topo.NetworkPlan.for_engine(
-        "pallas_ring", p=64, r=4, f_mhz=180.0).message_overhead_s == \
+    assert topo.NetworkPlan.for_spec(
+        spec, p=64, r=4, f_mhz=180.0).message_overhead_s == \
         pm.ENGINE_MESSAGE_OVERHEAD_S["pallas_ring"]
 
 

@@ -49,28 +49,37 @@ def test_fabric_maps_consistent_across_layers():
         pm.estimate_plan_seconds(64, 2, 2, comm_engine="carrier_pigeon")
 
 
-def test_network_plan_for_engine():
+def test_network_plan_for_spec():
     for name in comm.ENGINE_NAMES:
-        plan = topo.NetworkPlan.for_engine(name, p=64, r=4, f_mhz=180.0)
+        plan = topo.NetworkPlan.for_spec(comm.EngineSpec(engine=name),
+                                         p=64, r=4, f_mhz=180.0)
         assert plan.topology == comm.engine_fabric(name)
         assert plan.required_bw_gbit_s > 0
         assert plan.engine == name and plan.chunks == 0  # problem unknown
         assert plan.message_overhead_s == pm.ENGINE_MESSAGE_OVERHEAD_S[name]
+
     # every ring engine needs the 4-link torus NICs, the switched engine 2
-    assert topo.NetworkPlan.for_engine("overlap_ring", 64, 4, 180.0).nics_per_node == 4
-    assert topo.NetworkPlan.for_engine("pallas_ring", 64, 4, 180.0).nics_per_node == 4
-    assert topo.NetworkPlan.for_engine("bidi_ring", 64, 4, 180.0).nics_per_node == 4
-    assert topo.NetworkPlan.for_engine("switched", 64, 4, 180.0).nics_per_node == 2
+    def nics(name):
+        return topo.NetworkPlan.for_spec(comm.EngineSpec(engine=name),
+                                         64, 4, 180.0).nics_per_node
+    assert nics("overlap_ring") == 4
+    assert nics("pallas_ring") == 4
+    assert nics("bidi_ring") == 4
+    assert nics("switched") == 2
     with pytest.raises(ValueError, match="unknown comm engine"):
-        topo.NetworkPlan.for_engine("carrier_pigeon", 64, 4, 180.0)
+        topo.NetworkPlan.for_spec(comm.EngineSpec(engine="carrier_pigeon"),
+                                  64, 4, 180.0)
 
 
 def test_network_plan_consumes_chunk_model():
     # given the problem size, the fabric plan carries the engine-aware
     # optimal slab count — the RDMA ring's cheap NIC-doorbell sends support
     # finer slabs than the XLA ring on the same fabric
-    ring = topo.NetworkPlan.for_engine("overlap_ring", 64, 4, 180.0, n=256)
-    rdma = topo.NetworkPlan.for_engine("pallas_ring", 64, 4, 180.0, n=256)
+    def plan_for(name, p=64, **kw):
+        return topo.NetworkPlan.for_spec(comm.EngineSpec(engine=name),
+                                         p, 4, 180.0, **kw)
+    ring = plan_for("overlap_ring", n=256)
+    rdma = plan_for("pallas_ring", n=256)
     assert ring.chunks == pm.optimal_chunks(256, 8, 8,
                                             comm_engine="overlap_ring",
                                             f_hz=180e6)
@@ -78,13 +87,20 @@ def test_network_plan_consumes_chunk_model():
     assert rdma.message_overhead_s < ring.message_overhead_s
     # non-square p uses the closest-to-square factorization (8 -> 4x2),
     # and the actual pencil grid can be passed explicitly
-    a = topo.NetworkPlan.for_engine("torus", 8, 4, 180.0, n=256)
-    b = topo.NetworkPlan.for_engine("torus", 8, 4, 180.0, n=256, pu=4, pv=2)
+    a = plan_for("torus", p=8, n=256)
+    b = plan_for("torus", p=8, n=256, pu=4, pv=2)
     assert a.chunks == b.chunks == pm.optimal_chunks(256, 4, 2,
                                                      comm_engine="torus",
                                                      f_hz=180e6)
     with pytest.raises(ValueError, match="pu\\*pv"):
-        topo.NetworkPlan.for_engine("torus", 8, 4, 180.0, n=256, pu=3, pv=2)
+        plan_for("torus", p=8, n=256, pu=3, pv=2)
+    # per-axis factorization of a grid dimension reaches the chunk model
+    c = topo.NetworkPlan.for_spec(comm.EngineSpec(engine="torus"), 16, 4,
+                                  180.0, n=256, pu=4, pv=4,
+                                  pu_axes=(2, 2), pv_axes=(2, 2))
+    assert c.chunks == pm.optimal_chunks(256, 4, 4, comm_engine="torus",
+                                         f_hz=180e6, pu_axes=(2, 2),
+                                         pv_axes=(2, 2))
 
 
 def test_plan_engine_field_derivation():

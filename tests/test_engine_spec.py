@@ -1,0 +1,235 @@
+"""EngineSpec / CommDAG API redesign: validation, the axis-labelled step
+contract, and the DeprecationWarning shims every pre-spec spelling now
+rides (``make_engine``, ``NetworkPlan.for_engine``, ``make_fft3d``'s kwarg
+tail, ``fold_phase``/``unfold_phase``).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import comm
+from repro.core import topology as topo
+from repro.core.decomposition import (CommDAG, CommStep, PencilGrid, XY_STEP,
+                                      YZ_STEP, fft3d_dag)
+from repro.core.engine_spec import (DEFAULT_SPEC, ENGINE_FABRIC, EngineSpec)
+from repro.tuning.space import Candidate
+
+
+# ---------------------------------------------------------------------------
+# EngineSpec — the one configuration object
+# ---------------------------------------------------------------------------
+
+def test_engine_spec_defaults_and_fabric():
+    s = DEFAULT_SPEC
+    assert (s.engine, s.backend, s.schedule, s.chunks) == \
+        ("switched", "jnp", "sequential", 1)
+    assert not s.real and not s.r2c_packed and s.vector_mode == "streaming"
+    for name, fab in ENGINE_FABRIC.items():
+        assert EngineSpec(engine=name).fabric == fab
+
+
+def test_engine_spec_validation():
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        EngineSpec(engine="carrier_pigeon")
+    with pytest.raises(ValueError, match="schedule"):
+        EngineSpec(schedule="eventually")
+    with pytest.raises(ValueError, match="vector_mode"):
+        EngineSpec(vector_mode="sideways")
+    with pytest.raises(ValueError, match="chunks"):
+        EngineSpec(chunks=0)
+    # sequential normalizes the pipeline depth away
+    assert EngineSpec(schedule="sequential", chunks=8).chunks == 1
+    assert EngineSpec(schedule="pipelined", chunks=8).chunks == 8
+
+
+def test_engine_spec_replace_and_frozen():
+    s = EngineSpec(engine="pallas_ring")
+    s2 = s.replace(chunks=4, schedule="pipelined")
+    assert s2.engine == "pallas_ring" and s2.chunks == 4
+    assert s.chunks == 1  # original untouched
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.engine = "torus"
+
+
+def test_candidate_spec_roundtrip():
+    # tuning's Candidate and EngineSpec are two views of the same point
+    for cand in (Candidate(),
+                 Candidate(backend="pallas", schedule="pipelined", chunks=4,
+                           comm_engine="bidi_ring", vector_mode="parallel",
+                           r2c_packed=True)):
+        assert Candidate.from_spec(cand.spec()) == cand
+    spec = EngineSpec(engine="overlap_ring", backend="ref",
+                      schedule="pipelined", chunks=2)
+    assert Candidate.from_spec(spec).spec() == spec
+    # `real` is a problem property, not a Candidate knob — spec() threads it
+    assert Candidate().spec(real=True).real
+
+
+# ---------------------------------------------------------------------------
+# CommDAG — the axis-labelled communication plan
+# ---------------------------------------------------------------------------
+
+def test_comm_dag_contract():
+    dag = fft3d_dag()
+    assert [s.name for s in dag] == ["xy", "yz"]
+    assert dag.step("xy").grid_dim == "u"
+    assert dag.step("yz").grid_dim == "v"
+    # unfold geometry is derived from the fold's: split/concat swap roles
+    for s in dag:
+        assert s.unfold_split == s.concat_offset
+        assert s.unfold_concat == s.split_offset
+        # both local permutes are involutions (fold and unfold share them)
+        perm = s.permute
+        assert tuple(perm[perm[i]] for i in range(3)) == (0, 1, 2)
+    with pytest.raises(KeyError):
+        dag.step("zz")
+    # inverse walk reverses the steps
+    assert [s.name for s in dag.inverse_steps()] == ["yz", "xy"]
+    # the real (r2c) forward marks the X↔Y fold non-c2c, yz stays c2c
+    rdag = fft3d_dag(real=True)
+    assert not rdag.step("xy").c2c and rdag.step("yz").c2c
+
+
+def test_comm_dag_validate_names_grid_dims():
+    grid = PencilGrid(pu=2, pv=2, u_axes=("data",), v_axes=("model",))
+    fft3d_dag().validate(grid)
+    bogus = CommDAG(steps=(CommStep(name="ww", grid_dim="w", split_offset=-1,
+                                    concat_offset=-3, permute=(2, 1, 0),
+                                    slab_offset=-2),))
+    with pytest.raises(ValueError):
+        bogus.validate(grid)
+
+
+def test_pencil_grid_per_axis_sizes():
+    g = PencilGrid(pu=4, pv=2, u_axes=("pod", "data"), v_axes=("model",),
+                   u_sizes=(2, 2))
+    assert g.dim_sizes("u") == (2, 2) and g.dim_sizes("v") == (2,)
+    assert g.dim_axes("u") == ("pod", "data")
+    with pytest.raises(ValueError):
+        g.dim_axes("w")
+    with pytest.raises(ValueError):  # sizes must multiply to the dim extent
+        PencilGrid(pu=4, pv=2, u_axes=("pod", "data"), v_axes=("model",),
+                   u_sizes=(2, 3))
+    # default: one axis carries the whole dimension
+    assert PencilGrid(pu=4, pv=2).dim_sizes("u") == (4,)
+
+
+# ---------------------------------------------------------------------------
+# per-axis round pricing (mirrors the hypothesis versions in
+# test_property.py, which only run where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+FACTORIZATIONS = [(2, 2), (4, 2), (2, 2, 2), (4, 4), (3, 2), (1, 4)]
+
+
+@pytest.mark.parametrize("engine", list(ENGINE_FABRIC))
+@pytest.mark.parametrize("sizes", FACTORIZATIONS)
+def test_perfmodel_prices_per_axis_rounds(engine, sizes):
+    from repro.core import perfmodel as pm
+
+    fabric = ENGINE_FABRIC[engine]
+    pu = int(np.prod(sizes))
+    # message counts: Σ per-axis on the torus, one all-to-all on switched
+    got = pm.fold_messages(sizes, fabric, engine)
+    if fabric == "switched":
+        assert got == 1
+    else:
+        assert got == sum(pm.fold_messages(q, fabric, engine) for q in sizes)
+    assert pm.fold_messages(tuple(sizes) + (1,), fabric, engine) == got
+    # staged per-axis rings never price worse than one flat product ring
+    flat = pm.estimate_plan_seconds(64, pu, 2, comm_engine=engine)
+    staged = pm.estimate_plan_seconds(64, pu, 2, comm_engine=engine,
+                                      pu_axes=sizes)
+    comm_axes = [q for q in sizes if q > 1]
+    if fabric == "switched" or len(comm_axes) <= 1:
+        assert staged == pytest.approx(flat)
+    else:
+        assert staged <= flat * (1 + 1e-12)
+    # chunk model invariants survive per-axis pricing, kwargs or spec alike
+    k = pm.optimal_chunks(64, pu, 2, comm_engine=engine, pu_axes=sizes)
+    assert 1 <= k <= pm.MAX_MODEL_CHUNKS and (k & (k - 1)) == 0
+    assert k == pm.optimal_chunks(64, pu, 2, spec=EngineSpec(engine=engine),
+                                  pu_axes=sizes)
+    with pytest.raises(ValueError):  # pu_axes must factor pu
+        pm.estimate_plan_seconds(64, pu, 2, comm_engine=engine,
+                                 pu_axes=(pu, 3))
+
+
+# ---------------------------------------------------------------------------
+# deprecated spellings — must keep working under a DeprecationWarning
+# ---------------------------------------------------------------------------
+
+GRID0 = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
+
+
+def test_make_engine_shim():
+    with pytest.warns(DeprecationWarning, match="make_engine"):
+        eng = comm.make_engine("overlap_ring", GRID0, 4, backend="ref",
+                               real=True)
+    assert isinstance(eng, comm.OverlapRingEngine)
+    assert eng.chunks == 4 and eng.backend == "ref" and eng.real
+    assert eng.spec == EngineSpec(engine="overlap_ring", backend="ref",
+                                  schedule="pipelined", chunks=4, real=True)
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        with pytest.warns(DeprecationWarning):
+            comm.make_engine("carrier_pigeon", GRID0)
+
+
+def test_for_engine_shim():
+    with pytest.warns(DeprecationWarning, match="for_engine"):
+        plan = topo.NetworkPlan.for_engine("bidi_ring", 16, 4, 180.0, n=64)
+    assert plan == topo.NetworkPlan.for_spec(EngineSpec(engine="bidi_ring"),
+                                             16, 4, 180.0, n=64)
+    with pytest.raises(ValueError, match="unknown comm engine"):
+        with pytest.warns(DeprecationWarning):
+            topo.NetworkPlan.for_engine("carrier_pigeon", 16, 4, 180.0)
+
+
+def test_make_fft3d_deprecated_kwarg_tail():
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro.core.fft3d import make_fft3d
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with pytest.warns(DeprecationWarning, match="spec="):
+        fwd, inv, plan = make_fft3d(mesh, 8, comm_engine="torus",
+                                    schedule="pipelined", chunks=2,
+                                    backend="jnp")
+    assert plan.comm_engine == "torus"
+    assert plan.schedule == "pipelined" and plan.chunks == 2
+    # the deprecated tail and the spec build the same plan
+    fwd2, inv2, plan2 = make_fft3d(
+        mesh, 8, spec=EngineSpec(engine="torus", schedule="pipelined",
+                                 chunks=2))
+    assert plan2 == plan
+    # numerics unaffected by which spelling built the plan
+    x = jnp.asarray(np.random.RandomState(0).randn(8, 8, 8))
+    xi = jnp.zeros_like(x)
+    np.testing.assert_array_equal(np.asarray(fwd(x, xi)[0]),
+                                  np.asarray(fwd2(x, xi)[0]))
+    # the legacy net-only spelling names the engine through the fabric
+    with pytest.warns(DeprecationWarning, match="spec="):
+        _, _, plan3 = make_fft3d(mesh, 8, net="torus")
+    assert plan3.comm_engine == "torus"
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        make_fft3d(mesh, 8, carrier="pigeon")
+
+
+def test_fold_phase_shims():
+    import jax.numpy as jnp
+
+    eng = comm.build_engine(EngineSpec(), GRID0)
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 4, 4))
+    compute = lambda a: (a * 2.0,)
+    with pytest.warns(DeprecationWarning, match="fold_phase"):
+        (y,) = eng.fold_phase(compute, (x,), fold="xy", slab_axis=-2)
+    step = eng._step("xy").replace(slab_offset=-2)
+    (y2,) = eng.run_fold(step, compute, (x,))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+    with pytest.warns(DeprecationWarning, match="unfold_phase"):
+        (z,) = eng.unfold_phase(compute, (y,), fold="xy", slab_axis=-2)
+    (z2,) = eng.run_unfold(step, compute, (y2,))
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(z2))

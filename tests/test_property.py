@@ -89,7 +89,7 @@ def test_engine_fold_unfold_identity(engine, fold, n, seed):
     # transposes — the distributed version of the same property runs in
     # tests/_dist_transpose_check.py on 4x2/2x4/8x1 meshes)
     g = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
-    eng = comm.make_engine(engine, g)
+    eng = comm.build_engine(comm.EngineSpec(engine=engine), g)
     x = jnp.asarray(np.random.RandomState(seed).randn(n, n, n))
     back = eng.unfold(fold, eng.fold(fold, x))
     np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
@@ -129,6 +129,68 @@ def test_chunk_model_invariants(engine, n, pu, pv):
     cands = pm.chunk_candidates(n, pu, pv, engine)
     assert all(2 <= c <= pm.MAX_MODEL_CHUNKS and (c & (c - 1)) == 0
                for c in cands)
+
+
+FACTORIZATIONS = [(2, 2), (4, 2), (2, 2, 2), (4, 4), (8,), (3, 2), (1, 4)]
+
+
+@given(engine=st.sampled_from(comm.ENGINE_NAMES),
+       sizes=st.sampled_from(FACTORIZATIONS))
+@settings(**SET)
+def test_fold_messages_per_axis(engine, sizes):
+    # per-axis message counts: a grid dimension spanning mesh axes of sizes
+    # (q0, q1, ...) posts the sum of its per-axis single-ring counts on the
+    # torus fabric, and still one all-to-all on the switched fabric
+    fabric = pm.ENGINE_FABRIC[engine]
+    got = pm.fold_messages(sizes, fabric, engine)
+    per_axis = sum(pm.fold_messages(q, fabric, engine) for q in sizes)
+    if fabric == "switched":
+        assert got == (1 if any(q > 1 for q in sizes) else 0)
+    else:
+        assert got == per_axis
+    # a single-axis tuple and the bare int agree, size-1 axes are free
+    q = int(np.prod(sizes))
+    assert pm.fold_messages((q,), fabric, engine) == \
+        pm.fold_messages(q, fabric, engine)
+    assert pm.fold_messages(tuple(sizes) + (1, 1), fabric, engine) == got
+
+
+@given(engine=st.sampled_from(comm.ENGINE_NAMES),
+       n=st.sampled_from([32, 64]), sizes=st.sampled_from(FACTORIZATIONS))
+@settings(**SET)
+def test_staged_pricing_never_beaten_by_flat(engine, n, sizes):
+    # pricing the u dimension as staged per-axis rings is never slower than
+    # one flat ring over the product group (fewer, shorter rings — the
+    # multi-hop torus penalty grows with the ring size), and is identical
+    # on the switched fabric (still one all-to-all)
+    pu = int(np.prod(sizes))
+    flat = pm.estimate_plan_seconds(n, pu, 2, comm_engine=engine)
+    staged = pm.estimate_plan_seconds(n, pu, 2, comm_engine=engine,
+                                      pu_axes=sizes)
+    if pm.ENGINE_FABRIC[engine] == "switched" or len(
+            [q for q in sizes if q > 1]) <= 1:
+        assert staged == pytest.approx(flat)
+    else:
+        assert staged <= flat * (1 + 1e-12)
+    # pu_axes must factor pu
+    with pytest.raises(ValueError):
+        pm.estimate_plan_seconds(n, pu, 2, comm_engine=engine,
+                                 pu_axes=(pu, 3))
+
+
+@given(engine=st.sampled_from(comm.ENGINE_NAMES),
+       n=st.sampled_from([32, 64, 256]), sizes=st.sampled_from(FACTORIZATIONS))
+@settings(**SET)
+def test_chunk_model_per_axis_invariants(engine, n, sizes):
+    # the chunk model keeps its invariants under per-axis round pricing,
+    # whether driven by explicit kwargs or an EngineSpec
+    pu = int(np.prod(sizes))
+    k = pm.optimal_chunks(n, pu, 2, comm_engine=engine, pu_axes=sizes)
+    assert 1 <= k <= pm.MAX_MODEL_CHUNKS and (k & (k - 1)) == 0
+    k2 = pm.optimal_chunks(n, pu, 2, spec=pm.EngineSpec(engine=engine),
+                           pu_axes=sizes)
+    assert k2 == pm.optimal_chunks(n, pu, 2, comm_engine=engine,
+                                   pu_axes=sizes)
 
 
 @given(seed=st.integers(0, 2 ** 20), step=st.integers(0, 1000),

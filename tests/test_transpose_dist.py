@@ -8,6 +8,10 @@ and forward∘inverse, on non-trivial Pu×Pv grids (paper §5.5, Fig. 4.3).
 The mesh list covers the ring degenerate cases the bidirectional engine
 must get right: ``2x1`` (P=2 — both directions hit the same neighbor) and
 ``3x2`` (odd ring dimension — unbalanced direction split every round).
+``2x2x2`` is the multi-axis pencil (u spans two mesh axes): every ring
+engine must run one staged per-axis ring per mesh axis, bit-exact vs the
+flat switched exchange. ``4x4`` runs per-axis rings on both mesh axes of a
+square 16-device grid (the 8x4 CI cell covers 32 devices).
 """
 
 import os
@@ -22,7 +26,8 @@ RING_ENGINES = ("torus", "overlap_ring", "pallas_ring", "bidi_ring")
 OVERLAPPED = ("overlap_ring", "pallas_ring", "bidi_ring")
 
 
-@pytest.mark.parametrize("shape", ["4x2", "2x4", "8x1", "2x1", "3x2"])
+@pytest.mark.parametrize("shape", ["4x2", "2x4", "8x1", "2x1", "3x2",
+                                   "2x2x2", "4x4"])
 def test_engines_match_switched(shape):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")
