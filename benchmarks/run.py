@@ -225,6 +225,7 @@ def bench_solvers(n: int = 16):
 
     from repro import compat
     from repro.solvers import SOLVERS, make_solver
+    from repro.solvers.base import SpectralSolver
 
     ndev = len(jax.devices())
     pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
@@ -237,6 +238,15 @@ def bench_solvers(n: int = 16):
         _row(f"solver_{case}/N{n}/mesh{pu}x{pv}/us_per_step", us, "",
              config={"case": case, "n": n, "mesh": f"{pu}x{pv}",
                      **solver.plan_config()})
+        if SOLVERS[case].spectral_kernel is SpectralSolver.spectral_kernel:
+            continue  # no diagonal spectral kernel — nothing to fuse
+        fused = make_solver(case, mesh, (n, n, n), dtype="float32",
+                            plan_cfg={"fused_roundtrip": True})
+        fstate = fused.init_state()
+        us = _time(fused._stepj, fstate.fields, iters=3)
+        _row(f"solver_{case}_fused/N{n}/mesh{pu}x{pv}/us_per_step", us, "",
+             config={"case": case, "n": n, "mesh": f"{pu}x{pv}",
+                     **fused.plan_config()})
 
 
 # ---------------------------------------------------------------------------

@@ -54,21 +54,20 @@ Engines expose two surfaces:
   block-exchange primitives of ``core.transpose``; every engine computes
   the identical relayout, and ``unfold ∘ fold`` is the identity
   (property-tested).
-* **the scheduling contract** ``run_fold / run_unfold`` — a full FFT phase
-  (butterflies then fold, or unfold then butterflies) over one
-  :class:`~repro.core.decomposition.CommStep`, which the engine is free to
-  chunk, stream, or fuse. ``fft3d_local``/``ifft3d_local`` walk the plan's
+* **the scheduling contract** ``run_fold / run_unfold / run_roundtrip`` —
+  a full FFT phase (butterflies then fold, or unfold then butterflies)
+  over one :class:`~repro.core.decomposition.CommStep`, which the engine
+  is free to chunk, stream, or fuse. ``run_roundtrip`` is the phase-pair
+  variant for diagonal spectral operators: fold, folded-pencil kernel,
+  and unfold threaded per slab so slab k's kernel runs under slab k+1's
+  fold and slab k−1's unfold. ``fft3d_local``/``ifft3d_local``/
+  ``spectral_roundtrip_local`` walk the plan's
   :class:`~repro.core.decomposition.CommDAG` against this contract only.
-  The pre-DAG spellings (``fold_phase``/``unfold_phase`` with a
-  ``fold: str`` tag, ``make_engine``) survive as ``DeprecationWarning``
-  shims.
 
 All engine methods run *inside* ``shard_map`` over the FFT mesh axes.
 """
 
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -134,22 +133,6 @@ def build_engine(spec: EngineSpec, grid) -> "TransposeEngine":
         raise ValueError(f"unknown comm engine {spec.engine!r}; "
                          f"have {sorted(ENGINES)}") from None
     return cls(grid, spec)
-
-
-def make_engine(name: str, grid, chunks: int = 1, *, backend: str = "jnp",
-                real: bool = False) -> "TransposeEngine":
-    """Deprecated: use ``build_engine(EngineSpec(engine=name, ...), grid)``."""
-    warnings.warn(
-        "make_engine(name, grid, chunks, backend=..., real=...) is "
-        "deprecated; use build_engine(EngineSpec(engine=name, chunks=..., "
-        "backend=..., real=...), grid)", DeprecationWarning, stacklevel=2)
-    if name not in ENGINES:
-        raise ValueError(
-            f"unknown comm engine {name!r}; have {sorted(ENGINES)}")
-    spec = EngineSpec(engine=name, backend=backend, real=real,
-                      schedule="pipelined" if chunks > 1 else "sequential",
-                      chunks=max(int(chunks), 1))
-    return build_engine(spec, grid)
 
 
 def engine_fabric(name: str) -> str:
@@ -261,25 +244,49 @@ class TransposeEngine:
         return run_chunked(phase, arrs, axis=step.slab_offset,
                            chunks=self.chunks)
 
-    # ---- deprecated pre-DAG scheduling surface ---------------------------
-    def fold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        """Deprecated: use ``run_fold(step, compute, arrs)`` with a
-        ``CommStep`` (see ``decomposition.fft3d_dag``)."""
-        warnings.warn(
-            "fold_phase(..., fold=tag, slab_axis=...) is deprecated; use "
-            "run_fold(step, compute, arrs) with a decomposition.CommStep",
-            DeprecationWarning, stacklevel=2)
-        step = self._step(fold).replace(slab_offset=slab_axis)
-        return self.run_fold(step, compute, arrs)
+    def run_roundtrip(self, step: dec.CommStep, fwd, kernel, inv, arrs, *,
+                      diag=None):
+        """Fused spectral roundtrip over one CommStep, slab by slab.
 
-    def unfold_phase(self, compute, arrs, *, fold: str, slab_axis: int):
-        """Deprecated: use ``run_unfold(step, compute, arrs)``."""
-        warnings.warn(
-            "unfold_phase(..., fold=tag, slab_axis=...) is deprecated; use "
-            "run_unfold(step, compute, arrs) with a decomposition.CommStep",
-            DeprecationWarning, stacklevel=2)
-        step = self._step(fold).replace(slab_offset=slab_axis)
-        return self.run_unfold(step, compute, arrs)
+        A spectral operator that is pointwise-diagonal in k-space factors
+        through a single fold: ``fwd`` (the forward butterflies of the
+        folding phase) → fold → ``kernel`` (everything at the folded
+        pencil: the remaining transform, the diagonal multiply, its
+        inverse) → unfold → ``inv`` (the inverse butterflies). The step's
+        ``slab_offset`` axis is untouched by fold, kernel, and unfold
+        alike, so the engine may thread slabs through the whole roundtrip
+        independently — no full-volume barrier between the phases.
+
+        ``fwd(*slab) -> (cr, ci)`` matches ``run_fold``'s compute
+        contract; ``kernel(zr, zi, lo, hi) -> (kr, ki)`` receives one
+        folded slab plus its static row range ``[lo, hi)`` along the slab
+        axis (to slice planar multipliers in lockstep); ``inv(ur, ui)``
+        matches ``run_unfold``'s. ``diag`` optionally carries the raw
+        planar multiplier pair for engines that can fuse the diagonal
+        multiply into their communication kernel; the base schedule
+        ignores it.
+        """
+        del diag  # consumed only by the in-kernel payload engines
+        axis = step.slab_offset % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        c = min(max(self.chunks, 1), size)
+        while size % c:
+            c -= 1
+        stride = size // c
+
+        outs = []
+        for i in range(c):
+            sl = [lax.slice_in_dim(a, i * stride, (i + 1) * stride,
+                                   axis=axis) for a in arrs]
+            cr, ci = fwd(*sl)
+            zr = self.fold_step(step, cr)
+            zi = self.fold_step(step, ci)
+            kr, ki = kernel(zr, zi, i * stride, (i + 1) * stride)
+            ur = self.unfold_step(step, kr)
+            ui = self.unfold_step(step, ki)
+            outs.append(inv(ur, ui))
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(len(outs[0])))
 
 
 @_register
@@ -446,6 +453,72 @@ class OverlapRingEngine(TorusEngine):
         return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
                      for k in range(len(outs[0])))
 
+    def run_roundtrip(self, step: dec.CommStep, fwd, kernel, inv, arrs, *,
+                      diag=None):
+        """The slab-streamed roundtrip: slab k's kernel and slab k−2's
+        inverse butterflies run in slab k−1's unfold-exchange overlap
+        window, while slab k+1's forward butterflies ride slab k's fold
+        exchange — fold k+1 ∥ kernel k ∥ unfold k−1, with only slab 0's
+        kernel exposed as pipeline fill."""
+        p = self.grid.dim_ranks(step.grid_dim)
+        if p <= 1:  # step never communicates — nothing to overlap
+            return super().run_roundtrip(step, fwd, kernel, inv, arrs,
+                                         diag=diag)
+        axis = step.slab_offset % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        ns = self._n_slabs(size, p)
+        stride = size // ns
+        axes = self._axes(step)
+
+        def slab(i):
+            return tuple(lax.slice_in_dim(a, i * stride, (i + 1) * stride,
+                                          axis=axis) for a in arrs)
+
+        def unfold_exchange(mid, thunk):
+            br = tr.permute_last3(mid[0], step.permute)
+            bi = tr.permute_last3(mid[1], step.permute)
+            d = br.ndim
+            return self._exchange(
+                (br, bi), axes, split_axis=d + step.unfold_split,
+                concat_axis=d + step.unfold_concat, interleave=thunk)
+
+        cur = fwd(*slab(0))
+        mid = tail = None
+        outs = []
+        for i in range(ns):
+            nxt = (lambda j=i + 1: fwd(*slab(j))) if i + 1 < ns else None
+            d = cur[0].ndim
+            (fr, fi), follow = self._exchange(
+                (cur[0], cur[1]), axes, split_axis=d + step.split_offset,
+                concat_axis=d + step.concat_offset, interleave=nxt)
+            folded = (tr.permute_last3(fr, step.permute),
+                      tr.permute_last3(fi, step.permute))
+            cur = follow
+
+            def kern(f=folded, lo=i * stride, hi=(i + 1) * stride):
+                return kernel(f[0], f[1], lo, hi)
+
+            if mid is None:
+                mid = kern()            # pipeline fill: slab 0's kernel
+                continue
+            # slab i−1's unfold exchange hides slab i's kernel and slab
+            # i−2's inverse butterflies
+            def thunk(k=kern, t=tail):
+                return k(), (inv(*t) if t is not None else None)
+            (ur, ui), (mid, fin) = unfold_exchange(mid, thunk)
+            if fin is not None:
+                outs.append(fin)
+            tail = (ur, ui)
+        # drain: the last kernel result unfolds over slab ns−2's inverse
+        # butterflies, then the final slab's butterflies run exposed
+        thunk = (lambda t=tail: inv(*t)) if tail is not None else None
+        (ur, ui), fin = unfold_exchange(mid, thunk)
+        if fin is not None:
+            outs.append(fin)
+        outs.append(inv(ur, ui))
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(len(outs[0])))
+
 
 # ---------------------------------------------------------------------------
 # pallas ring: the same schedule as an async-RDMA kernel (the paper's NIC)
@@ -557,6 +630,81 @@ class PallasRingEngine(OverlapRingEngine):
                 outs.append(done)
             prev = (ex[0], ex[1])
         outs.append(compute(*prev))
+        return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
+                     for k in range(len(outs[0])))
+
+    def run_roundtrip(self, step: dec.CommStep, fwd, kernel, inv, arrs, *,
+                      diag=None):
+        """The RDMA roundtrip: slab k+1's forward butterflies ride slab
+        k's fold kernel as payload (like ``run_fold``), and the *entire*
+        spectral middle of slab k — forward butterflies, diagonal
+        multiply, conjugate-trick inverse — rides slab k−1's unfold
+        kernel as a roundtrip payload (``diag=``), the paper's NIC
+        offload extended from butterflies to the spectral computation.
+        The inverse butterflies after each unfold run at the JAX level
+        (both payload slots per slab are taken). Requires the raw planar
+        multiplier ``diag``; otherwise (or off-TPU) the overlapped-ring
+        schedule of the superclass applies."""
+        from repro.kernels import ring_rdma
+        p = self.grid.dim_ranks(step.grid_dim)
+        if (p <= 1 or diag is None
+                or not self._fusable(step, tuple(arrs[:2]))
+                or not ring_rdma.fusable_payload((diag[0], diag[0]))):
+            return super().run_roundtrip(step, fwd, kernel, inv, arrs,
+                                         diag=diag)
+        axis = step.slab_offset % arrs[0].ndim
+        size = arrs[0].shape[axis]
+        ns = self._n_slabs(size, p)
+        stride = size // ns
+        axes = self._axes(step)
+        dr, di = diag
+        if di is None:
+            di = jnp.zeros_like(dr)
+        daxis = dr.ndim + step.slab_offset
+
+        def slab(i):
+            return tuple(lax.slice_in_dim(a, i * stride, (i + 1) * stride,
+                                          axis=axis) for a in arrs)
+
+        def diag_slab(i, like):
+            # the multiplier rows of folded slab i, broadcast to the
+            # payload's leading (component/batch) axes
+            sr = lax.slice_in_dim(dr, i * stride, (i + 1) * stride,
+                                  axis=daxis)
+            si = lax.slice_in_dim(di, i * stride, (i + 1) * stride,
+                                  axis=daxis)
+            return (jnp.broadcast_to(sr, like[0].shape),
+                    jnp.broadcast_to(si, like[1].shape))
+
+        def unfold_rdma(mid, **kw):
+            br = tr.permute_last3(mid[0], step.permute)
+            bi = tr.permute_last3(mid[1], step.permute)
+            d = br.ndim
+            return self._rdma(
+                (br, bi), axes, split_axis=d + step.unfold_split,
+                concat_axis=d + step.unfold_concat, **kw)
+
+        cur = fwd(*slab(0))
+        mid = None
+        outs = []
+        for i in range(ns):
+            payload = slab(i + 1) if i + 1 < ns else None
+            d = cur[0].ndim
+            ex, follow = self._rdma(
+                (cur[0], cur[1]), axes, split_axis=d + step.split_offset,
+                concat_axis=d + step.concat_offset, payload=payload)
+            folded = (tr.permute_last3(ex[0], step.permute),
+                      tr.permute_last3(ex[1], step.permute))
+            cur = follow
+            if mid is None:
+                mid = kernel(folded[0], folded[1], 0, stride)  # fill
+                continue
+            # slab i−1's unfold carries slab i's whole middle in-kernel
+            ex2, mid = unfold_rdma(mid, payload=folded,
+                                   diag=diag_slab(i, folded))
+            outs.append(inv(ex2[0], ex2[1]))
+        ex2, _ = unfold_rdma(mid)
+        outs.append(inv(ex2[0], ex2[1]))
         return tuple(jnp.concatenate([o[k] for o in outs], axis=axis)
                      for k in range(len(outs[0])))
 

@@ -12,7 +12,8 @@ build_engine`), ``core.fft3d`` (``make_fft3d(..., spec=...)``),
 ``core.topology`` (``NetworkPlan.for_spec``) and ``tuning.space``
 (``Candidate.spec()`` / ``Candidate.from_spec``).
 
-Migration table (old → new)::
+Migration table (old → new; the old spellings were removed after a
+deprecation cycle)::
 
     comm.make_engine(name, grid, k, backend=b, real=r)
         → comm.build_engine(EngineSpec(engine=name, chunks=k,
@@ -22,9 +23,8 @@ Migration table (old → new)::
     make_fft3d(mesh, n, comm_engine=e, backend=b, schedule=s, chunks=k)
         → make_fft3d(mesh, n, spec=EngineSpec(engine=e, backend=b,
                                               schedule=s, chunks=k))
-
-The old spellings keep working behind thin shims that emit
-``DeprecationWarning``.
+    engine.fold_phase(compute, arrs, fold="xy", slab_axis=-2)
+        → engine.run_fold(step, compute, arrs) with a decomposition.CommStep
 
 This module is deliberately **jax-free** (like ``core.perfmodel``, which
 imports it): specs must be constructible in planning tools and on hosts
@@ -62,6 +62,9 @@ class EngineSpec:
     ``real``        r2c data model (real input, Hermitian spectrum)
     ``r2c_packed``  pack the real transform into the half-spectrum layout
     ``vector_mode`` multi-component transforms: ``streaming`` or ``parallel``
+    ``fused_roundtrip``  stream the Y↔Z roundtrip of diagonal spectral
+                    operators as one slab pipeline (fold k+1 ∥ kernel k ∥
+                    unfold k−1) instead of three barriered phases
     """
 
     engine: str = "switched"
@@ -71,6 +74,7 @@ class EngineSpec:
     real: bool = False
     r2c_packed: bool = False
     vector_mode: str = "streaming"
+    fused_roundtrip: bool = False
 
     def __post_init__(self):
         if self.engine not in ENGINE_FABRIC:

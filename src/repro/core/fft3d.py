@@ -17,9 +17,15 @@ FFT → Y↔Z fold → local Z FFT, with the task-organization models of Chapter
 
 Configuration rides one object: ``make_fft3d(mesh, n, spec=EngineSpec(...))``
 picks the comm engine, compute backend, schedule/chunks and vector mode in a
-single frozen dataclass (``core.engine_spec``; the pre-spec kwarg tail —
-``comm_engine=``, ``backend=``, ``schedule=``, ``chunks=``, ``net=``, ... —
-still works behind a DeprecationWarning shim).
+single frozen dataclass (``core.engine_spec``).
+
+Beyond the plain transform pair, :func:`spectral_roundtrip_local` executes a
+whole *spectral roundtrip* — forward FFT, pointwise-diagonal k-space
+multiply (:class:`DiagonalKernel`), inverse FFT — and, when the plan's
+``fused_roundtrip`` knob is on, streams the Y↔Z phase pair through the
+engine's ``run_roundtrip`` schedule: slab k's Z-FFT→multiply→inverse runs
+under slab k+1's fold and slab k−1's unfold, with no full-volume barrier
+between the forward and inverse transforms.
 
 Communication: the plan walks the axis-labelled :class:`CommDAG` from
 ``core.decomposition`` — the ``xy`` step exchanges over the grid's ``u``
@@ -50,7 +56,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Literal
 
 import jax
@@ -79,6 +84,7 @@ class FFT3DPlan:
     r2c_packed: bool = False         # beyond-paper packed real FFT
     comm_engine: str = ""            # "" -> engine named by ``net``
     dtype: str = ""                  # "" -> caller-supplied arrays decide
+    fused_roundtrip: bool = False    # stream diagonal spectral roundtrips
 
     def __post_init__(self):
         self.grid.validate(self.n)
@@ -101,7 +107,8 @@ class FFT3DPlan:
         """This plan's engine configuration as one :class:`EngineSpec`."""
         return EngineSpec(engine=self.comm_engine, backend=self.backend,
                           schedule=self.schedule, chunks=self.chunks,
-                          real=self.real, r2c_packed=self.r2c_packed)
+                          real=self.real, r2c_packed=self.r2c_packed,
+                          fused_roundtrip=self.fused_roundtrip)
 
     @classmethod
     def from_spec(cls, n, grid: PencilGrid, spec: EngineSpec,
@@ -110,7 +117,8 @@ class FFT3DPlan:
         return cls(n=tuple(n), grid=grid, real=spec.real,
                    backend=spec.backend, schedule=spec.schedule,
                    chunks=spec.chunks, r2c_packed=spec.r2c_packed,
-                   comm_engine=spec.engine, dtype=dtype)
+                   comm_engine=spec.engine, dtype=dtype,
+                   fused_roundtrip=spec.fused_roundtrip)
 
     def dag(self) -> CommDAG:
         """The axis-labelled transpose DAG this plan executes (X↔Y fold on
@@ -207,6 +215,110 @@ def ifft3d_local(plan: FFT3DPlan, kr, ki):
     return out
 
 
+# ---------------------------------------------------------------------------
+# fused spectral roundtrip (forward FFT → diagonal multiply → inverse FFT)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DiagonalKernel:
+    """A spectral operator that is pointwise-diagonal in k-space.
+
+    ``dr``/``di`` hold the real/imaginary parts of the multiplier on the
+    local Z-pencil spectrum — rank-local arrays of shape
+    ``(Kx/Pu, Ny/Pv, Nz)``, exactly the layout the wavenumber helpers of
+    ``core.spectral`` produce. ``di=None`` marks a purely real multiplier
+    (heat decay, inverse Laplacian, dealias masks); the NLS rotation
+    ``exp(iθ(k))`` uses both parts.
+
+    One object serves all three execution paths: the composed full-volume
+    multiply, the per-slab multiply inside the fused ``run_roundtrip``
+    kernel callback (``lo``/``hi`` slice the kx rows in lockstep with the
+    slab stream), and — on the RDMA ring engines — the raw arrays that
+    join the in-kernel butterfly payload (``arrays()``).
+    """
+
+    dr: object
+    di: object = None
+
+    def apply(self, kr, ki, lo: int | None = None, hi: int | None = None):
+        """Multiply the planar spectrum by the kernel; ``[lo, hi)`` selects
+        the kx rows of a slab (slab axis −3 of the Z-pencil)."""
+        dr, di = self.dr, self.di
+        if lo is not None:
+            axis = dr.ndim - 3
+            dr = jax.lax.slice_in_dim(dr, lo, hi, axis=axis)
+            if di is not None:
+                di = jax.lax.slice_in_dim(di, lo, hi, axis=axis)
+        if di is None:
+            return kr * dr, ki * dr
+        return kr * dr - ki * di, kr * di + ki * dr
+
+    def arrays(self):
+        """The raw planar multiplier pair (``di`` may be None) for engines
+        that fuse the multiply into their communication kernel."""
+        return self.dr, self.di
+
+
+def spectral_roundtrip_local(plan: FFT3DPlan, kernel: DiagonalKernel,
+                             xr, xi=None):
+    """Forward 3D FFT → diagonal k-space multiply → inverse 3D FFT of the
+    local pencil, as one solver-step primitive.
+
+    With ``plan.fused_roundtrip`` off this composes ``fft3d_local`` →
+    ``kernel.apply`` → ``ifft3d_local`` (three barriered phases). With it
+    on, the whole Y↔Z phase pair — forward Y butterflies, yz fold, Z-FFT,
+    multiply, inverse Z-FFT, yz unfold, inverse Y butterflies — streams
+    through the engine's ``run_roundtrip`` schedule per kx-slab (fold k+1
+    ∥ kernel k ∥ unfold k−1), bit-exact vs the composed path.
+
+    In/out: X-pencil like ``fft3d_local``/``ifft3d_local`` (a real array
+    comes back when ``plan.real``).
+    """
+    if not plan.fused_roundtrip:
+        kr, ki = fft3d_local(plan, xr, xi)
+        kr, ki = kernel.apply(kr, ki)
+        return ifft3d_local(plan, kr, ki)
+
+    eng = plan.engine()
+    dag = plan.dag()
+    if xi is None:
+        xi = jnp.zeros_like(xr)
+
+    def butterflies_x(cr, ci):
+        return _fftx(plan, cr, ci)
+
+    yr, yi = eng.run_fold(dag.step("xy"), butterflies_x, (xr, xi))
+
+    def butterflies_y(cr, ci):
+        return kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
+
+    def butterflies_y_inv(ur, ui):
+        return kops.fft1d(ur, ui, axis=-1, backend=plan.backend,
+                          inverse=True)
+
+    def middle(zr, zi, lo, hi):
+        # everything at the Z pencil, for kx rows [lo, hi): the remaining
+        # transform, the spectral multiply, and its inverse
+        zr, zi = kops.fft1d(zr, zi, axis=-1, backend=plan.backend)
+        zr, zi = kernel.apply(zr, zi, lo, hi)
+        return kops.fft1d(zr, zi, axis=-1, backend=plan.backend,
+                          inverse=True)
+
+    yr, yi = eng.run_roundtrip(dag.step("yz"), butterflies_y, middle,
+                               butterflies_y_inv, (yr, yi),
+                               diag=kernel.arrays())
+
+    def butterflies_x_inv(ur, ui):
+        if plan.real:
+            return (_ifftx(plan, ur, ui),)
+        return _ifftx(plan, ur, ui)
+
+    out = eng.run_unfold(dag.step("xy"), butterflies_x_inv, (yr, yi))
+    if plan.real:
+        return out[0] if isinstance(out, tuple) and len(out) == 1 else out
+    return out
+
+
 def fft3d_vector_local(plan: FFT3DPlan, xr, xi=None,
                        vector_mode: VectorMode = "streaming"):
     """μ-component transform; leading axis 0 of ``xr`` is the component axis.
@@ -238,16 +350,10 @@ def ifft3d_vector_local(plan: FFT3DPlan, kr, ki,
 # global entry points
 # ---------------------------------------------------------------------------
 
-#: legacy make_fft3d kwargs absorbed into EngineSpec (still accepted behind
-#: a DeprecationWarning; each overrides the matching spec field)
-_DEPRECATED_FFT3D_KWARGS = ("backend", "schedule", "chunks", "net",
-                            "comm_engine", "vector_mode", "r2c_packed")
-
-
 def make_fft3d(mesh, n, *, spec: EngineSpec | None = None,
                u_axes=("data",), v_axes=("model",), real: bool | None = None,
                components: int = 0, autotune: bool = False,
-               tune_kwargs: dict | None = None, **deprecated_kwargs):
+               tune_kwargs: dict | None = None):
     """Build jitted (forward, inverse, plan) over globally-sharded arrays.
 
     Global input layout: X-pencil ``(Ny, Nz, Nx)`` sharded ``P(u, v, None)``
@@ -255,13 +361,10 @@ def make_fft3d(mesh, n, *, spec: EngineSpec | None = None,
     ``(Kx, Ny, Nz)`` sharded the same way.
 
     ``spec`` is the one engine-configuration knob (engine, backend,
-    schedule, chunks, vector_mode, r2c_packed — see
+    schedule, chunks, vector_mode, r2c_packed, fused_roundtrip — see
     :class:`~repro.core.engine_spec.EngineSpec`); ``real`` stays a separate
     argument because it describes the *problem* (the data model of the
-    field being transformed), overriding ``spec.real`` when given. The old
-    kwarg tail (``backend=``, ``schedule=``, ``chunks=``, ``net=``,
-    ``comm_engine=``, ``vector_mode=``, ``r2c_packed=``) still works and
-    overrides the matching spec fields, behind a ``DeprecationWarning``.
+    field being transformed), overriding ``spec.real`` when given.
 
     ``u_axes``/``v_axes`` bind the two grid dimensions to mesh axes; either
     may span several (e.g. ``u_axes=("pod", "data")``), in which case every
@@ -276,22 +379,7 @@ def make_fft3d(mesh, n, *, spec: EngineSpec | None = None,
     ``iters``, ``fwd_weight``, ``inv_weight``, ...).
     """
     n = (n, n, n) if isinstance(n, int) else tuple(n)
-    unknown = set(deprecated_kwargs) - set(_DEPRECATED_FFT3D_KWARGS)
-    if unknown:
-        raise TypeError(f"make_fft3d() got unexpected keyword arguments "
-                        f"{sorted(unknown)}")
-    if deprecated_kwargs:
-        warnings.warn(
-            f"make_fft3d kwargs {sorted(deprecated_kwargs)} are deprecated; "
-            "pass spec=EngineSpec(...) instead", DeprecationWarning,
-            stacklevel=2)
     s = spec if spec is not None else EngineSpec()
-    changes = {"engine": (deprecated_kwargs.get("comm_engine")
-                          or deprecated_kwargs.get("net") or s.engine)}
-    for k in ("backend", "schedule", "chunks", "vector_mode", "r2c_packed"):
-        if k in deprecated_kwargs:
-            changes[k] = deprecated_kwargs[k]
-    s = s.replace(**changes)
     if real is not None:
         s = s.replace(real=bool(real))
     if autotune:

@@ -249,6 +249,14 @@ ENGINE_MESSAGE_OVERHEAD_S = {
 }
 
 
+#: Nominal per-link wire bandwidth (bytes/s): the thesis' 200 Gbit/s
+#: reference link at 25 GB/s. This is the *fallback prior*:
+#: :func:`link_bytes_per_s` prefers the wire-bandwidth slope measured by an
+#: active ``repro.tuning.calibrate`` run (the two-size extrapolation that
+#: yields the per-message intercept also yields bytes-per-second).
+LINK_BYTES_PER_S = 25e9
+
+
 # ---------------------------------------------------------------------------
 # measured calibration overlay (repro.tuning.calibrate)
 # ---------------------------------------------------------------------------
@@ -318,6 +326,23 @@ def backend_compute_weight(backend: str) -> float:
     return BACKEND_COMPUTE_WEIGHT.get(backend, 1.0)
 
 
+def link_bytes_per_s() -> float:
+    """Effective per-link wire bandwidth on this substrate: the slope the
+    active calibration measured (``repro.tuning.calibrate`` extrapolates
+    two fold sizes; the slope is bytes moved per wall second), else the
+    ``LINK_BYTES_PER_S`` prior."""
+    cal = active_calibration() or {}
+    got = cal.get("link_bytes_per_s")
+    if isinstance(got, (int, float)) and got > 0:
+        return float(got)
+    return LINK_BYTES_PER_S
+
+
+def _resolve_link_rate(value: float | None) -> float:
+    """An explicit caller override wins; ``None`` asks the calibration."""
+    return float(value) if value is not None else link_bytes_per_s()
+
+
 def bidi_round_ratio(q: int) -> float:
     """Wire-time ratio of the bidirectional ring vs the unidirectional one
     over a ``q``-rank dimension: ``ceil((q−1)/2) / (q−1)`` exchange rounds
@@ -371,6 +396,30 @@ def _dim_sizes(q: int, q_axes) -> tuple[int, ...]:
     return sizes
 
 
+def _fold_wire_seconds(v_prime: float, sizes: tuple[int, ...], *,
+                       fabric: str, link_bytes_per_s: float,
+                       bidi: bool = False) -> float:
+    """Wire seconds of one fold moving V′ bytes (Eq. 3.4) over a — possibly
+    multi-mesh-axis — grid dimension: the Eq. 5.5/5.6 fabric penalty per
+    axis, one all-to-all over the product group on the switched fabric,
+    one staged ring per axis on the torus fabrics."""
+    def axis_seconds(q: int) -> float:
+        t = v_prime * (q - 1) / q / link_bytes_per_s
+        if fabric == "torus":
+            t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
+        if bidi:
+            t *= bidi_round_ratio(q)  # both directions stream concurrently
+        return t
+
+    sizes = tuple(q for q in sizes if q > 1)
+    if not sizes:
+        return 0.0
+    if fabric == "switched":
+        # one all-to-all over the product group regardless of staging
+        return axis_seconds(math.prod(sizes))
+    return sum(axis_seconds(q) for q in sizes)
+
+
 def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
                       schedule: str, mu: int, r2c_packed: bool, r: int,
                       f_hz: float, link_bytes_per_s: float,
@@ -403,23 +452,10 @@ def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
 
     v_prime = mu * s * (vol + 2 * ny * nz) / p                  # Eq. 3.4
 
-    def axis_seconds(q: int) -> float:
-        # one single-axis exchange over a q-rank mesh axis
-        t = v_prime * (q - 1) / q / link_bytes_per_s
-        if fabric == "torus":
-            t *= max(1.0, q / 2.0)  # Eq. 5.6 vs 5.5 required-bandwidth ratio
-        if bidi:
-            t *= bidi_round_ratio(q)  # both directions stream concurrently
-        return t
-
     def fold_seconds(sizes: tuple[int, ...]) -> float:
-        sizes = tuple(q for q in sizes if q > 1)
-        if not sizes:
-            return 0.0
-        if fabric == "switched":
-            # one all-to-all over the product group regardless of staging
-            return axis_seconds(math.prod(sizes))
-        return sum(axis_seconds(q) for q in sizes)
+        return _fold_wire_seconds(v_prime, sizes, fabric=fabric,
+                                  link_bytes_per_s=link_bytes_per_s,
+                                  bidi=bidi)
 
     return t_comp, (fold_seconds(_dim_sizes(pu, pu_axes))
                     + fold_seconds(_dim_sizes(pv, pv_axes)))
@@ -431,7 +467,7 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
                           mu: int = 1,
                           r2c_packed: bool = False, r: int = 4,
                           f_hz: float = 180e6,
-                          link_bytes_per_s: float = 25e9,
+                          link_bytes_per_s: float | None = None,
                           s: int = S_BYTES, spec: EngineSpec | None = None,
                           pu_axes=None, pv_axes=None) -> float:
     """Analytic time estimate for one ``FFT3DPlan`` configuration.
@@ -463,10 +499,13 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     ``pu_axes``/``pv_axes`` give the per-mesh-axis factorization of the
     grid dimensions (``PencilGrid.u_sizes``/``v_sizes``): the ring engines
     then pay per-axis rounds — Σᵢ(qᵢ−1) instead of P−1 — with each staged
-    ring priced at its own axis' multi-hop penalty. Absolute numbers are
-    nominal-FPGA seconds; the autotuner only uses the *ordering* to prune
-    the sweep.
+    ring priced at its own axis' multi-hop penalty.
+    ``link_bytes_per_s=None`` (the default) uses the measured wire
+    bandwidth of the active calibration via :func:`link_bytes_per_s`, else
+    the nominal prior. Absolute numbers are nominal-FPGA seconds; the
+    autotuner only uses the *ordering* to prune the sweep.
     """
+    link_bytes_per_s = _resolve_link_rate(link_bytes_per_s)
     if spec is not None:
         backend, schedule = spec.backend, spec.schedule
         chunks, comm_engine = spec.chunks, spec.engine
@@ -511,6 +550,71 @@ def estimate_plan_seconds(n, pu: int, pv: int, *, backend: str = "jnp",
     return t_comp + t_net + overhead
 
 
+def estimate_roundtrip_seconds(n, pu: int, pv: int, *,
+                               fused: bool | None = None,
+                               kernel_weight: float = 1.0,
+                               backend: str = "jnp",
+                               schedule: str = "sequential", chunks: int = 1,
+                               net: str = "switched", comm_engine: str = "",
+                               mu: int = 1, r2c_packed: bool = False,
+                               r: int = 4, f_hz: float = 180e6,
+                               link_bytes_per_s: float | None = None,
+                               s: int = S_BYTES,
+                               spec: EngineSpec | None = None,
+                               pu_axes=None, pv_axes=None) -> float:
+    """Analytic time of one diagonal spectral roundtrip — forward 3D FFT,
+    pointwise k-space multiply, inverse 3D FFT — for one plan config.
+
+    Composed (``fused=False``) prices the three phases back to back: two
+    full transforms (:func:`estimate_plan_seconds`) plus one exposed
+    kernel sweep over the local spectrum, ``kernel_weight`` engine passes
+    at R points per cycle (1.0 for a plain complex multiply; heavier
+    per-point operators scale it up). The fused executor
+    (``fused=True``, or ``spec.fused_roundtrip``) threads kx-slabs through
+    Y↔Z fold → Z-FFT → kernel → inverse Z-FFT → Y↔Z unfold with no
+    full-volume barrier, so slab k's kernel sweep runs under slab k+1's
+    fold and slab k−1's unfold — the kernel time hides up to the
+    roundtrip's Y↔Z wire budget (one fold plus one unfold):
+
+        fused = composed − min(T_kernel, 2·T_yz_wire)
+
+    With no Y↔Z communication (``pv == 1``) nothing hides and
+    fused == composed; the estimate therefore never predicts the fused
+    schedule above the composed one. All other knobs match
+    :func:`estimate_plan_seconds`.
+    """
+    if spec is not None:
+        if fused is None:
+            fused = spec.fused_roundtrip
+        backend, schedule = spec.backend, spec.schedule
+        chunks, comm_engine = spec.chunks, spec.engine
+        r2c_packed = spec.r2c_packed
+    engine = comm_engine or net
+    if engine not in ENGINE_FABRIC:
+        raise ValueError(f"unknown comm engine {engine!r}; "
+                         f"have {sorted(ENGINE_FABRIC)}")
+    link_bytes_per_s = _resolve_link_rate(link_bytes_per_s)
+    one = estimate_plan_seconds(
+        n, pu, pv, backend=backend, schedule=schedule, chunks=chunks,
+        comm_engine=engine, mu=mu, r2c_packed=r2c_packed, r=r, f_hz=f_hz,
+        link_bytes_per_s=link_bytes_per_s, s=s,
+        pu_axes=pu_axes, pv_axes=pv_axes)
+    nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
+    p = max(pu, 1) * max(pv, 1)
+    mu = max(mu, 1)
+    t_kernel = (max(kernel_weight, 0.0) * backend_compute_weight(backend)
+                * mu * nx * ny * nz / (2.0 * p * r) / f_hz)
+    composed = 2.0 * one + t_kernel
+    if not fused:
+        return composed
+    fabric = ENGINE_FABRIC[engine]
+    v_prime = mu * s * (nx * ny * nz + 2 * ny * nz) / p         # Eq. 3.4
+    t_yz = 2.0 * _fold_wire_seconds(
+        v_prime, _dim_sizes(pv, pv_axes), fabric=fabric,
+        link_bytes_per_s=link_bytes_per_s, bidi=engine == "bidi_ring")
+    return composed - min(t_kernel, t_yz)
+
+
 # ---------------------------------------------------------------------------
 # Engine-aware chunk-size model (paper Fig. 4.3's slab-count knob)
 # ---------------------------------------------------------------------------
@@ -522,7 +626,8 @@ _FALLBACK_CHUNKS = (2, 4, 8)   # engine-blind legacy choices (no-comm grids)
 def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str = "",
                    backend: str = "jnp", schedule: str = "pipelined",
                    mu: int = 1, r2c_packed: bool = False, r: int = 4,
-                   f_hz: float = 180e6, link_bytes_per_s: float = 25e9,
+                   f_hz: float = 180e6,
+                   link_bytes_per_s: float | None = None,
                    s: int = S_BYTES, spec: EngineSpec | None = None,
                    pu_axes=None, pv_axes=None) -> int:
     """Model-optimal slab count for one engine on one problem.
@@ -549,6 +654,7 @@ def optimal_chunks(n, pu: int, pv: int, *, comm_engine: str = "",
     the pipelined schedule). Returns 1 when no fold communicates
     (nothing to overlap).
     """
+    link_bytes_per_s = _resolve_link_rate(link_bytes_per_s)
     if spec is not None:
         # schedule stays "pipelined": the question this model answers is what
         # slab count the pipelined schedule should run at for spec's engine.

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 
 from repro.core import perfmodel as pm
 from repro.core.engine_spec import EngineSpec
@@ -75,21 +74,6 @@ class NetworkPlan:
                                        pu_axes=pu_axes, pv_axes=pv_axes)
         return cls(topology=topo, p=p, r=r, f_mhz=f_mhz, engine=spec.engine,
                    chunks=chunks)
-
-    @classmethod
-    def for_engine(cls, engine: str, p: int, r: int, f_mhz: float,
-                   *, n=None, mu: int = 1, pu: int = 0,
-                   pv: int = 0) -> "NetworkPlan":
-        """Deprecated spelling of :meth:`for_spec` taking a bare engine name."""
-        warnings.warn(
-            "NetworkPlan.for_engine(name, ...) is deprecated; use "
-            "NetworkPlan.for_spec(EngineSpec(engine=name), ...)",
-            DeprecationWarning, stacklevel=2)
-        if engine not in ENGINE_FABRIC:
-            raise ValueError(f"unknown comm engine {engine!r}; "
-                             f"have {sorted(ENGINE_FABRIC)}")
-        return cls.for_spec(EngineSpec(engine=engine), p, r, f_mhz,
-                            n=n, mu=mu, pu=pu, pv=pv)
 
     @property
     def message_overhead_s(self) -> float:

@@ -150,8 +150,38 @@ def _chunk_bounds(total: int, parts: int, i: int) -> tuple[int, int]:
     return off, base + (1 if i < rem else 0)
 
 
+def _payload_chunk(pr_ref, pi_ref, twr_ref, twi_ref, diag_refs, *,
+                   off, cnt, n_payload: int, inverse: bool):
+    """Transform payload rows [off, off+cnt): the in-kernel compute of one
+    ring round. Plain mode runs the forward (or conjugate-trick inverse)
+    radix-2 butterflies; roundtrip mode (``diag_refs``) runs the *whole*
+    spectral middle — forward butterflies, pointwise diagonal multiply,
+    inverse butterflies — in one visit (the paper's NIC offload extended
+    from butterflies to the spectral computation)."""
+    cr = pr_ref[pl.ds(off, cnt), :]
+    ci = pi_ref[pl.ds(off, cnt), :]
+    if inverse:
+        ci = -ci
+    yr, yi = butterfly_stages(cr, ci, twr_ref[...], twi_ref[...], n_payload)
+    if inverse:
+        scale = jnp.asarray(1.0 / n_payload, yr.dtype)
+        yr, yi = yr * scale, -(yi * scale)
+    if diag_refs is not None:
+        dr_ref, di_ref = diag_refs
+        dr = dr_ref[pl.ds(off, cnt), :]
+        di = di_ref[pl.ds(off, cnt), :]
+        kr = yr * dr - yi * di
+        ki = yr * di + yi * dr
+        zr, zi = butterfly_stages(kr, -ki, twr_ref[...], twi_ref[...],
+                                  n_payload)
+        scale = jnp.asarray(1.0 / n_payload, zr.dtype)
+        yr, yi = zr * scale, -(zi * scale)
+    return yr, yi
+
+
 def _rdma_ring_kernel(*refs, axis_name: str, p: int, n_arrays: int,
-                      n_payload: int, payload_rows: int, inverse: bool):
+                      n_payload: int, payload_rows: int, inverse: bool,
+                      roundtrip: bool):
     """P−1 direct-send RDMA rounds with in-kernel butterflies.
 
     Round r: start the round-r+1 send, run payload chunk r−1's butterfly
@@ -161,9 +191,13 @@ def _rdma_ring_kernel(*refs, axis_name: str, p: int, n_arrays: int,
     fused = n_payload > 0
     xs = refs[:n_arrays]
     i = n_arrays
+    diag_refs = None
     if fused:
         pr_ref, pi_ref, twr_ref, twi_ref = refs[i:i + 4]
         i += 4
+        if roundtrip:
+            diag_refs = refs[i:i + 2]
+            i += 2
     outs = refs[i:i + n_arrays]
     i += n_arrays
     if fused:
@@ -202,15 +236,9 @@ def _rdma_ring_kernel(*refs, axis_name: str, p: int, n_arrays: int,
             # current block's butterflies, while the copies fly (Fig. 4.3)
             off, cnt = _chunk_bounds(payload_rows, p - 1, r - 1)
             if cnt:
-                cr = pr_ref[pl.ds(off, cnt), :]
-                ci = pi_ref[pl.ds(off, cnt), :]
-                if inverse:
-                    ci = -ci
-                yr, yi = butterfly_stages(cr, ci, twr_ref[...], twi_ref[...],
-                                          n_payload)
-                if inverse:
-                    scale = jnp.asarray(1.0 / n_payload, yr.dtype)
-                    yr, yi = yr * scale, -(yi * scale)
+                yr, yi = _payload_chunk(pr_ref, pi_ref, twr_ref, twi_ref,
+                                        diag_refs, off=off, cnt=cnt,
+                                        n_payload=n_payload, inverse=inverse)
                 qr_ref[pl.ds(off, cnt), :] = yr
                 qi_ref[pl.ds(off, cnt), :] = yi
         for rdma in in_flight.pop(r):               # then wait
@@ -218,7 +246,8 @@ def _rdma_ring_kernel(*refs, axis_name: str, p: int, n_arrays: int,
 
 
 def _rdma_bidi_kernel(*refs, axis_name: str, p: int, n_arrays: int,
-                      n_payload: int, payload_rows: int, inverse: bool):
+                      n_payload: int, payload_rows: int, inverse: bool,
+                      roundtrip: bool):
     """ceil((P−1)/2) double-buffered rounds over *both* torus directions.
 
     Round r starts the clockwise send (block me+r, routed +r) and the
@@ -233,9 +262,13 @@ def _rdma_bidi_kernel(*refs, axis_name: str, p: int, n_arrays: int,
     fused = n_payload > 0
     xs = refs[:n_arrays]
     i = n_arrays
+    diag_refs = None
     if fused:
         pr_ref, pi_ref, twr_ref, twi_ref = refs[i:i + 4]
         i += 4
+        if roundtrip:
+            diag_refs = refs[i:i + 2]
+            i += 2
     outs = refs[i:i + n_arrays]
     i += n_arrays
     if fused:
@@ -277,15 +310,9 @@ def _rdma_bidi_kernel(*refs, axis_name: str, p: int, n_arrays: int,
         if fused:
             off, cnt = _chunk_bounds(payload_rows, rounds, r - 1)
             if cnt:
-                cr = pr_ref[pl.ds(off, cnt), :]
-                ci = pi_ref[pl.ds(off, cnt), :]
-                if inverse:
-                    ci = -ci
-                yr, yi = butterfly_stages(cr, ci, twr_ref[...], twi_ref[...],
-                                          n_payload)
-                if inverse:
-                    scale = jnp.asarray(1.0 / n_payload, yr.dtype)
-                    yr, yi = yr * scale, -(yi * scale)
+                yr, yi = _payload_chunk(pr_ref, pi_ref, twr_ref, twi_ref,
+                                        diag_refs, off=off, cnt=cnt,
+                                        n_payload=n_payload, inverse=inverse)
                 qr_ref[pl.ds(off, cnt), :] = yr
                 qi_ref[pl.ds(off, cnt), :] = yi
         for rdma in in_flight.pop(r):               # then wait both streams
@@ -293,7 +320,8 @@ def _rdma_bidi_kernel(*refs, axis_name: str, p: int, n_arrays: int,
 
 
 def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
-                   payload=None, inverse: bool = False, bidi: bool = False):
+                   payload=None, diag=None, inverse: bool = False,
+                   bidi: bool = False):
     """Build and invoke the fused RDMA kernel for one exchange."""
     p = compat.axes_size(axes)
     axis_name = axes[0]
@@ -304,6 +332,7 @@ def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
     operands = list(xss)
     out_shape = [jax.ShapeDtypeStruct(xs.shape, xs.dtype) for xs in xss]
     n_payload = payload_rows = 0
+    n_vmem_in = 0
     lead = None
     if fused:
         pr, pi = payload
@@ -314,6 +343,14 @@ def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
         operands += [pr.reshape(payload_rows, n_payload),
                      pi.reshape(payload_rows, n_payload),
                      jnp.asarray(twr_np), jnp.asarray(twi_np)]
+        n_vmem_in = 4
+        if diag is not None:
+            # roundtrip mode: the diagonal multiplier rows ride along,
+            # already broadcast to the payload's shape by the caller
+            dgr, dgi = diag
+            operands += [dgr.reshape(payload_rows, n_payload),
+                         dgi.reshape(payload_rows, n_payload)]
+            n_vmem_in = 6
         out_shape += [jax.ShapeDtypeStruct((payload_rows, n_payload), dtype)
                       for _ in range(2)]
 
@@ -321,14 +358,17 @@ def _ring_rdma_tpu(arrs, axes, *, split_axis: int, concat_axis: int,
     in_specs = [any_spec] * len(xss)
     out_specs = [any_spec] * len(xss)
     if fused:
-        # payload + twiddles live in VMEM for the in-kernel butterflies
-        in_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)] * 4
+        # payload + twiddles (+ diag rows) live in VMEM for the in-kernel
+        # butterflies
+        in_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)
+                     ] * n_vmem_in
         out_specs += [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM)] * 2
 
     kernel = functools.partial(
         _rdma_bidi_kernel if bidi else _rdma_ring_kernel,
         axis_name=axis_name, p=p, n_arrays=len(xss),
-        n_payload=n_payload, payload_rows=payload_rows, inverse=inverse)
+        n_payload=n_payload, payload_rows=payload_rows, inverse=inverse,
+        roundtrip=diag is not None)
     # per-direction semaphore slots for the bidi kernel (dim 1: cw, ccw)
     sem_shape = ((max(tr.bidi_rounds(p), 1), 2, len(xss)) if bidi
                  else (max(p - 1, 1), len(xss)))
@@ -368,7 +408,8 @@ def fusable_payload(payload) -> bool:
 
 
 def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
-                       interleave=None, payload=None, inverse: bool = False,
+                       interleave=None, payload=None, diag=None,
+                       inverse: bool = False,
                        interpret: bool | None = None):
     """Tiled ring all-to-all of ``arrs`` through the async-RDMA NIC engine.
 
@@ -380,7 +421,11 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
     (interpret path — XLA schedules it under the remaining hops), a payload
     is transformed *inside* the kernel between ``start`` and ``wait``
     (TPU path). ``inverse`` applies the conjugate-trick inverse FFT to the
-    payload.
+    payload. ``diag`` (a planar multiplier pair broadcast to the payload's
+    shape) switches the payload to **roundtrip** mode: forward
+    butterflies, pointwise diagonal multiply, conjugate-trick inverse
+    butterflies — the whole spectral middle of a fused solver step in one
+    payload visit.
 
     A grid dimension spanning several communicating mesh axes is **staged
     per axis** (``transpose.staged_exchange``): one double-buffered RDMA
@@ -391,6 +436,8 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
     """
     assert interleave is None or payload is None, \
         "interleave (JAX-level thunk) and payload (in-kernel) are exclusive"
+    assert diag is None or (payload is not None and not inverse), \
+        "diag (roundtrip payload mode) needs a forward payload"
     axes = tuple(axes)
     p = compat.axes_size(axes)
     if p <= 1:
@@ -403,7 +450,7 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
         return tr.staged_exchange(arrs, comm_axes, split_axis=split_axis,
                                   concat_axis=concat_axis, exchange=ex,
                                   interleave=interleave, payload=payload,
-                                  inverse=inverse)
+                                  diag=diag, inverse=inverse)
     if not interpret:
         # the fused kernel is atomic — a JAX-level thunk can't run between
         # its rounds, so non-fusable compute is emitted before the kernel
@@ -414,7 +461,7 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
         outs, fused = _ring_rdma_tpu(arrs, comm_axes,
                                      split_axis=split_axis,
                                      concat_axis=concat_axis, payload=payload,
-                                     inverse=inverse)
+                                     diag=diag, inverse=inverse)
         return outs, (fused if payload is not None else follow)
     if payload is not None:
         # no in-kernel butterflies off-TPU: degrade to the thunk contract
@@ -425,7 +472,7 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
 
 
 def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
-                            interleave=None, payload=None,
+                            interleave=None, payload=None, diag=None,
                             inverse: bool = False,
                             interpret: bool | None = None):
     """Bidirectional (two-NIC) ring all-to-all through the async-RDMA engine.
@@ -438,7 +485,8 @@ def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
     double-buffered ``make_async_remote_copy`` sends to *both* neighbors
     per round with per-direction semaphores (``_rdma_bidi_kernel``); a
     fusable ``payload`` pair is butterflied in-kernel exactly like the
-    unidirectional kernel. Off-TPU the exchange is the two counter-rotating
+    unidirectional kernel (including the ``diag`` roundtrip payload mode).
+    Off-TPU the exchange is the two counter-rotating
     ``ppermute`` streams of ``transpose.ring_exchange_bidi`` — the
     interpret-portable schedule CI pins bit-exact vs ``torus``. Multi-axis
     grid dimensions stage one bidirectional ring per mesh axis
@@ -446,6 +494,8 @@ def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
     """
     assert interleave is None or payload is None, \
         "interleave (JAX-level thunk) and payload (in-kernel) are exclusive"
+    assert diag is None or (payload is not None and not inverse), \
+        "diag (roundtrip payload mode) needs a forward payload"
     axes = tuple(axes)
     p = compat.axes_size(axes)
     if p <= 1:
@@ -458,7 +508,7 @@ def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
         return tr.staged_exchange(arrs, comm_axes, split_axis=split_axis,
                                   concat_axis=concat_axis, exchange=ex,
                                   interleave=interleave, payload=payload,
-                                  inverse=inverse)
+                                  diag=diag, inverse=inverse)
     if not interpret:
         # the fused kernel is atomic (see ring_exchange_rdma): non-fusable
         # compute is emitted before it, fusable compute rides the payload
@@ -466,7 +516,7 @@ def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
         outs, fused = _ring_rdma_tpu(arrs, comm_axes,
                                      split_axis=split_axis,
                                      concat_axis=concat_axis, payload=payload,
-                                     inverse=inverse, bidi=True)
+                                     diag=diag, inverse=inverse, bidi=True)
         return outs, (fused if payload is not None else follow)
     if payload is not None:
         raise ValueError("payload fusion requires the TPU RDMA lowering; "

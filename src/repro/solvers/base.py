@@ -19,10 +19,17 @@ an analytic or NumPy reference; the base class owns plan construction
 (including the x64/dtype gate), shard_map compilation, and the run loop.
 
 The FFT plan knobs (backend / schedule / chunks / comm_engine /
-vector_mode / r2c_packed) come either from ``plan_cfg`` — e.g. the winner
-of ``repro.tuning.autotune_solver_step``, which times *this class's whole
-step* per candidate — or from the same pipelined/switched default the
-Navier–Stokes example always used.
+vector_mode / r2c_packed / fused_roundtrip) come either from ``plan_cfg``
+— e.g. the winner of ``repro.tuning.autotune_solver_step``, which times
+*this class's whole step* per candidate — or from the same
+pipelined/switched default the Navier–Stokes example always used.
+
+Solvers whose spectral stage is a pointwise-diagonal k-space multiply
+(heat, poisson, the NLS kinetic half-step) declare it via the
+``spectral_kernel`` hook and step through
+:func:`repro.core.fft3d.spectral_roundtrip_local`, which streams the
+Y↔Z roundtrip as one slab pipeline when the plan's ``fused_roundtrip``
+knob is on (and is the plain composed cycle when it is off).
 """
 
 from __future__ import annotations
@@ -67,7 +74,8 @@ class SpectralSolver(abc.ABC):
             dtype, who=f"solvers.{self.case}"))
         grid = PencilGrid.from_mesh(mesh)
         cfg = dict(schedule="pipelined", chunks=2, backend="jnp",
-                   comm_engine="switched", r2c_packed=False)
+                   comm_engine="switched", r2c_packed=False,
+                   fused_roundtrip=False)
         self.vector_mode = "streaming"
         if plan_cfg:
             from repro.tuning.space import normalize_config
@@ -90,6 +98,15 @@ class SpectralSolver(abc.ABC):
     @abc.abstractmethod
     def observables_fields(self, plan: FFT3DPlan, fields) -> dict:
         """Grid-reduced scalar diagnostics (inside shard_map)."""
+
+    def spectral_kernel(self, plan: FFT3DPlan, dtype):
+        """The solver's k-space stage as a ``fft3d.DiagonalKernel``, when
+        it is a pointwise-diagonal multiply (heat's ``e^{−κk²Δt}``,
+        poisson's ``−1/k²``, NLS' kinetic rotation). ``None`` (the
+        default) means the stage is not diagonal — e.g. the Navier–Stokes
+        nonlinear term — and the fused-roundtrip executor does not apply."""
+        del plan, dtype
+        return None
 
     @abc.abstractmethod
     def validate(self, history: list[dict]) -> tuple[bool, list[str]]:
@@ -152,4 +169,5 @@ class SpectralSolver(abc.ABC):
         return {"backend": p.backend, "schedule": p.schedule,
                 "chunks": p.chunks, "comm_engine": p.comm_engine,
                 "net": p.net, "vector_mode": self.vector_mode,
-                "r2c_packed": p.r2c_packed, "dtype": p.dtype}
+                "r2c_packed": p.r2c_packed,
+                "fused_roundtrip": p.fused_roundtrip, "dtype": p.dtype}

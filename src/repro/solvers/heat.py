@@ -1,8 +1,10 @@
 """3D heat / diffusion equation ``∂u/∂t = κ ∇²u`` on the 2π³ torus.
 
 Each step is one full FFT cycle: forward r2c transform, exact spectral
-propagator ``e^{−κk²Δt}`` (the :func:`integrators.exp_decay` integrating
-factor with no nonlinear term), inverse transform. The single-mode initial
+propagator ``e^{−κk²Δt}`` (a :class:`repro.core.fft3d.DiagonalKernel`
+stepped through ``spectral_roundtrip_local`` — streamed per kx-slab when
+the plan's ``fused_roundtrip`` knob is on), inverse transform. The
+single-mode initial
 condition ``u₀ = sin(m_x x)·cos(m_y y)·cos(m_z z)`` decays analytically as
 ``e^{−κ|m|²t}``, which ``validate`` checks to near machine precision.
 """
@@ -13,8 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spectral as sp
-from repro.core.fft3d import fft3d_local, ifft3d_local
-from repro.solvers import integrators
+from repro.core.fft3d import DiagonalKernel, spectral_roundtrip_local
 from repro.solvers.base import SpectralSolver
 
 
@@ -42,12 +43,15 @@ class HeatSolver(SpectralSolver):
         u0 = np.sin(mx * X) * np.cos(my * Y) * np.cos(mz * Z)
         return (jnp.asarray(u0.astype(self.dtype)),)
 
+    def spectral_kernel(self, plan, dtype):
+        """Exact propagator of ``∂u = κ∇²u``: multiply by ``e^{−κk²Δt}``."""
+        return DiagonalKernel(
+            dr=jnp.exp(-self.kappa * sp.k_squared(plan, dtype) * self.dt))
+
     def step_fields(self, plan, fields):
         (u,) = fields
-        ur, ui = fft3d_local(plan, u)
-        decay = -self.kappa * sp.k_squared(plan, ur.dtype)
-        ur, ui = integrators.exp_decay(decay, (ur, ui), self.dt)
-        return (ifft3d_local(plan, ur, ui),)
+        kern = self.spectral_kernel(plan, u.dtype)
+        return (spectral_roundtrip_local(plan, kern, u),)
 
     def observables_fields(self, plan, fields):
         (u,) = fields

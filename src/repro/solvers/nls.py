@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spectral as sp
-from repro.core.fft3d import fft3d_local, ifft3d_local
+from repro.core.fft3d import DiagonalKernel, spectral_roundtrip_local
 from repro.solvers.base import SpectralSolver
 
 
@@ -56,13 +56,16 @@ class NLSSolver(SpectralSolver):
         c, s = jnp.cos(theta), jnp.sin(theta)
         return pr * c - pi * s, pr * s + pi * c
 
+    def spectral_kernel(self, plan, dtype):
+        """Exact kinetic propagator ``e^{−i k² Δt/2}`` as a complex
+        diagonal: multiply by ``cos θ + i sin θ``, θ = −k²Δt/2."""
+        theta = -0.5 * sp.k_squared(plan, dtype) * self.dt
+        return DiagonalKernel(dr=jnp.cos(theta), di=jnp.sin(theta))
+
     def step_fields(self, plan, fields):
         pr, pi = self._half_kick(*fields)
-        kr, ki = fft3d_local(plan, pr, pi)
-        theta = -0.5 * sp.k_squared(plan, kr.dtype) * self.dt
-        c, s = jnp.cos(theta), jnp.sin(theta)
-        kr, ki = kr * c - ki * s, kr * s + ki * c
-        pr, pi = ifft3d_local(plan, kr, ki)
+        kern = self.spectral_kernel(plan, pr.dtype)
+        pr, pi = spectral_roundtrip_local(plan, kern, pr, pi)
         return self._half_kick(pr, pi)
 
     def observables_fields(self, plan, fields):

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spectral as sp
-from repro.core.fft3d import fft3d_local, ifft3d_local
+from repro.core.fft3d import DiagonalKernel, spectral_roundtrip_local
 from repro.solvers.base import SpectralSolver
 
 _K2 = 1 + 4 + 9  # |k|² of the manufactured mode
@@ -46,11 +46,19 @@ class PoissonSolver(SpectralSolver):
         # fields: (source f, exact φ, current iterate φ — starts at 0)
         return (jnp.asarray(f), jnp.asarray(phi), jnp.zeros_like(phi))
 
+    def spectral_kernel(self, plan, dtype):
+        """``φ̂ = −f̂/k²`` in the zero-mean gauge (k=0 and r2c pad zeroed) —
+        the multiplier of :func:`repro.core.spectral.invert_laplacian`."""
+        k2 = sp.k_squared(plan, dtype)
+        inv = jnp.where(k2 > 0, -1.0 / jnp.maximum(k2, 1e-30), 0.0)
+        if plan.real:
+            inv = inv * sp.pad_mask(plan, dtype)
+        return DiagonalKernel(dr=inv)
+
     def step_fields(self, plan, fields):
         f, phi_exact, _ = fields
-        fr, fi = fft3d_local(plan, f)
-        pr, pi = sp.invert_laplacian(plan, fr, fi, mean=0.0)
-        phi = ifft3d_local(plan, pr, pi)
+        kern = self.spectral_kernel(plan, f.dtype)
+        phi = spectral_roundtrip_local(plan, kern, f)
         return (f, phi_exact, phi)
 
     def observables_fields(self, plan, fields):

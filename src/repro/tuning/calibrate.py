@@ -27,6 +27,12 @@ Measurement method:
   ``t(bytes) = overhead + bytes/bw`` (so wire bandwidth cancels out and
   only the dispatch/latency part remains). Needs a communicating mesh —
   on a 1×1 grid nothing can be measured and the priors stand.
+* **wire bandwidth** — the *slope* of the same two-size fit,
+  ``(bytes₂ − bytes₁)/(t₂ − t₁)``, is the bytes-per-second the fold
+  actually moved; the median over the measured engines is persisted as
+  ``link_bytes_per_s`` and consumed by ``perfmodel.link_bytes_per_s`` —
+  the wire term of every ``estimate_plan_seconds`` /
+  ``estimate_roundtrip_seconds`` / ``optimal_chunks`` query.
 * **backend compute weight** — each backend's 1D c2c transform is timed on
   an identical planar batch; the weight is the ratio to ``jnp`` (XLA's
   native FFT, the 1.0 reference, exactly as the priors are normalized).
@@ -42,6 +48,7 @@ import datetime
 import json
 import math
 import os
+import statistics
 
 SCHEMA = "fft-calibration/v1"
 ENV_VAR = "REPRO_CALIBRATION"
@@ -130,15 +137,20 @@ def _fold_sizes(pu: int, pv: int) -> tuple[int, int]:
 
 
 def measure_engine_overheads(mesh, *, iters: int = 5,
-                             verbose: bool = False) -> dict:
-    """Measured ``ENGINE_MESSAGE_OVERHEAD_S`` replacement.
+                             verbose: bool = False) -> tuple[dict, float]:
+    """Measured ``ENGINE_MESSAGE_OVERHEAD_S`` replacement, plus the wire
+    bandwidth the same fit yields.
 
     Times every registered TransposeEngine's X↔Y fold (the real
     ``shard_map``-compiled exchange) at two payload sizes and extrapolates
     to zero payload: ``t(bytes) = c + bytes/bw`` gives the size-independent
-    dispatch cost ``c = messages · t_msg``. Engines whose fit is non-positive
-    (noise) or that fail to build are skipped; a non-communicating mesh
-    returns ``{}`` (nothing to measure — the priors stand).
+    dispatch cost ``c = messages · t_msg`` as the intercept — and the
+    bytes-per-second actually moved, ``bw = Δbytes/Δt``, as the slope.
+    Returns ``(overheads, link_bytes_per_s)`` where the bandwidth is the
+    median slope over the measured engines (0.0 when nothing measured).
+    Engines whose fit is non-positive (noise) or that fail to build are
+    skipped; a non-communicating mesh returns ``({}, 0.0)`` (nothing to
+    measure — the priors stand).
     """
     import jax
     import jax.numpy as jnp
@@ -152,11 +164,12 @@ def measure_engine_overheads(mesh, *, iters: int = 5,
 
     grid = PencilGrid.from_mesh(mesh)
     if grid.pu <= 1:  # the X<->Y fold moves data along the Pu ranks only
-        return {}
+        return {}, 0.0
     n1, n2 = _fold_sizes(grid.pu, grid.pv)
     spec = grid.pencil_spec()
     rng = np.random.RandomState(0)
     out: dict[str, float] = {}
+    slopes: list[float] = []
     for name in comm.ENGINE_NAMES:
         msgs = pm.fold_messages(grid.pu, pm.ENGINE_FABRIC[name], name)
         if msgs <= 0:
@@ -178,13 +191,18 @@ def measure_engine_overheads(mesh, *, iters: int = 5,
         b1, b2 = float(n1) ** 3 * 4, float(n2) ** 3 * 4
         t0 = ts[0] - b1 * (ts[1] - ts[0]) / (b2 - b1)  # zero-payload intercept
         t_msg = t0 / msgs
+        slope = (b2 - b1) / (ts[1] - ts[0]) if ts[1] > ts[0] else 0.0
         if verbose:
             print(f"  calibrate engine {name}: t({n1}^3)={ts[0] * 1e6:.1f}us "
                   f"t({n2}^3)={ts[1] * 1e6:.1f}us -> "
-                  f"t_msg={t_msg * 1e6:.3f}us ({msgs} msgs)", flush=True)
+                  f"t_msg={t_msg * 1e6:.3f}us ({msgs} msgs) "
+                  f"bw={slope / 1e9:.2f} GB/s", flush=True)
         if t_msg >= MIN_OVERHEAD_S:
             out[name] = float(f"{t_msg:.3e}")
-    return out
+        if slope > 0 and math.isfinite(slope):
+            slopes.append(slope)
+    link = statistics.median(slopes) if slopes else 0.0
+    return out, float(f"{link:.3e}") if link > 0 else 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -200,18 +218,22 @@ def run_calibration(mesh, *, quick: bool = False, iters: int | None = None,
         iters = 2 if quick else 5
     rows, length = (16, 64) if quick else (64, 256)
     grid = PencilGrid.from_mesh(mesh)
-    return {
+    overheads, link = measure_engine_overheads(mesh, iters=iters,
+                                               verbose=verbose)
+    doc = {
         "schema": SCHEMA,
         "fingerprint": substrate_fingerprint(),
         "mesh": f"{grid.pu}x{grid.pv}",
         "quick": bool(quick),
         "iters": int(iters),
-        "engine_message_overhead_s": measure_engine_overheads(
-            mesh, iters=iters, verbose=verbose),
+        "engine_message_overhead_s": overheads,
         "backend_compute_weight": measure_backend_weights(
             rows=rows, length=length, iters=iters, verbose=verbose),
         "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
     }
+    if link > 0:
+        doc["link_bytes_per_s"] = link
+    return doc
 
 
 def validate_calibration(doc) -> list[str]:
@@ -219,8 +241,10 @@ def validate_calibration(doc) -> list[str]:
 
     Valid means: right schema, a complete substrate fingerprint, both
     measurement tables present as dicts of positive finite floats over
-    *known* engine/backend names, and at least one measured value overall
-    (an all-empty calibration carries no signal worth persisting).
+    *known* engine/backend names, an optional ``link_bytes_per_s`` scalar
+    that is positive and finite when present, and at least one measured
+    value overall (an all-empty calibration carries no signal worth
+    persisting).
     """
     from repro.core import perfmodel as pm
     from repro.kernels.ops import BACKENDS
@@ -254,6 +278,14 @@ def validate_calibration(doc) -> list[str]:
                                 f"number: {v!r}")
             else:
                 measured += 1
+    link = doc.get("link_bytes_per_s")
+    if link is not None:
+        if not isinstance(link, (int, float)) or isinstance(link, bool) \
+                or not math.isfinite(link) or link <= 0:
+            problems.append(f"link_bytes_per_s: not a positive finite "
+                            f"number: {link!r}")
+        else:
+            measured += 1
     if not problems and measured == 0:
         problems.append("no measured values in either table")
     return problems
@@ -363,6 +395,11 @@ def main(argv=None) -> int:
         prior = pm.BACKEND_COMPUTE_WEIGHT.get(backend, 1.0)
         print(f"  compute weight   {backend:<13} {w:8.3f}     "
               f"(prior {prior:.1f})")
+    link = doc.get("link_bytes_per_s")
+    if link:
+        print(f"  wire bandwidth   {'median slope':<13} "
+              f"{link / 1e9:8.2f} GB/s (prior "
+              f"{pm.LINK_BYTES_PER_S / 1e9:.1f} GB/s)")
     # this process measured fresh values — let its own model use them too
     pm.set_calibration(doc)
     return 0

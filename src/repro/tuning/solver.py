@@ -19,11 +19,21 @@ from __future__ import annotations
 
 import datetime
 
+from repro.core import perfmodel as pm
 from repro.core.decomposition import PencilGrid
 from repro.tuning.autotune import TuneResult, _estimate
 from repro.tuning.cache import PlanCache, problem_fingerprint
 from repro.tuning.space import DEFAULT_CANDIDATE, Candidate, candidate_space
 from repro.tuning.timing import time_us
+
+
+def _has_diagonal_kernel(cls) -> bool:
+    """Whether the solver class declares a pointwise-diagonal spectral
+    kernel (overrides ``SpectralSolver.spectral_kernel``) — the gate for
+    sweeping the fused-roundtrip executor on its step."""
+    from repro.solvers.base import SpectralSolver
+
+    return cls.spectral_kernel is not SpectralSolver.spectral_kernel
 
 
 def time_solver_step(mesh, case: str, n, cand: Candidate, *,
@@ -84,11 +94,20 @@ def autotune_solver_step(mesh, case: str, n, *, dtype="float64",
                               best_us=entry["us_per_call"], cache_hit=True,
                               key=key, rows=entry.get("rows", []))
 
+    diagonal = _has_diagonal_kernel(cls)
     cands = candidate_space(n, grid.pu, grid.pv, real=cls.real,
-                            components=cls.components)
+                            components=cls.components, fused=diagonal)
     # the analytic transform model ranks candidates; the per-step transform
-    # count is plan-independent, so the constant factor cancels in the order
-    cands.sort(key=lambda c: _estimate(c, n, grid, cls.components))
+    # count is plan-independent, so the constant factor cancels in the order.
+    # Diagonal-kernel cases rank on the roundtrip estimate instead, which
+    # prices the fused executor's hidden kernel sweep (fused ≤ composed).
+    if diagonal:
+        cands.sort(key=lambda c: pm.estimate_roundtrip_seconds(
+            n, grid.pu, grid.pv, spec=c.spec(real=cls.real),
+            mu=max(cls.components, 1),
+            pu_axes=grid.u_sizes, pv_axes=grid.v_sizes))
+    else:
+        cands.sort(key=lambda c: _estimate(c, n, grid, cls.components))
     keep = cands[:max(max_candidates, 1)]
     if DEFAULT_CANDIDATE not in keep:
         keep.append(DEFAULT_CANDIDATE)

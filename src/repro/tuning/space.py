@@ -23,6 +23,7 @@ class Candidate:
     comm_engine: str = "switched"
     vector_mode: str = "streaming"
     r2c_packed: bool = False
+    fused_roundtrip: bool = False
 
     @property
     def net(self) -> str:
@@ -35,6 +36,8 @@ class Candidate:
         bits = [self.backend, sched, self.comm_engine, self.vector_mode]
         if self.r2c_packed:
             bits.append("packed")
+        if self.fused_roundtrip:
+            bits.append("fused")
         return "/".join(bits)
 
     def config(self) -> dict:
@@ -53,13 +56,15 @@ class Candidate:
         return EngineSpec(engine=self.comm_engine, backend=self.backend,
                           schedule=self.schedule, chunks=self.chunks,
                           real=real, r2c_packed=self.r2c_packed,
-                          vector_mode=self.vector_mode)
+                          vector_mode=self.vector_mode,
+                          fused_roundtrip=self.fused_roundtrip)
 
     @classmethod
     def from_spec(cls, spec: EngineSpec) -> "Candidate":
         return cls(backend=spec.backend, schedule=spec.schedule,
                    chunks=spec.chunks, comm_engine=spec.engine,
-                   vector_mode=spec.vector_mode, r2c_packed=spec.r2c_packed)
+                   vector_mode=spec.vector_mode, r2c_packed=spec.r2c_packed,
+                   fused_roundtrip=spec.fused_roundtrip)
 
 
 def normalize_config(cfg: dict) -> dict:
@@ -79,7 +84,7 @@ DEFAULT_CANDIDATE = Candidate()  # the hardcoded status quo every caller used
 
 
 def candidate_space(n, pu: int, pv: int, *, real: bool = False,
-                    components: int = 0, backends=None,
+                    components: int = 0, backends=None, fused: bool = False,
                     pu_axes=None, pv_axes=None) -> list[Candidate]:
     """All valid candidates for the problem.
 
@@ -100,6 +105,10 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
       staged per-axis ring round instead of one flat P-rank ring.
     * ``vector_mode`` only matters for μ-component fields (``components>0``).
     * ``r2c_packed`` needs a real transform with even power-of-two Nx.
+    * ``fused=True`` (solver-step tuning of a diagonal spectral operator)
+      additionally enumerates each candidate with the fused-roundtrip
+      executor on — only meaningful for workloads stepping through
+      ``fft3d.spectral_roundtrip_local``, so off by default.
     """
     nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
     pow2 = all(is_pow2(d) for d in (nx, ny, nz))
@@ -108,6 +117,7 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
     engines = ALL_ENGINES if (pu > 1 or pv > 1) else ("switched",)
     vmodes = ("streaming", "parallel") if components else ("streaming",)
     packed_opts = (False, True) if (real and pow2 and nx % 2 == 0) else (False,)
+    fused_opts = (False, True) if fused else (False,)
 
     out = []
     for backend in backends:
@@ -120,8 +130,10 @@ def candidate_space(n, pu: int, pv: int, *, real: bool = False,
             for schedule, chunks in schedules:
                 for vm in vmodes:
                     for packed in packed_opts:
-                        out.append(Candidate(
-                            backend=backend, schedule=schedule, chunks=chunks,
-                            comm_engine=engine, vector_mode=vm,
-                            r2c_packed=packed))
+                        for fr in fused_opts:
+                            out.append(Candidate(
+                                backend=backend, schedule=schedule,
+                                chunks=chunks, comm_engine=engine,
+                                vector_mode=vm, r2c_packed=packed,
+                                fused_roundtrip=fr))
     return out

@@ -153,6 +153,43 @@ def test_calibration_changes_backend_weights():
     assert pm.backend_compute_weight("mxu") == pm.BACKEND_COMPUTE_WEIGHT["mxu"]
 
 
+def test_validate_calibration_link_bandwidth():
+    # the optional wire-bandwidth slope: positive finite numbers pass and
+    # count as signal, anything else is rejected
+    doc = synth_doc({"torus": 1e-6})
+    assert cal.validate_calibration({**doc, "link_bytes_per_s": 12.5e9}) == []
+    for bad in (-1.0, 0.0, float("nan"), float("inf"), True, "fast"):
+        assert any("link_bytes_per_s" in p for p in cal.validate_calibration(
+            {**doc, "link_bytes_per_s": bad})), bad
+    # a document whose only measurement is the link slope still carries signal
+    empty = synth_doc()
+    empty["backend_compute_weight"] = {}
+    assert cal.validate_calibration(
+        {**empty, "link_bytes_per_s": 12.5e9}) == []
+
+
+def test_calibration_changes_link_bandwidth():
+    # unmeasured -> the built-in prior
+    assert pm.link_bytes_per_s() == pm.LINK_BYTES_PER_S
+    prior = pm.estimate_plan_seconds(256, 8, 8, comm_engine="torus")
+    prior_rt = pm.estimate_roundtrip_seconds(256, 8, 8, fused=True,
+                                             comm_engine="torus")
+    # wires measured 10x slower -> every wire-bound estimate grows (the doc
+    # carries only the slope, so message overheads keep their priors)
+    pm.set_calibration({**synth_doc(),
+                        "link_bytes_per_s": pm.LINK_BYTES_PER_S / 10})
+    assert pm.link_bytes_per_s() == pytest.approx(pm.LINK_BYTES_PER_S / 10)
+    assert pm.estimate_plan_seconds(256, 8, 8, comm_engine="torus") > prior
+    assert pm.estimate_roundtrip_seconds(256, 8, 8, fused=True,
+                                         comm_engine="torus") > prior_rt
+    # an explicit caller value still overrides the calibrated slope
+    assert pm.estimate_plan_seconds(
+        256, 8, 8, comm_engine="torus",
+        link_bytes_per_s=pm.LINK_BYTES_PER_S) == pytest.approx(prior)
+    pm.set_calibration(None)
+    assert pm.link_bytes_per_s() == pm.LINK_BYTES_PER_S
+
+
 def test_network_plan_reports_calibrated_overhead():
     from repro.core.engine_spec import EngineSpec
 

@@ -1,7 +1,8 @@
 """EngineSpec / CommDAG API redesign: validation, the axis-labelled step
-contract, and the DeprecationWarning shims every pre-spec spelling now
-rides (``make_engine``, ``NetworkPlan.for_engine``, ``make_fft3d``'s kwarg
-tail, ``fold_phase``/``unfold_phase``).
+contract, and the post-deprecation surface — the pre-spec spellings
+(``make_engine``, ``NetworkPlan.for_engine``, ``make_fft3d``'s kwarg tail,
+``fold_phase``/``unfold_phase``) are gone, and only the spec spelling
+remains.
 """
 
 import dataclasses
@@ -26,6 +27,7 @@ def test_engine_spec_defaults_and_fabric():
     assert (s.engine, s.backend, s.schedule, s.chunks) == \
         ("switched", "jnp", "sequential", 1)
     assert not s.real and not s.r2c_packed and s.vector_mode == "streaming"
+    assert not s.fused_roundtrip
     for name, fab in ENGINE_FABRIC.items():
         assert EngineSpec(engine=name).fabric == fab
 
@@ -58,7 +60,9 @@ def test_candidate_spec_roundtrip():
     for cand in (Candidate(),
                  Candidate(backend="pallas", schedule="pipelined", chunks=4,
                            comm_engine="bidi_ring", vector_mode="parallel",
-                           r2c_packed=True)):
+                           r2c_packed=True),
+                 Candidate(schedule="pipelined", chunks=2,
+                           comm_engine="pallas_ring", fused_roundtrip=True)):
         assert Candidate.from_spec(cand.spec()) == cand
     spec = EngineSpec(engine="overlap_ring", backend="ref",
                       schedule="pipelined", chunks=2)
@@ -158,78 +162,58 @@ def test_perfmodel_prices_per_axis_rounds(engine, sizes):
 
 
 # ---------------------------------------------------------------------------
-# deprecated spellings — must keep working under a DeprecationWarning
+# pre-spec spellings — removed after their deprecation cycle
 # ---------------------------------------------------------------------------
 
 GRID0 = PencilGrid(pu=1, pv=1, u_axes=(), v_axes=())
 
 
-def test_make_engine_shim():
-    with pytest.warns(DeprecationWarning, match="make_engine"):
-        eng = comm.make_engine("overlap_ring", GRID0, 4, backend="ref",
-                               real=True)
-    assert isinstance(eng, comm.OverlapRingEngine)
-    assert eng.chunks == 4 and eng.backend == "ref" and eng.real
-    assert eng.spec == EngineSpec(engine="overlap_ring", backend="ref",
-                                  schedule="pipelined", chunks=4, real=True)
+def test_pre_spec_spellings_removed():
+    # the deprecation cycle ended: the shim surfaces no longer exist
+    assert not hasattr(comm, "make_engine")
+    assert not hasattr(topo.NetworkPlan, "for_engine")
+    eng = comm.build_engine(EngineSpec(), GRID0)
+    assert not hasattr(eng, "fold_phase")
+    assert not hasattr(eng, "unfold_phase")
+    # the spec spelling is the one way to a configured engine
+    assert isinstance(
+        comm.build_engine(EngineSpec(engine="overlap_ring", backend="ref",
+                                     schedule="pipelined", chunks=4,
+                                     real=True), GRID0),
+        comm.OverlapRingEngine)
     with pytest.raises(ValueError, match="unknown comm engine"):
-        with pytest.warns(DeprecationWarning):
-            comm.make_engine("carrier_pigeon", GRID0)
+        EngineSpec(engine="carrier_pigeon")
 
 
-def test_for_engine_shim():
-    with pytest.warns(DeprecationWarning, match="for_engine"):
-        plan = topo.NetworkPlan.for_engine("bidi_ring", 16, 4, 180.0, n=64)
-    assert plan == topo.NetworkPlan.for_spec(EngineSpec(engine="bidi_ring"),
-                                             16, 4, 180.0, n=64)
-    with pytest.raises(ValueError, match="unknown comm engine"):
-        with pytest.warns(DeprecationWarning):
-            topo.NetworkPlan.for_engine("carrier_pigeon", 16, 4, 180.0)
-
-
-def test_make_fft3d_deprecated_kwarg_tail():
-    import jax.numpy as jnp
-
+def test_make_fft3d_rejects_legacy_kwarg_tail():
     from repro import compat
     from repro.core.fft3d import make_fft3d
 
     mesh = compat.make_mesh((1, 1), ("data", "model"))
-    with pytest.warns(DeprecationWarning, match="spec="):
-        fwd, inv, plan = make_fft3d(mesh, 8, comm_engine="torus",
-                                    schedule="pipelined", chunks=2,
-                                    backend="jnp")
+    for bad in (dict(comm_engine="torus"), dict(net="torus"),
+                dict(schedule="pipelined", chunks=2), dict(backend="jnp"),
+                dict(carrier="pigeon")):
+        with pytest.raises(TypeError, match="unexpected keyword"):
+            make_fft3d(mesh, 8, **bad)
+    # the spec spelling builds the configured plan
+    _, _, plan = make_fft3d(mesh, 8, spec=EngineSpec(
+        engine="torus", schedule="pipelined", chunks=2))
     assert plan.comm_engine == "torus"
     assert plan.schedule == "pipelined" and plan.chunks == 2
-    # the deprecated tail and the spec build the same plan
-    fwd2, inv2, plan2 = make_fft3d(
-        mesh, 8, spec=EngineSpec(engine="torus", schedule="pipelined",
-                                 chunks=2))
-    assert plan2 == plan
-    # numerics unaffected by which spelling built the plan
-    x = jnp.asarray(np.random.RandomState(0).randn(8, 8, 8))
-    xi = jnp.zeros_like(x)
-    np.testing.assert_array_equal(np.asarray(fwd(x, xi)[0]),
-                                  np.asarray(fwd2(x, xi)[0]))
-    # the legacy net-only spelling names the engine through the fabric
-    with pytest.warns(DeprecationWarning, match="spec="):
-        _, _, plan3 = make_fft3d(mesh, 8, net="torus")
-    assert plan3.comm_engine == "torus"
-    with pytest.raises(TypeError, match="unexpected keyword"):
-        make_fft3d(mesh, 8, carrier="pigeon")
 
 
-def test_fold_phase_shims():
+def test_run_fold_unfold_contract():
     import jax.numpy as jnp
 
     eng = comm.build_engine(EngineSpec(), GRID0)
     x = jnp.asarray(np.random.RandomState(0).randn(4, 4, 4))
     compute = lambda a: (a * 2.0,)
-    with pytest.warns(DeprecationWarning, match="fold_phase"):
-        (y,) = eng.fold_phase(compute, (x,), fold="xy", slab_axis=-2)
-    step = eng._step("xy").replace(slab_offset=-2)
-    (y2,) = eng.run_fold(step, compute, (x,))
-    np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
-    with pytest.warns(DeprecationWarning, match="unfold_phase"):
-        (z,) = eng.unfold_phase(compute, (y,), fold="xy", slab_axis=-2)
-    (z2,) = eng.run_unfold(step, compute, (y2,))
-    np.testing.assert_array_equal(np.asarray(z), np.asarray(z2))
+    step = XY_STEP
+    # fold = compute, then relayout (on a 1x1 grid: just the local permute);
+    # unfold = inverse relayout, then compute — their composition is the
+    # pre-spec fold_phase/unfold_phase contract without the shim names
+    (y,) = eng.run_fold(step, compute, (x,))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(x).transpose(step.permute) * 2.0)
+    (z,) = eng.run_unfold(step, compute, (y,))
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(x) * 4.0)
