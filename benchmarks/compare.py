@@ -1,7 +1,7 @@
-"""Bench regression gate: diff two ``bench-fft/v1`` JSON documents.
+"""Bench regression gate: diff two ``bench-fft/v1|v2`` JSON documents.
 
     PYTHONPATH=src python -m benchmarks.compare BASELINE.json NEW.json \
-        [--threshold 0.15] [--strict]
+        [--threshold 0.15] [--strict] [--model-drift-threshold 0.5]
 
 Compares ``us_per_call`` of *measured* rows (``us_per_call > 0``; analytic
 model rows carry 0 and are skipped) that appear in both documents, matched
@@ -28,25 +28,33 @@ import fnmatch
 import json
 import sys
 
-SCHEMA = "bench-fft/v1"
+#: accepted document generations: v2 rows additionally carry
+#: ``p50_us``/``p95_us`` and ``model_predicted_us``/``model_err``
+SCHEMAS = ("bench-fft/v1", "bench-fft/v2")
+SCHEMA = SCHEMAS[-1]
 
 #: meta keys that must agree for timings to be comparable at all
 SUBSTRATE_KEYS = ("platform", "device_kind", "devices", "jax")
 
 
-def load_doc(path: str) -> tuple[dict, dict]:
-    """``({name: us_per_call}, meta)`` for the measured rows of a document."""
+def load_doc(path: str) -> tuple[dict, dict, dict]:
+    """``({name: us_per_call}, {name: model_err}, meta)`` for the measured
+    rows of a document (``model_err`` only where a row carries one — v1
+    documents yield an empty error map)."""
     with open(path) as f:
         doc = json.load(f)
-    if doc.get("schema") != SCHEMA:
-        raise ValueError(f"{path}: expected schema {SCHEMA!r}, "
+    if doc.get("schema") not in SCHEMAS:
+        raise ValueError(f"{path}: expected schema in {SCHEMAS!r}, "
                          f"got {doc.get('schema')!r}")
-    out = {}
+    out, errs = {}, {}
     for row in doc.get("rows", []):
         name, us = row.get("name"), row.get("us_per_call")
         if isinstance(name, str) and isinstance(us, (int, float)) and us > 0:
             out[name] = float(us)
-    return out, doc.get("meta", {})
+            err = row.get("model_err")
+            if isinstance(err, (int, float)):
+                errs[name] = float(err)
+    return out, errs, doc.get("meta", {})
 
 
 def substrate_mismatch(base_meta: dict, new_meta: dict) -> str:
@@ -56,6 +64,17 @@ def substrate_mismatch(base_meta: dict, new_meta: dict) -> str:
             return (f"{key}: baseline={base_meta.get(key)!r} "
                     f"vs new={new_meta.get(key)!r}")
     return ""
+
+
+def median_abs_err(errs: dict) -> float:
+    """Median |model_err| over a document's predicted rows."""
+    vals = sorted(abs(v) for v in errs.values())
+    if not vals:
+        return 0.0
+    mid = len(vals) // 2
+    if len(vals) % 2:
+        return vals[mid]
+    return 0.5 * (vals[mid - 1] + vals[mid])
 
 
 def compare(base: dict, new: dict, threshold: float):
@@ -101,6 +120,14 @@ def main(argv=None) -> int:
                     help="gate only rows whose baseline us_per_call is at "
                          "least this (sub-threshold timings are scheduler "
                          "jitter on shared runners, not signal)")
+    ap.add_argument("--model-drift-threshold", type=float, default=0.0,
+                    metavar="FRAC",
+                    help="enable the perf-model drift gate: fail when the "
+                         "median |model_err| of the new document exceeds "
+                         "the baseline's by more than this fraction (plus a "
+                         "0.02 absolute allowance). The new document must "
+                         "carry model_err rows (bench-fft/v2); a baseline "
+                         "without them soft-passes this gate only.")
     args = ap.parse_args(argv)
 
     def soft(msg: str) -> int:
@@ -111,9 +138,18 @@ def main(argv=None) -> int:
         return 0
 
     try:
-        new, new_meta = load_doc(args.new)
+        new, new_errs, new_meta = load_doc(args.new)
     except (FileNotFoundError, json.JSONDecodeError, ValueError) as e:
         print(f"bench-compare: unreadable new document: {e}")
+        return 2
+
+    if args.model_drift_threshold > 0 and not new_errs:
+        # the drift gate guards the model's health; a new document with no
+        # predicted rows means the bench stopped emitting them — fail loud
+        # like --expect, don't soft-pass
+        print(f"bench-compare: FAIL — model drift gate requested but "
+              f"{args.new!r} carries no model_err rows (bench-fft/v2 "
+              f"measured rows with predictions)")
         return 2
 
     # --expect guards the new document alone, so it binds even on the first
@@ -129,7 +165,7 @@ def main(argv=None) -> int:
             return 2
 
     try:
-        base, base_meta = load_doc(args.baseline)
+        base, base_errs, base_meta = load_doc(args.baseline)
     except FileNotFoundError:
         return soft(f"baseline {args.baseline!r} not found")
     except (json.JSONDecodeError, ValueError) as e:
@@ -146,6 +182,8 @@ def main(argv=None) -> int:
         dropped = sorted(n for n in (set(base) | set(new)) if not keep(n))
         base = {k: v for k, v in base.items() if keep(k)}
         new = {k: v for k, v in new.items() if keep(k)}
+        base_errs = {k: v for k, v in base_errs.items() if keep(k)}
+        new_errs = {k: v for k, v in new_errs.items() if keep(k)}
         if dropped:
             print(f"bench-compare: ignoring {len(dropped)} row(s) matching "
                   f"{args.ignore}")
@@ -166,9 +204,32 @@ def main(argv=None) -> int:
         print(f"  improved  {name}: {b:.1f} -> {n:.1f} us ({ratio:.2f}x)")
     for name, b, n, ratio in regressions:
         print(f"  REGRESSED {name}: {b:.1f} -> {n:.1f} us ({ratio:.2f}x)")
+
+    drift_failed = False
+    if args.model_drift_threshold > 0:
+        if not base_errs:
+            print("bench-compare: model drift gate: baseline has no "
+                  "model_err rows (pre-v2 artifact) — recording this run's "
+                  "error as the new reference, not gating")
+        else:
+            b_med, n_med = median_abs_err(base_errs), median_abs_err(new_errs)
+            # absolute 0.02 allowance: a near-perfect baseline (median error
+            # ~0) must not turn ordinary run-to-run jitter into a failure
+            limit = b_med * (1.0 + args.model_drift_threshold) + 0.02
+            verdict = "OK" if n_med <= limit else "FAIL"
+            print(f"bench-compare: model drift: median |model_err| "
+                  f"{b_med:.3f} -> {n_med:.3f} (limit {limit:.3f}, "
+                  f"{len(new_errs)} predicted rows) {verdict}")
+            if n_med > limit:
+                drift_failed = True
+
     if regressions:
         print(f"bench-compare: FAIL — {len(regressions)} row(s) regressed "
               f"more than {args.threshold:.0%}")
+        return 1
+    if drift_failed:
+        print("bench-compare: FAIL — perf model drifted from its measured "
+              "baseline (recalibrate or fix the model)")
         return 1
     print("bench-compare: OK")
     return 0

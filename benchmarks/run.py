@@ -3,8 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows. Analytic (model-derived) rows
 report ``us_per_call=0``; measured rows time real executions on this host.
 ``--json PATH`` additionally writes the machine-readable
-``{"schema": "bench-fft/v1", "rows": [{name, us_per_call, config}]}``
-document that CI uploads as the perf-trajectory artifact.
+``{"schema": "bench-fft/v2", "meta": {...}, "rows": [{name, us_per_call,
+p50_us, p95_us, model_predicted_us, model_err, config}]}`` document that
+CI uploads as the perf-trajectory artifact (measured rows carry the tail
+percentiles and the perf model's prediction; ``meta`` pins the substrate
+and active calibration). ``--trace PATH`` writes a Chrome-trace JSON of
+the run — auto-derived as ``<json>.trace.json`` when ``--json`` is given;
+``--trace ''`` disables.
 
     PYTHONPATH=src python -m benchmarks.run [--only a,b,c] [--json BENCH_fft.json]
 
@@ -22,11 +27,21 @@ import numpy as np
 _ROWS: list[dict] = []
 
 
-def _row(name, us, derived, config=None):
+def _row(name, us, derived, config=None, stats=None, model_us=None):
     print(f"{name},{us:.3f},{derived}")
     if config is None:
         config = {"derived": derived} if derived != "" else {}
-    _ROWS.append({"name": name, "us_per_call": round(us, 3), "config": config})
+    row = {"name": name, "us_per_call": round(us, 3), "config": config}
+    if stats is not None:
+        row["p50_us"] = round(stats["p50_us"], 3)
+        row["p95_us"] = round(stats["p95_us"], 3)
+    if model_us is not None and model_us > 0 and us > 0:
+        # signed relative model error: measured/predicted − 1. The absolute
+        # prediction is nominal-substrate seconds, so the gate in compare.py
+        # tracks the *drift* of this error vs a baseline, not its size.
+        row["model_predicted_us"] = round(model_us, 3)
+        row["model_err"] = round(us / model_us - 1.0, 4)
+    _ROWS.append(row)
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +155,11 @@ def _time(fn, *a, iters=5):
     return time_us(fn, *a, iters=iters)
 
 
+def _stats(fn, *a, iters=5):
+    from repro.tuning.timing import time_stats
+    return time_stats(fn, *a, iters=iters)
+
+
 def bench_fft_wallclock():
     import functools
 
@@ -152,8 +172,10 @@ def bench_fft_wallclock():
         x = jax.random.normal(jax.random.PRNGKey(0), (64, n), jnp.float32)
         xi = jnp.zeros_like(x)
         for backend in ("jnp", "ref", "pallas"):
-            us = _time(lambda a, b: kops.fft1d(a, b, backend=backend), x, xi)
-            _row(f"fft1d_wallclock/{backend}/B64xN{n}", us, "")
+            st = _stats(lambda a, b: kops.fft1d(a, b, backend=backend), x, xi)
+            _row(f"fft1d_wallclock/{backend}/B64xN{n}", st["mean_us"], "",
+                 stats=st)
+    from repro.core import perfmodel as pm
     from repro.core.decomposition import PencilGrid
     from repro.core.fft3d import FFT3DPlan, fft3d_local
     for n in (32, 64):
@@ -162,8 +184,11 @@ def bench_fft_wallclock():
         x = jax.random.normal(jax.random.PRNGKey(1), (n, n, n), jnp.float32)
         xi = jnp.zeros_like(x)
         f = jax.jit(functools.partial(fft3d_local, plan))
-        us = _time(f, x, xi)
-        _row(f"fft3d_wallclock/jnp/N{n}", us, "")
+        st = _stats(f, x, xi)
+        model = pm.estimate_plan_seconds((n, n, n), 1, 1,
+                                         spec=plan.spec()) * 1e6
+        _row(f"fft3d_wallclock/jnp/N{n}", st["mean_us"], "", stats=st,
+             model_us=model)
         z = np.random.randn(n, n, n).astype(np.complex64)
         t0 = time.time()
         for _ in range(5):
@@ -191,6 +216,8 @@ def bench_fft_engines(n: int = 16):
     xr = jnp.asarray(rng.randn(n, n, n).astype(np.float32))
     xi = jnp.zeros_like(xr)
 
+    from repro.core import perfmodel as pm
+
     def _sweep(mesh, mesh_tag, u_axes, v_axes):
         for engine in ENGINE_NAMES:
             fwd, inv, plan = make_fft3d(mesh, (n, n, n),
@@ -198,11 +225,17 @@ def bench_fft_engines(n: int = 16):
                                         u_axes=u_axes, v_axes=v_axes)
             cfg = {"comm_engine": engine, "net": plan.net, "n": n,
                    "mesh": mesh_tag, "backend": plan.backend}
-            us = _time(fwd, xr, xi)
-            _row(f"fft_{engine}/N{n}/mesh{mesh_tag}/fwd", us, "", config=cfg)
+            g = plan.grid
+            model = pm.estimate_plan_seconds(
+                (n, n, n), g.pu, g.pv, spec=plan.spec(),
+                pu_axes=g.u_sizes, pv_axes=g.v_sizes) * 1e6
+            st = _stats(fwd, xr, xi)
+            _row(f"fft_{engine}/N{n}/mesh{mesh_tag}/fwd", st["mean_us"], "",
+                 config=cfg, stats=st, model_us=model)
             kr, ki = fwd(xr, xi)
-            us = _time(inv, kr, ki)
-            _row(f"fft_{engine}/N{n}/mesh{mesh_tag}/inv", us, "", config=cfg)
+            st = _stats(inv, kr, ki)
+            _row(f"fft_{engine}/N{n}/mesh{mesh_tag}/inv", st["mean_us"], "",
+                 config=cfg, stats=st, model_us=model)
 
     pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
     mesh = compat.make_mesh((pu, pv), ("data", "model"))
@@ -234,19 +267,24 @@ def bench_solvers(n: int = 16):
     for case in sorted(SOLVERS):
         solver = make_solver(case, mesh, (n, n, n), dtype="float32")
         state = solver.init_state()
-        us = _time(solver._stepj, state.fields, iters=3)
-        _row(f"solver_{case}/N{n}/mesh{pu}x{pv}/us_per_step", us, "",
-             config={"case": case, "n": n, "mesh": f"{pu}x{pv}",
-                     **solver.plan_config()})
+        # time the jitted step directly: the benchmark number stays free of
+        # the dispatch-span bookkeeping solver.step() adds under --trace
+        st = _stats(solver._stepj, state.fields, iters=3)
+        _row(f"solver_{case}/N{n}/mesh{pu}x{pv}/us_per_step", st["mean_us"],
+             "", config={"case": case, "n": n, "mesh": f"{pu}x{pv}",
+                         **solver.plan_config()},
+             stats=st, model_us=solver.predict_step_us())
         if SOLVERS[case].spectral_kernel is SpectralSolver.spectral_kernel:
             continue  # no diagonal spectral kernel — nothing to fuse
         fused = make_solver(case, mesh, (n, n, n), dtype="float32",
                             plan_cfg={"fused_roundtrip": True})
         fstate = fused.init_state()
-        us = _time(fused._stepj, fstate.fields, iters=3)
-        _row(f"solver_{case}_fused/N{n}/mesh{pu}x{pv}/us_per_step", us, "",
+        st = _stats(fused._stepj, fstate.fields, iters=3)
+        _row(f"solver_{case}_fused/N{n}/mesh{pu}x{pv}/us_per_step",
+             st["mean_us"], "",
              config={"case": case, "n": n, "mesh": f"{pu}x{pv}",
-                     **fused.plan_config()})
+                     **fused.plan_config()},
+             stats=st, model_us=fused.predict_step_us())
 
 
 # ---------------------------------------------------------------------------
@@ -285,13 +323,22 @@ BENCHES = {
 }
 
 
+def _trace_path_for(json_path: str) -> str:
+    base = json_path[:-5] if json_path.endswith(".json") else json_path
+    return base + ".trace.json"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help=f"comma-separated benchmark names; known: "
                          f"{','.join(sorted(BENCHES))}")
     ap.add_argument("--json", dest="json_path", default="",
-                    help="also write rows as a bench-fft/v1 JSON document")
+                    help="also write rows as a bench-fft/v2 JSON document")
+    ap.add_argument("--trace", dest="trace_path", default=None,
+                    help="write a Chrome-trace JSON (Perfetto-loadable) of "
+                         "the run; defaults to <json-stem>.trace.json when "
+                         "--json is given, '' disables")
     ap.add_argument("--list", action="store_true",
                     help="print the known --only workload names and exit")
     args = ap.parse_args()
@@ -306,19 +353,43 @@ def main() -> None:
         # the CI perf gate would then wave through
         ap.error(f"unknown benchmark name(s) {', '.join(unknown)}; "
                  f"known: {', '.join(sorted(BENCHES))}")
+    trace_path = args.trace_path
+    if trace_path is None:
+        trace_path = _trace_path_for(args.json_path) if args.json_path else ""
+    if trace_path:
+        from repro import obs
+        obs.clear()
+        obs.enable()
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
-    if args.json_path:
+    meta = None
+    if args.json_path or trace_path:
         import jax
 
+        from repro.core import perfmodel as pm
+        cal = pm.active_calibration()
+        meta = {"jax": jax.__version__,
+                "platform": jax.devices()[0].platform,
+                "device_kind": jax.devices()[0].device_kind,
+                "devices": len(jax.devices()),
+                "benches": names,
+                "calibration": {
+                    "active": cal is not None,
+                    "link_bytes_per_s": pm.link_bytes_per_s(),
+                    **({"fingerprint": cal.get("fingerprint", {})}
+                       if cal else {}),
+                }}
+    if args.json_path:
         from repro.tuning.cli import write_bench_json
-        write_bench_json(args.json_path, _ROWS,
-                         {"jax": jax.__version__,
-                          "platform": jax.devices()[0].platform,
-                          "device_kind": jax.devices()[0].device_kind,
-                          "devices": len(jax.devices()),
-                          "benches": names})
+        write_bench_json(args.json_path, _ROWS, meta)
+    if trace_path:
+        from repro import obs
+        obs.disable()
+        obs.write_chrome_trace(trace_path, obs.tracer, obs.metrics, meta=meta)
+        print(f"# wrote trace {trace_path} "
+              f"({len(obs.tracer.events())} spans); load in "
+              f"https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -73,6 +73,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import obs
 from repro.core import decomposition as dec
 from repro.core import transpose as tr
 from repro.core.engine_spec import ENGINE_FABRIC, EngineSpec  # noqa: F401
@@ -349,8 +350,9 @@ class OverlapRingEngine(TorusEngine):
     def _count_rounds(self, axes):
         """Σ ``wire_rounds(qᵢ)`` over the communicating mesh axes — the
         per-axis round model of the staged multi-axis exchange."""
-        self.exchange_rounds += sum(self.wire_rounds(q)
-                                    for q in tr.comm_axis_sizes(axes))
+        rounds = sum(self.wire_rounds(q) for q in tr.comm_axis_sizes(axes))
+        self.exchange_rounds += rounds
+        obs.metrics.inc(f"comm.engine_exchange_rounds.{self.name}", rounds)
 
     # ---- the transport hook ----------------------------------------------
     def _exchange(self, arrs, axes, *, split_axis: int, concat_axis: int,

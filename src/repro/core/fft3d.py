@@ -62,8 +62,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
-from repro.core import comm, precision
+from repro import compat, obs
+from repro.core import comm, perfmodel as pm, precision
 from repro.core.decomposition import CommDAG, PencilGrid, fft3d_dag
 from repro.core.engine_spec import EngineSpec
 from repro.kernels import ops as kops
@@ -162,6 +162,23 @@ def _ifftx(plan, xr, xi):
 # local (inside-shard_map) forward / inverse
 # ---------------------------------------------------------------------------
 
+def _phase_span(plan: "FFT3DPlan", name: str, dim: str):
+    """A ``trace/...`` span around one fold phase, annotated with the perf
+    model's wire prediction for that phase. These run *inside* jit tracing
+    of the shard_map body, so they fire once per compilation and time
+    tracing, not execution — they exist to pin the DAG structure and the
+    per-phase model numbers onto the trace (see README "Observability")."""
+    if not obs.is_enabled():
+        return obs.NULL_SPAN
+    g = plan.grid
+    sizes = g.u_sizes if dim == "u" else g.v_sizes
+    wire_us = pm.estimate_fold_seconds(
+        plan.n, g.pu, g.pv, sizes, comm_engine=plan.comm_engine) * 1e6
+    return obs.span(name, engine=plan.comm_engine, grid_dim=dim,
+                    dim_sizes=list(int(q) for q in sizes),
+                    model_wire_us=round(wire_us, 3))
+
+
 def fft3d_local(plan: FFT3DPlan, xr, xi=None):
     """Forward 3D FFT of the local pencil (any leading axes).
 
@@ -170,6 +187,7 @@ def fft3d_local(plan: FFT3DPlan, xr, xi=None):
     """
     eng = plan.engine()
     dag = plan.dag()
+    obs.metrics.inc("fft3d.retraces.forward")
     if xi is None:
         xi = jnp.zeros_like(xr)
 
@@ -178,13 +196,15 @@ def fft3d_local(plan: FFT3DPlan, xr, xi=None):
     def butterflies_x(cr, ci):
         return _fftx(plan, cr, ci)
 
-    yr, yi = eng.run_fold(dag.step("xy"), butterflies_x, (xr, xi))
+    with _phase_span(plan, "trace/fft3d.fold_xy", "u"):
+        yr, yi = eng.run_fold(dag.step("xy"), butterflies_x, (xr, xi))
 
     # Phase Y + Y↔Z fold over grid dim v (tasks E–H), slabbable along kx
     def butterflies_y(cr, ci):
         return kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
 
-    yr, yi = eng.run_fold(dag.step("yz"), butterflies_y, (yr, yi))
+    with _phase_span(plan, "trace/fft3d.fold_yz", "v"):
+        yr, yi = eng.run_fold(dag.step("yz"), butterflies_y, (yr, yi))
 
     # Phase Z (tasks I–K)
     return kops.fft1d(yr, yi, axis=-1, backend=plan.backend)
@@ -197,19 +217,22 @@ def ifft3d_local(plan: FFT3DPlan, kr, ki):
     """
     eng = plan.engine()
     dag = plan.dag()
+    obs.metrics.inc("fft3d.retraces.inverse")
     yr, yi = kops.fft1d(kr, ki, axis=-1, backend=plan.backend, inverse=True)
 
     def butterflies_y_inv(ur, ui):
         return kops.fft1d(ur, ui, axis=-1, backend=plan.backend, inverse=True)
 
-    yr, yi = eng.run_unfold(dag.step("yz"), butterflies_y_inv, (yr, yi))
+    with _phase_span(plan, "trace/fft3d.unfold_yz", "v"):
+        yr, yi = eng.run_unfold(dag.step("yz"), butterflies_y_inv, (yr, yi))
 
     def butterflies_x_inv(ur, ui):
         if plan.real:
             return (_ifftx(plan, ur, ui),)
         return _ifftx(plan, ur, ui)
 
-    out = eng.run_unfold(dag.step("xy"), butterflies_x_inv, (yr, yi))
+    with _phase_span(plan, "trace/fft3d.unfold_xy", "u"):
+        out = eng.run_unfold(dag.step("xy"), butterflies_x_inv, (yr, yi))
     if plan.real:
         return out[0] if isinstance(out, tuple) and len(out) == 1 else out
     return out
@@ -281,13 +304,15 @@ def spectral_roundtrip_local(plan: FFT3DPlan, kernel: DiagonalKernel,
 
     eng = plan.engine()
     dag = plan.dag()
+    obs.metrics.inc("fft3d.retraces.roundtrip")
     if xi is None:
         xi = jnp.zeros_like(xr)
 
     def butterflies_x(cr, ci):
         return _fftx(plan, cr, ci)
 
-    yr, yi = eng.run_fold(dag.step("xy"), butterflies_x, (xr, xi))
+    with _phase_span(plan, "trace/fft3d.fold_xy", "u"):
+        yr, yi = eng.run_fold(dag.step("xy"), butterflies_x, (xr, xi))
 
     def butterflies_y(cr, ci):
         return kops.fft1d(cr, ci, axis=-1, backend=plan.backend)
@@ -304,16 +329,18 @@ def spectral_roundtrip_local(plan: FFT3DPlan, kernel: DiagonalKernel,
         return kops.fft1d(zr, zi, axis=-1, backend=plan.backend,
                           inverse=True)
 
-    yr, yi = eng.run_roundtrip(dag.step("yz"), butterflies_y, middle,
-                               butterflies_y_inv, (yr, yi),
-                               diag=kernel.arrays())
+    with _phase_span(plan, "trace/fft3d.roundtrip_yz", "v"):
+        yr, yi = eng.run_roundtrip(dag.step("yz"), butterflies_y, middle,
+                                   butterflies_y_inv, (yr, yi),
+                                   diag=kernel.arrays())
 
     def butterflies_x_inv(ur, ui):
         if plan.real:
             return (_ifftx(plan, ur, ui),)
         return _ifftx(plan, ur, ui)
 
-    out = eng.run_unfold(dag.step("xy"), butterflies_x_inv, (yr, yi))
+    with _phase_span(plan, "trace/fft3d.unfold_xy", "u"):
+        out = eng.run_unfold(dag.step("xy"), butterflies_x_inv, (yr, yi))
     if plan.real:
         return out[0] if isinstance(out, tuple) and len(out) == 1 else out
     return out
@@ -421,4 +448,15 @@ def make_fft3d(mesh, n, *, spec: EngineSpec | None = None,
         inv = jax.jit(compat.shard_map(
             inv_local, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
             check_vma=False))
+    # dispatch-boundary spans (one branch + tail call while tracing is off);
+    # jit surfaces like ``.lower`` forward through the wrapper
+    attrs = {
+        "engine": plan.comm_engine, "n": list(n),
+        "mesh": "x".join(str(int(q)) for q in grid.u_sizes + grid.v_sizes),
+        "model_predicted_us": round(pm.estimate_plan_seconds(
+            n, grid.pu, grid.pv, spec=s, mu=max(components, 1),
+            pu_axes=grid.u_sizes, pv_axes=grid.v_sizes) * 1e6, 3),
+    }
+    fwd = obs.traced_call(fwd, "dispatch/fft3d.fwd", attrs)
+    inv = obs.traced_call(inv, "dispatch/fft3d.inv", attrs)
     return fwd, inv, plan

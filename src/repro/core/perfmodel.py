@@ -420,6 +420,29 @@ def _fold_wire_seconds(v_prime: float, sizes: tuple[int, ...], *,
     return sum(axis_seconds(q) for q in sizes)
 
 
+def estimate_fold_seconds(n, pu: int, pv: int, dim_sizes, *,
+                          comm_engine: str = "switched", mu: int = 1,
+                          link_bytes_per_s: float | None = None,
+                          s: int = S_BYTES) -> float:
+    """Wire seconds of one fold over one grid dimension (the per-phase
+    slice of :func:`estimate_plan_seconds`'s network term): V′ of Eq. 3.4
+    across ``dim_sizes`` — the per-mesh-axis factorization of the folding
+    dimension (``PencilGrid.u_sizes``/``v_sizes``) — on ``comm_engine``'s
+    fabric with the Eq. 5.5/5.6 penalty. Used by the observability layer
+    to annotate each fold span with its own model prediction."""
+    if comm_engine not in ENGINE_FABRIC:
+        raise ValueError(f"unknown comm engine {comm_engine!r}; "
+                         f"have {sorted(ENGINE_FABRIC)}")
+    nx, ny, nz = (n, n, n) if isinstance(n, int) else tuple(n)
+    p = max(pu, 1) * max(pv, 1)
+    v_prime = max(mu, 1) * s * (nx * ny * nz + 2 * ny * nz) / p  # Eq. 3.4
+    return _fold_wire_seconds(
+        v_prime, tuple(int(x) for x in dim_sizes),
+        fabric=ENGINE_FABRIC[comm_engine],
+        link_bytes_per_s=_resolve_link_rate(link_bytes_per_s),
+        bidi=comm_engine == "bidi_ring")
+
+
 def _comp_net_seconds(n, pu: int, pv: int, *, fabric: str, backend: str,
                       schedule: str, mu: int, r2c_packed: bool, r: int,
                       f_hz: float, link_bytes_per_s: float,

@@ -29,7 +29,7 @@ import math
 import jax.numpy as jnp
 from jax import lax
 
-from repro import compat
+from repro import compat, obs
 
 MODES = ("switched", "torus")
 
@@ -37,6 +37,30 @@ MODES = ("switched", "torus")
 _flat_axis_index = compat.flat_axis_index
 _axis_size = compat.axes_size
 _ppermute = lax.ppermute   # one wire-hop primitive (patchable in unit tests)
+
+
+def _meter_exchange(axes, p: int, rounds: int, arrs, *,
+                    dispatch_kind: str, dispatches: int) -> None:
+    """Trace-time wire accounting of one single-axis block exchange.
+
+    Runs while jit traces the shard_map body, so it fires once per
+    *compilation* from one rank's SPMD view — the analytically pinnable
+    quantities: ``comm.exchange_rounds.<axis>`` (wire rounds this exchange
+    costs), ``comm.exchanges.<axis>`` (exchange invocations, so tests can
+    divide out chunking), ``comm.wire_bytes`` (bytes this rank ships:
+    (p−1)/p of the payload), and per-primitive dispatch counters
+    (``comm.ppermute_dispatches`` / ``comm.all_to_all_dispatches`` /
+    ``comm.rdma_dispatches``). Shapes/dtypes are static under tracing, so
+    this is pure Python on ints — and a no-op branch when obs is disabled.
+    """
+    if not obs.is_enabled():
+        return
+    ax = "*".join(axes)
+    obs.metrics.inc(f"comm.exchanges.{ax}")
+    obs.metrics.inc(f"comm.exchange_rounds.{ax}", rounds)
+    obs.metrics.inc(f"comm.{dispatch_kind}_dispatches", dispatches)
+    payload = sum(int(a.size) * a.dtype.itemsize for a in arrs)
+    obs.metrics.inc("comm.wire_bytes", payload * (p - 1) // p)
 
 
 def axis_sizes(axes) -> tuple[int, ...]:
@@ -81,6 +105,8 @@ def all_to_all_blocks(x, axes: tuple[str, ...], *, split_axis: int,
         return x
     if mode == "switched":
         name = axes if len(axes) > 1 else axes[0]
+        _meter_exchange(axes, _axis_size(axes), 1, (x,),
+                        dispatch_kind="all_to_all", dispatches=1)
         return lax.all_to_all(x, name, split_axis=split_axis,
                               concat_axis=concat_axis, tiled=True)
     return _ring_all_to_all(x, axes, split_axis=split_axis,
@@ -178,6 +204,9 @@ def ring_exchange(arrs, axes, *, split_axis: int, concat_axis: int,
     p = _axis_size(axes)
     me = _flat_axis_index(axes)
     name = axes if len(axes) > 1 else axes[0]
+    _meter_exchange(axes, p, ring_rounds(p), arrs,
+                    dispatch_kind="ppermute",
+                    dispatches=ring_rounds(p) * len(arrs))
 
     xss = [stack_blocks(x, p, split_axis) for x in arrs]
     # own block stays local
@@ -225,6 +254,12 @@ def ring_exchange_bidi(arrs, axes, *, split_axis: int, concat_axis: int,
     p = _axis_size(axes)
     me = _flat_axis_index(axes)
     name = axes if len(axes) > 1 else axes[0]
+    # ppermute dispatches: one clockwise stream per round, plus the
+    # counter-clockwise stream except the shared-farthest-block round
+    ccw = bidi_rounds(p) - (1 if p % 2 == 0 else 0)
+    _meter_exchange(axes, p, bidi_rounds(p), arrs,
+                    dispatch_kind="ppermute",
+                    dispatches=(bidi_rounds(p) + ccw) * len(arrs))
 
     xss = [stack_blocks(x, p, split_axis) for x in arrs]
     # own block stays local

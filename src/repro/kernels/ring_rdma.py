@@ -451,6 +451,10 @@ def ring_exchange_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
                                   concat_axis=concat_axis, exchange=ex,
                                   interleave=interleave, payload=payload,
                                   diag=diag, inverse=inverse)
+    # both single-axis lowerings below bypass tr.ring_exchange, so the wire
+    # metering happens here (one fused kernel dispatch covers all rounds)
+    tr._meter_exchange(comm_axes, p, tr.ring_rounds(p), arrs,
+                       dispatch_kind="rdma", dispatches=1)
     if not interpret:
         # the fused kernel is atomic — a JAX-level thunk can't run between
         # its rounds, so non-fusable compute is emitted before the kernel
@@ -511,7 +515,11 @@ def ring_exchange_bidi_rdma(arrs, axes, *, split_axis: int, concat_axis: int,
                                   diag=diag, inverse=inverse)
     if not interpret:
         # the fused kernel is atomic (see ring_exchange_rdma): non-fusable
-        # compute is emitted before it, fusable compute rides the payload
+        # compute is emitted before it, fusable compute rides the payload.
+        # Only this branch meters: the interpret fallback below is
+        # tr.ring_exchange_bidi, which meters its own rounds.
+        tr._meter_exchange(comm_axes, p, tr.bidi_rounds(p), arrs,
+                           dispatch_kind="rdma", dispatches=1)
         follow = interleave() if interleave is not None else None
         outs, fused = _ring_rdma_tpu(arrs, comm_axes,
                                      split_axis=split_axis,

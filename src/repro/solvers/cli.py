@@ -41,11 +41,20 @@ def build_parser() -> argparse.ArgumentParser:
                          "step instead of the pipelined/switched default")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the per-step observable lines")
+    ap.add_argument("--trace", dest="trace_path", default="",
+                    help="write a Chrome-trace JSON (Perfetto-loadable) of "
+                         "the run: dispatch/solver.step spans with the "
+                         "perf-model prediction plus the wire counters")
     return ap
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+
+    if args.trace_path:
+        from repro import obs
+        obs.clear()
+        obs.enable()
 
     from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
     pu, pv = parse_mesh_arg(args.mesh)
@@ -121,6 +130,14 @@ def main(argv=None) -> int:
     print(f"{args.case}: {'OK' if ok else 'FAILED'}   "
           f"{wall / max(args.steps, 1) * 1e3:.1f} ms/step "
           f"(incl. compile)")
+    if args.trace_path:
+        from repro import obs
+        obs.disable()
+        obs.write_chrome_trace(args.trace_path, obs.tracer, obs.metrics)
+        print(f"wrote trace {args.trace_path} "
+              f"({len(obs.tracer.events())} spans)")
+        if not args.quiet:
+            print(obs.summary_table(obs.tracer, obs.metrics))
     return 0 if ok else 1
 
 

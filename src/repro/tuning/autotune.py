@@ -18,6 +18,7 @@ import math
 
 import numpy as np
 
+from repro import obs
 from repro.core import perfmodel as pm
 from repro.core.decomposition import PencilGrid
 from repro.tuning.cache import PlanCache, problem_fingerprint
@@ -135,10 +136,13 @@ def autotune(mesh, n, *, real: bool = False, components: int = 0,
     rows = []
     for cand in keep:
         try:
-            us_fwd, us_inv = time_candidate_pair(
-                mesh, n, cand, real=real, components=components, dtype=dtype,
-                u_axes=u_axes, v_axes=v_axes, iters=iters,
-                time_inverse=inv_weight > 0)
+            with obs.span("tune/candidate", candidate=cand.name,
+                          problem=key) if obs.is_enabled() else obs.NULL_SPAN:
+                us_fwd, us_inv = time_candidate_pair(
+                    mesh, n, cand, real=real, components=components,
+                    dtype=dtype, u_axes=u_axes, v_axes=v_axes, iters=iters,
+                    time_inverse=inv_weight > 0)
+            obs.metrics.inc("tuning.candidates_timed")
         except Exception as e:  # invalid on this substrate — drop, keep going
             if verbose:
                 print(f"  tune {cand.name}: FAILED ({type(e).__name__}: {e})")

@@ -94,7 +94,11 @@ class PlanCache:
         return data
 
     def get(self, key: str) -> dict | None:
-        return self._load()["entries"].get(key)
+        from repro import obs
+        entry = self._load()["entries"].get(key)
+        obs.metrics.inc("plan_cache.hits" if entry is not None
+                        else "plan_cache.misses")
+        return entry
 
     def put(self, key: str, entry: dict) -> None:
         data = self._load()

@@ -214,12 +214,19 @@ def run_calibration(mesh, *, quick: bool = False, iters: int | None = None,
     """Run both microbenchmarks and assemble the calibration document."""
     from repro.core.decomposition import PencilGrid
 
+    from repro import obs
+
     if iters is None:
         iters = 2 if quick else 5
     rows, length = (16, 64) if quick else (64, 256)
     grid = PencilGrid.from_mesh(mesh)
-    overheads, link = measure_engine_overheads(mesh, iters=iters,
-                                               verbose=verbose)
+    with obs.span("tune/calibrate.engines", mesh=f"{grid.pu}x{grid.pv}") \
+            if obs.is_enabled() else obs.NULL_SPAN:
+        overheads, link = measure_engine_overheads(mesh, iters=iters,
+                                                   verbose=verbose)
+    with obs.span("tune/calibrate.backends"):
+        weights = measure_backend_weights(
+            rows=rows, length=length, iters=iters, verbose=verbose)
     doc = {
         "schema": SCHEMA,
         "fingerprint": substrate_fingerprint(),
@@ -227,8 +234,7 @@ def run_calibration(mesh, *, quick: bool = False, iters: int | None = None,
         "quick": bool(quick),
         "iters": int(iters),
         "engine_message_overhead_s": overheads,
-        "backend_compute_weight": measure_backend_weights(
-            rows=rows, length=length, iters=iters, verbose=verbose),
+        "backend_compute_weight": weights,
         "created": datetime.datetime.now(datetime.timezone.utc).isoformat(),
     }
     if link > 0:

@@ -25,13 +25,24 @@ import os
 import sys
 
 
+#: current bench-document schema: v2 rows may carry ``p50_us``/``p95_us``
+#: (tail timing) and ``model_predicted_us``/``model_err`` (perf-model drift)
+#: next to ``us_per_call``; readers accept both generations
+BENCH_SCHEMA = "bench-fft/v2"
+BENCH_SCHEMAS = ("bench-fft/v1", BENCH_SCHEMA)
+
+
 def write_bench_json(path: str, rows: list, meta: dict) -> None:
-    """Write/merge ``BENCH_fft.json``: same-name rows are replaced in place."""
-    doc = {"schema": "bench-fft/v1", "meta": meta, "rows": []}
+    """Write/merge ``BENCH_fft.json``: same-name rows are replaced in place.
+
+    Always writes the current schema; an existing v1 document's rows are
+    merged and carried forward into the upgraded document.
+    """
+    doc = {"schema": BENCH_SCHEMA, "meta": meta, "rows": []}
     try:
         with open(path) as f:
             old = json.load(f)
-        if old.get("schema") == doc["schema"] and isinstance(old.get("rows"), list):
+        if old.get("schema") in BENCH_SCHEMAS and isinstance(old.get("rows"), list):
             doc["rows"] = [r for r in old["rows"]
                            if r.get("name") not in {x["name"] for x in rows}]
             doc["meta"] = {**old.get("meta", {}), **meta}
@@ -74,7 +85,16 @@ def main(argv=None) -> int:
                     help="benchmark-rows output ('' disables)")
     ap.add_argument("--force", action="store_true",
                     help="ignore any cached plan and re-time")
+    ap.add_argument("--trace", dest="trace_path", default="",
+                    help="write a Chrome-trace JSON (Perfetto-loadable) of "
+                         "the sweep: one tune/candidate span per timed "
+                         "candidate plus the wire/cache counters")
     args = ap.parse_args(argv)
+
+    if args.trace_path:
+        from repro import obs
+        obs.clear()
+        obs.enable()
 
     from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
     pu, pv = parse_mesh_arg(args.mesh)
@@ -145,6 +165,12 @@ def main(argv=None) -> int:
                 "argv": list(argv) if argv is not None else sys.argv[1:]}
         write_bench_json(args.json_path, rows, meta)
         print(f"wrote {args.json_path} ({len(rows)} rows)")
+    if args.trace_path:
+        from repro import obs
+        obs.disable()
+        obs.write_chrome_trace(args.trace_path, obs.tracer, obs.metrics)
+        print(f"wrote trace {args.trace_path} "
+              f"({len(obs.tracer.events())} spans)")
     return 0
 
 

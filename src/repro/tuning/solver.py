@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import datetime
 
+from repro import obs
 from repro.core import perfmodel as pm
 from repro.core.decomposition import PencilGrid
 from repro.tuning.autotune import TuneResult, _estimate
@@ -115,8 +116,11 @@ def autotune_solver_step(mesh, case: str, n, *, dtype="float64",
     rows = []
     for cand in keep:
         try:
-            us = time_solver_step(mesh, case, n, cand, dtype=dtype,
-                                  params=params, iters=iters)
+            with obs.span("tune/candidate", candidate=cand.name, case=case,
+                          problem=key) if obs.is_enabled() else obs.NULL_SPAN:
+                us = time_solver_step(mesh, case, n, cand, dtype=dtype,
+                                      params=params, iters=iters)
+            obs.metrics.inc("tuning.candidates_timed")
         except Exception as e:  # invalid on this substrate — drop, keep going
             if verbose:
                 print(f"  tune {case}/{cand.name}: FAILED "

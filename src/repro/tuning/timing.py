@@ -1,13 +1,33 @@
 """Wall-clock timing with compile/warm-up discipline.
 
 One call compiles and warms the function (excluded from the measurement),
-then the timed loop runs ``iters`` calls back-to-back and blocks once at the
-end — the same discipline as ``benchmarks/run.py`` (which now imports this).
+then the timed loop runs. :func:`time_us` keeps the historical contract —
+``iters`` calls back-to-back, one block at the end, mean per call — which is
+the cheapest schedule but sees only the mean. :func:`time_stats` blocks every
+call and returns the distribution (mean/p50/p95/min), which the benchmark
+suite uses to expose tail behavior alongside the mean.
+
+Both refuse functions that **donate** their input buffers: a jit with
+``donate_argnums`` invalidates the caller's arrays on the first (warm-up)
+call, and every timed call after that would silently recompile or crash on
+deleted buffers. The guard detects it right after warm-up (the donated
+``jax.Array`` reports ``is_deleted()``) and raises instead of timing garbage.
 """
 
 from __future__ import annotations
 
 import time
+
+
+def _check_not_donated(fn, args) -> None:
+    """Raise if the warm-up call consumed (donated) any input buffer."""
+    for i, a in enumerate(args):
+        deleted = getattr(a, "is_deleted", None)
+        if callable(deleted) and deleted():
+            raise ValueError(
+                f"argument {i} was donated/deleted by {fn!r} during warm-up; "
+                "timing loops need reusable inputs — drop donate_argnums or "
+                "pass fresh copies")
 
 
 def time_us(fn, *args, iters: int = 5) -> float:
@@ -17,9 +37,48 @@ def time_us(fn, *args, iters: int = 5) -> float:
     if iters < 1:
         raise ValueError(f"iters must be >= 1, got {iters}")
     jax.block_until_ready(fn(*args))  # compile + warm
+    _check_not_donated(fn, args)
     t0 = time.perf_counter()
     out = None
     for _ in range(iters):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _percentile(sorted_us: list[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending sample (q in [0, 100])."""
+    idx = max(0, min(len(sorted_us) - 1,
+                     round(q / 100.0 * (len(sorted_us) - 1))))
+    return sorted_us[idx]
+
+
+def time_stats(fn, *args, iters: int = 5) -> dict:
+    """Distribution of per-call wall times of ``fn(*args)``.
+
+    Compiles and warms once (excluded), then times ``iters`` calls each
+    blocked individually, and returns
+    ``{"mean_us", "p50_us", "p95_us", "min_us", "iters"}`` (nearest-rank
+    percentiles). Per-call blocking forgoes cross-call pipelining, so the
+    mean here can sit slightly above :func:`time_us`'s on substrates with
+    async dispatch — it buys per-call samples the batch schedule cannot see.
+    """
+    import jax
+
+    if iters < 1:
+        raise ValueError(f"iters must be >= 1, got {iters}")
+    jax.block_until_ready(fn(*args))  # compile + warm
+    _check_not_donated(fn, args)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    return {
+        "mean_us": sum(samples) / len(samples),
+        "p50_us": _percentile(samples, 50.0),
+        "p95_us": _percentile(samples, 95.0),
+        "min_us": samples[0],
+        "iters": iters,
+    }

@@ -53,6 +53,49 @@ def expected_c2c(g):
     return np.fft.fftn(np.asarray(g, np.complex128), axes=(0, 1, 2)).transpose(2, 0, 1)
 
 
+def check_wire_metrics(mesh, n, axes_kw, engines, xr, xi):
+    """The ``repro.obs`` trace-time wire counters must pin each engine's
+    analytic round complexity: per communicating mesh axis (or product
+    group, for the switched crossbar), ``comm.exchange_rounds.<ax>`` ==
+    ``comm.exchanges.<ax>`` × the engine's ``wire_rounds(q)``."""
+    from repro import obs
+    from repro.core import transpose as tr
+    from repro.core.comm import ENGINES
+
+    sizes = dict(mesh.shape)
+    for name in engines:
+        with obs.capture() as (_tracer, met):
+            fwd, _inv, _plan = make_fft3d(mesh, n,
+                                          spec=EngineSpec(engine=name),
+                                          **axes_kw)
+            fwd(xr, xi)
+        if name == "switched":
+            # one all_to_all per fold over the (possibly multi-axis)
+            # product group — a single crossbar round whatever its size
+            assert met.get("comm.all_to_all_dispatches") > 0, met.snapshot()
+            groups = [("*".join(g), math.prod(sizes[a] for a in g))
+                      for g in (axes_kw["u_axes"], axes_kw["v_axes"])]
+            per_exchange = lambda q: 1  # noqa: E731
+        else:
+            # ring engines transpose axis-by-axis (the staged multi-axis
+            # path), so the counters carry per-axis labels
+            groups = [(a, sizes[a])
+                      for g in (axes_kw["u_axes"], axes_kw["v_axes"])
+                      for a in g]
+            per_exchange = getattr(ENGINES[name], "wire_rounds",
+                                   tr.ring_rounds)
+        for ax, q in groups:
+            if q <= 1:  # 1-rank dimension: the exchange degenerates away
+                continue
+            n_ex = met.get(f"comm.exchanges.{ax}")
+            assert n_ex > 0, (name, ax, met.snapshot())
+            got = met.get(f"comm.exchange_rounds.{ax}")
+            want = n_ex * per_exchange(q)
+            assert got == want, (name, ax, got, want, met.snapshot())
+        assert met.get("comm.wire_bytes") > 0, (name, met.snapshot())
+        print(f"CHECK wire_metrics_{name} OK", flush=True)
+
+
 def run(dims: tuple[int, ...] = (4, 2), engine: str = ""):
     if len(dims) == 2:
         mesh = compat.make_mesh(dims, ("data", "model"))
@@ -156,6 +199,7 @@ def run(dims: tuple[int, ...] = (4, 2), engine: str = ""):
                   f"(max|fused-composed|={diff:.1e})", flush=True)
 
     if engine:
+        check_wire_metrics(mesh, n, axes_kw, [engine], xr, xi)
         print("ALL_OK", flush=True)
         return
 
@@ -194,6 +238,12 @@ def run(dims: tuple[int, ...] = (4, 2), engine: str = ""):
         kr, ki = fwd(xr, xi)
         assert rel(np.asarray(kr) + 1j * np.asarray(ki), want) < 1e-9, eng3
     print("CHECK multipod_u_axes OK", flush=True)
+
+    # on the same 3-axis mesh, the wire counters must see one staged ring
+    # per u axis on the ring engines and one crossbar exchange on switched
+    check_wire_metrics(mesh3, n,
+                       dict(u_axes=("pod", "data"), v_axes=("model",)),
+                       ("switched", "pallas_ring", "bidi_ring"), xr, xi)
 
     print("ALL_OK", flush=True)
 

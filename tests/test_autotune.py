@@ -243,7 +243,7 @@ def test_cli_writes_cache_and_bench_json(tmp_path):
     assert out.returncode == 0, out.stderr[-3000:]
     assert "selected [measured sweep]" in out.stdout
     doc = json.load(open(bench))
-    assert doc["schema"] == "bench-fft/v1"
+    assert doc["schema"] == "bench-fft/v2"
     names = [r["name"] for r in doc["rows"]]
     assert any(n.endswith("/selected") for n in names)
     assert all({"name", "us_per_call", "config"} <= set(r) for r in doc["rows"])

@@ -1,6 +1,7 @@
 """The bench regression gate (``benchmarks/compare.py``): row matching,
-threshold semantics, exit codes, and the soft-pass path CI relies on for
-the first run (no baseline artifact yet)."""
+threshold semantics, exit codes, the soft-pass path CI relies on for
+the first run (no baseline artifact yet), v1/v2 schema interop, and the
+predicted-vs-measured model-drift gate."""
 
 import json
 import os
@@ -10,14 +11,22 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _doc(rows, meta=None):
-    return {"schema": "bench-fft/v1", "meta": meta or {}, "rows": rows}
+def _doc(rows, meta=None, schema="bench-fft/v1"):
+    return {"schema": schema, "meta": meta or {}, "rows": rows}
 
 
-def _write(path, rows, meta=None):
+def _write(path, rows, meta=None, schema="bench-fft/v1"):
     with open(path, "w") as f:
-        json.dump(_doc(rows, meta), f)
+        json.dump(_doc(rows, meta, schema), f)
     return str(path)
+
+
+def _mrow(name, us, err):
+    """A v2 measured row carrying a perf-model prediction with signed
+    relative error ``err`` (measured/predicted - 1)."""
+    return {"name": name, "us_per_call": us, "config": {},
+            "model_predicted_us": round(us / (1.0 + err), 3),
+            "model_err": err}
 
 
 def _run(*args):
@@ -176,6 +185,74 @@ def test_expect_comma_separated_globs(tmp_path):
                 "--expect", "fft_pallas_ring*").returncode == 0
     assert _run(missing, one, "--expect", "fft_overlap_ring*",
                 "--expect", "fft_pallas_ring*").returncode == 2
+
+
+def test_v2_schema_interop_with_v1_baseline(tmp_path):
+    # a v1 baseline diffs against a v2 document (and vice versa): the
+    # measured-row comparison only needs name/us_per_call
+    base = _write(tmp_path / "base.json",
+                  [{"name": "fft_switched/fwd", "us_per_call": 100.0,
+                    "config": {}}])
+    new = _write(tmp_path / "new.json", [_mrow("fft_switched/fwd", 101.0, 0.05)],
+                 schema="bench-fft/v2")
+    assert _run(base, new).returncode == 0
+    assert _run(new, base).returncode == 0
+    # an unknown schema generation is still rejected
+    bad = _write(tmp_path / "bad.json", [], schema="bench-fft/v99")
+    assert _run(base, bad).returncode == 2
+
+
+def test_model_drift_gate_fails_on_drift_alone(tmp_path):
+    rows_ok = [_mrow("fft_a/fwd", 100.0, 0.05), _mrow("fft_b/fwd", 200.0, -0.04),
+               _mrow("fft_c/fwd", 300.0, 0.06)]
+    base = _write(tmp_path / "base.json", rows_ok, schema="bench-fft/v2")
+    same = _write(tmp_path / "same.json", rows_ok, schema="bench-fft/v2")
+    out = _run(base, same, "--model-drift-threshold", "0.5")
+    assert out.returncode == 0, out.stdout
+    assert "model drift" in out.stdout and "OK" in out.stdout
+
+    # measured times unchanged (no perf regression) but the predictions
+    # walked away from reality -> the drift gate alone fails the run
+    rows_bad = [_mrow("fft_a/fwd", 100.0, 0.9), _mrow("fft_b/fwd", 200.0, -0.04),
+                _mrow("fft_c/fwd", 300.0, 0.85)]
+    bad = _write(tmp_path / "bad.json", rows_bad, schema="bench-fft/v2")
+    out = _run(base, bad, "--model-drift-threshold", "0.5")
+    assert out.returncode == 1, out.stdout
+    assert "model drifted" in out.stdout
+    # without the flag the gate is off and the same documents pass
+    assert _run(base, bad).returncode == 0
+    # --ignore excludes rows from the drift median too: dropping the two
+    # drifted rows leaves only the healthy one and the gate passes
+    out = _run(base, bad, "--model-drift-threshold", "0.5",
+               "--ignore", "fft_a/*", "--ignore", "fft_c/*")
+    assert out.returncode == 0, out.stdout
+
+
+def test_model_drift_gate_requires_predictions_in_new_doc(tmp_path):
+    # the gate guards the model's health: a new document that stopped
+    # emitting predictions fails loud (like --expect), baseline or not
+    base = _write(tmp_path / "base.json", [_mrow("a", 100.0, 0.05)],
+                  schema="bench-fft/v2")
+    plain = _write(tmp_path / "plain.json",
+                   [{"name": "a", "us_per_call": 100.0, "config": {}}])
+    out = _run(base, plain, "--model-drift-threshold", "0.5")
+    assert out.returncode == 2
+    assert "no model_err rows" in out.stdout
+    missing = str(tmp_path / "nope.json")
+    assert _run(missing, plain,
+                "--model-drift-threshold", "0.5").returncode == 2
+
+
+def test_model_drift_gate_pre_v2_baseline_soft_records(tmp_path):
+    # a pre-v2 baseline artifact has no error reference yet: record this
+    # run's error as the new reference instead of gating against nothing
+    base = _write(tmp_path / "base.json",
+                  [{"name": "a", "us_per_call": 100.0, "config": {}}])
+    new = _write(tmp_path / "new.json", [_mrow("a", 100.0, 0.9)],
+                 schema="bench-fft/v2")
+    out = _run(base, new, "--model-drift-threshold", "0.5")
+    assert out.returncode == 0, out.stdout
+    assert "new reference" in out.stdout
 
 
 def test_bench_run_list_prints_workload_names():
