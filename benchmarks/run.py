@@ -12,6 +12,8 @@ the run — auto-derived as ``<json>.trace.json`` when ``--json`` is given;
 ``--trace ''`` disables.
 
     PYTHONPATH=src python -m benchmarks.run [--only a,b,c] [--json BENCH_fft.json]
+    PYTHONPATH=src python -m benchmarks.run --only solvers,serving \\
+        --json BENCH_fft.json --trace bench.trace.json
 
 ``--list`` prints the known ``--only`` workload names (one per line) and
 exits — the discovery aid for the exit-2 unknown-name path.
@@ -288,6 +290,56 @@ def bench_solvers(n: int = 16):
 
 
 # ---------------------------------------------------------------------------
+# Measured: batched solver serving (requests/s + latency tails under a burst
+# load — the repro.serving layer's rows on the perf trajectory)
+# ---------------------------------------------------------------------------
+
+def bench_serving(n: int = 16, n_requests: int = 8, steps: int = 2):
+    """Load-generate against an in-process SimServer at two batch limits.
+
+    Burst-submits ``n_requests`` same-fingerprint heat requests and drains;
+    ``max_batch=1`` is the no-batching baseline, ``max_batch=4`` the batched
+    path (⌈8/4⌉ = 2 sharded steps per Δt instead of 8). Rows carry the mean
+    request latency as ``us_per_call`` with p50/p95 (row schema) and p99
+    (serving extra) tails, plus a lower-is-better ``us_per_request``
+    throughput row (``requests_per_s`` in its config). A compile warm-up
+    run per batch limit keeps XLA compilation off the latency rows — the
+    registry keeps engines hot, which is the layer's whole point.
+    """
+    import jax
+
+    from repro import compat
+    from repro.serving import SimRequest, SimServer, run_load
+
+    ndev = len(jax.devices())
+    pu, pv = (4, 2) if ndev >= 8 else ((2, 1) if ndev >= 2 else (1, 1))
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    case = "heat"
+
+    def make_requests():
+        return [SimRequest(case=case, n=n, steps=steps, dtype="float32",
+                           scale=1.0 + 0.25 * i, request_id=f"req-{i}")
+                for i in range(n_requests)]
+
+    for max_batch in (1, 4):
+        server = SimServer(mesh, max_batch=max_batch, use_plan_cache=False)
+        run_load(server, make_requests())        # compile warm-up, untimed
+        report = run_load(server, make_requests())
+        st = report.stats()
+        assert st["n_failed"] == 0, report.results
+        cfg = {"case": case, "n": n, "mesh": f"{pu}x{pv}",
+               "steps": steps, "requests": st["n_requests"],
+               "max_batch": max_batch,
+               "requests_per_s": st["requests_per_s"]}
+        base = f"serving_{case}/N{n}/mesh{pu}x{pv}/b{max_batch}"
+        _row(f"{base}/latency", st["mean_us"], "", config=cfg,
+             stats={"p50_us": st["p50_us"], "p95_us": st["p95_us"]})
+        _ROWS[-1]["p99_us"] = st["p99_us"]
+        _row(f"{base}/us_per_request",
+             st["wall_s"] * 1e6 / max(st["n_requests"], 1), "", config=cfg)
+
+
+# ---------------------------------------------------------------------------
 # Measured: autotuned vs default 3D-FFT plan (single device, Pu=Pv=1)
 # ---------------------------------------------------------------------------
 
@@ -320,6 +372,7 @@ BENCHES = {
     "fft_engines": bench_fft_engines,
     "fft_autotune": bench_fft_autotune,
     "solvers": bench_solvers,
+    "serving": bench_serving,
 }
 
 

@@ -1,25 +1,54 @@
-"""Serving driver: batched prefill + greedy decode with a KV cache.
+"""Serving drivers — the LM token path and the spectral-simulation path.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-        --batch 4 --prompt-len 32 --gen 16
+Two serving modes share this entry point:
+
+* **LM serving** (the default): batched prefill + greedy decode with a KV
+  cache over the ``repro.models`` transformer stack::
+
+      PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \\
+          --batch 4 --prompt-len 32 --gen 16
+
+* **simulation serving** (``--sim``): every other argument is forwarded to
+  ``repro.serving.cli`` — the batched spectral-solver server that groups
+  same-fingerprint :class:`~repro.serving.request.SimRequest`\\ s into one
+  sharded solver step and streams observables back (see ``docs/serving.md``)::
+
+      PYTHONPATH=src python -m repro.launch.serve --sim --case heat --n 16 \\
+          --mesh 4x2 --requests 8 --steps 3 --max-batch 4 \\
+          --trace serve.trace.json
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_config
-from repro.launch.mesh import make_dev_mesh, mesh_axes
-from repro.models.transformer import RunCfg, decode_step, init_model, prefill
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--sim" in argv:
+        argv.remove("--sim")
+        from repro.serving.cli import main as sim_main
+        return sim_main(argv)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.launch.mesh import make_dev_mesh, mesh_axes
+    from repro.models.transformer import (RunCfg, decode_step, init_model,
+                                          prefill)
+
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
+        description="LM serving driver (batched prefill + greedy decode); "
+                    "--sim switches to the batched spectral-simulation "
+                    "server (repro.serving.cli flags apply).")
+    ap.add_argument("--sim", action="store_true",
+                    help="serve spectral simulations instead of LM tokens "
+                         "(remaining args go to repro.serving.cli)")
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

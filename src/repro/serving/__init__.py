@@ -1,0 +1,44 @@
+"""``repro.serving`` — the batched spectral-simulation serving layer.
+
+From "request arrives" to "observables stream back": the continuous-
+batching problem shape LLM inference serves, applied to the FFT-cycle
+solver workloads of ``repro.solvers``. The pieces, each its own module:
+
+* :mod:`~repro.serving.request` — the :class:`SimRequest` /
+  :class:`SimResult` contract, the streamed :class:`StepUpdate` events, the
+  requester's :class:`Ticket`, and :func:`request_key`, the batching
+  fingerprint (case, shape, dtype, physics params, plan config).
+* :mod:`~repro.serving.queue` — :class:`RequestQueue`: per-fingerprint
+  FIFO lanes, globally-fair batch selection, bounded-depth backpressure
+  (:class:`QueueFullError`).
+* :mod:`~repro.serving.registry` — :class:`EngineRegistry`: persistent
+  compiled solver engines, one per fingerprint, with tuned plans reused
+  from the ``repro.tuning`` plan cache — admission never recompiles a hot
+  shape.
+* :mod:`~repro.serving.server` — :class:`SimServer`: the scheduling loop
+  that advances each admitted batch as **one sharded solver step over a
+  leading batch axis** (``SpectralSolver.batched_step``) and streams
+  per-step observables back per lane, bitwise-identical to solo runs.
+* :mod:`~repro.serving.loadgen` — :func:`run_load` / :class:`LoadReport`:
+  burst and paced arrival schedules with requests/s and p50/p95/p99
+  latency tails, feeding the ``serving_*`` bench rows.
+
+``python -m repro.serving.cli`` (or ``python -m repro.launch.serve --sim``)
+drives a server from the command line; ``docs/serving.md`` documents the
+request lifecycle end to end.
+"""
+
+from __future__ import annotations
+
+from repro.serving.loadgen import LoadReport, percentile_us, run_load
+from repro.serving.queue import QueueFullError, RequestQueue
+from repro.serving.registry import EngineRegistry
+from repro.serving.request import (SimRequest, SimResult, StepUpdate, Ticket,
+                                   request_key)
+from repro.serving.server import SimServer, scaled_initial_fields
+
+__all__ = [
+    "SimRequest", "SimResult", "StepUpdate", "Ticket", "request_key",
+    "RequestQueue", "QueueFullError", "EngineRegistry", "SimServer",
+    "scaled_initial_fields", "run_load", "LoadReport", "percentile_us",
+]

@@ -1,0 +1,157 @@
+"""Batched spectral-simulation serving driver.
+
+    PYTHONPATH=src python -m repro.serving.cli --case heat --n 16 --mesh 4x2 \\
+        --requests 8 --steps 3 --max-batch 4 --validate --trace serve.trace.json
+
+Builds the Pu×Pv pencil mesh (faking host devices when needed), starts an
+in-process :class:`~repro.serving.server.SimServer`, and drives it with a
+load-generator schedule of ``--requests`` same-shape requests (initial
+amplitudes spread per request so the lanes are distinct trajectories).
+Prints the per-request latency table and the throughput/latency-tail
+summary; ``--validate`` additionally replays each streamed history through
+the case's analytic ``validate`` (non-zero exit on failure). ``--trace``
+writes a Perfetto-loadable Chrome trace of the run — ``serve/admit``
+admission spans, ``dispatch/serving.batch_step`` batch dispatches, and the
+``serving.*`` queue/batch counters and gauges.
+
+``python -m repro.launch.serve --sim ...`` forwards here, next to the LM
+serving path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="repro.serving.cli",
+        description="Serve batched spectral-simulation requests on one mesh.")
+    ap.add_argument("--case", default="heat",
+                    help="solver case (poisson | heat | navier_stokes | nls)")
+    ap.add_argument("--n", type=int, default=16, help="cubic grid extent N")
+    ap.add_argument("--steps", type=int, default=3,
+                    help="time steps per request")
+    ap.add_argument("--mesh", default="4x2", help="Pu x Pv pencil grid")
+    ap.add_argument("--dtype", default="float32",
+                    help="state dtype; float64 enables x64 for the process")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="load-generator request count")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="max same-fingerprint requests per sharded step")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="queue depth bound (backpressure; default unbounded)")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="arrival rate in requests/s (0 = burst all at once)")
+    ap.add_argument("--comm-engine", default="",
+                    help="pin the TransposeEngine for the fold "
+                         "communications (switched | torus | overlap_ring | "
+                         "pallas_ring | bidi_ring)")
+    ap.add_argument("--validate", action="store_true",
+                    help="replay each streamed history through the case's "
+                         "analytic validate()")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the per-request latency lines")
+    ap.add_argument("--trace", dest="trace_path", default="",
+                    help="write a Chrome-trace JSON (Perfetto-loadable) of "
+                         "the run: admission spans, batched step dispatches, "
+                         "and the serving.* queue/batch metrics")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.trace_path:
+        from repro import obs
+        obs.clear()
+        obs.enable()
+
+    from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
+    pu, pv = parse_mesh_arg(args.mesh)
+    ensure_host_devices(pu * pv)
+
+    import jax
+    import numpy as np
+
+    from repro import compat
+    from repro.core import precision
+
+    if np.dtype(args.dtype).itemsize >= 8:
+        precision.enable_x64()
+    if len(jax.devices()) < pu * pv:
+        raise SystemExit(f"need {pu * pv} devices for mesh {args.mesh}, "
+                         f"have {len(jax.devices())}")
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+
+    from repro.serving import (SimRequest, SimServer, request_key, run_load)
+    from repro.solvers import SOLVERS
+    if args.case not in SOLVERS:
+        raise SystemExit(f"unknown case {args.case!r}; have {sorted(SOLVERS)}")
+    if args.requests < 1:
+        raise SystemExit(f"--requests must be >= 1, got {args.requests}")
+
+    plan_cfg = {"comm_engine": args.comm_engine} if args.comm_engine else None
+    # distinct initial amplitudes: every lane is its own trajectory, but
+    # all share one fingerprint so the scheduler batches them
+    reqs = [SimRequest(case=args.case, n=args.n, steps=args.steps,
+                       dtype=args.dtype, plan_cfg=plan_cfg,
+                       scale=1.0 + 0.25 * i, request_id=f"req-{i}")
+            for i in range(args.requests)]
+    server = SimServer(mesh, max_batch=args.max_batch,
+                       max_pending=args.max_pending)
+    print(f"serve: case={args.case} N={args.n}^3 mesh={pu}x{pv} "
+          f"dtype={args.dtype} requests={args.requests} "
+          f"steps={args.steps} max_batch={args.max_batch} "
+          f"rate={'burst' if args.rate <= 0 else f'{args.rate:g}/s'} "
+          f"fingerprint={request_key(reqs[0])} "
+          f"[{jax.devices()[0].platform}:{len(jax.devices())} devices]",
+          flush=True)
+
+    t0 = time.time()
+    report = run_load(server, reqs, rate_hz=args.rate)
+    wall = time.time() - t0
+
+    failed = [r for r in report.results if not r.ok]
+    for r in report.results:
+        if args.quiet:
+            continue
+        tail = (f"FAILED: {r.error}" if not r.ok else
+                f"{len(r.history) - 1} steps  "
+                f"final t={r.history[-1]['t']:.4f}")
+        print(f"  {r.request.request_id:8s} batch={r.batch_size}  "
+              f"latency={r.latency_s * 1e3:8.2f} ms  {tail}", flush=True)
+    s = report.stats()
+    print(f"served {s['n_requests']} requests in {wall:.2f} s  "
+          f"({s['requests_per_s']:.2f} req/s incl. compile)  "
+          f"latency p50={s['p50_us'] / 1e3:.1f} ms "
+          f"p95={s['p95_us'] / 1e3:.1f} ms p99={s['p99_us'] / 1e3:.1f} ms",
+          flush=True)
+
+    ok = not failed
+    if args.validate and ok:
+        for r in report.results:
+            solver = server.registry.get(r.request)
+            v_ok, lines = solver.validate(r.history)
+            if not v_ok or not args.quiet:
+                for line in lines:
+                    print(f"  {r.request.request_id}: {line}")
+            ok = ok and v_ok
+        print(f"validate: {'OK' if ok else 'FAILED'} "
+              f"({len(report.results)} streamed histories)")
+    elif failed:
+        print(f"serve: {len(failed)} request(s) FAILED "
+              f"({failed[0].error})")
+
+    if args.trace_path:
+        from repro import obs
+        obs.disable()
+        obs.write_chrome_trace(args.trace_path, obs.tracer, obs.metrics)
+        print(f"wrote trace {args.trace_path} "
+              f"({len(obs.tracer.events())} spans)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,103 @@
+"""Load generator: drive a :class:`~repro.serving.server.SimServer` with a
+request schedule and report throughput and latency tails.
+
+Two arrival modes:
+
+* **burst** (``rate_hz=0``) — submit everything up front, then drain. This
+  measures the server's batching capacity: with K same-fingerprint
+  requests and ``max_batch=B`` the scheduler runs ⌈K/B⌉ batches, and the
+  per-request latencies include their queue wait.
+* **paced** (``rate_hz>0``) — submit at a fixed open-loop rate against the
+  *running* scheduler thread, the serving analogue of a steady request
+  stream.
+
+The report carries per-request latencies (submit → final observable, queue
+wait included), nearest-rank p50/p95/p99 tails, and requests/s over the
+whole run — the numbers ``benchmarks.run --only serving`` puts on the perf
+trajectory as ``serving_*`` rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.serving.request import SimRequest, SimResult
+from repro.serving.server import SimServer
+
+
+def percentile_us(latencies_us: list[float], frac: float) -> float:
+    """Nearest-rank percentile (the ``tuning.timing.time_stats``
+    convention), on an already-collected latency sample in µs."""
+    if not latencies_us:
+        return 0.0
+    vals = sorted(latencies_us)
+    rank = max(1, int(round(frac * len(vals) + 0.5)))
+    return vals[min(rank, len(vals)) - 1]
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """Aggregate of one load-generator run."""
+
+    results: list[SimResult]
+    wall_s: float                   # first submit → last result
+    rate_hz: float                  # requested arrival rate (0 = burst)
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.results)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for r in self.results if not r.ok)
+
+    @property
+    def requests_per_s(self) -> float:
+        return self.n_requests / self.wall_s if self.wall_s > 0 else 0.0
+
+    def latencies_us(self) -> list[float]:
+        return [r.latency_s * 1e6 for r in self.results if r.ok]
+
+    def stats(self) -> dict:
+        """The bench-row payload: mean/p50/p95/p99 latency + throughput."""
+        lat = self.latencies_us()
+        mean = sum(lat) / len(lat) if lat else 0.0
+        return {
+            "n_requests": self.n_requests,
+            "n_failed": self.n_failed,
+            "requests_per_s": round(self.requests_per_s, 3),
+            "mean_us": round(mean, 3),
+            "p50_us": round(percentile_us(lat, 0.50), 3),
+            "p95_us": round(percentile_us(lat, 0.95), 3),
+            "p99_us": round(percentile_us(lat, 0.99), 3),
+            "wall_s": round(self.wall_s, 6),
+        }
+
+
+def run_load(server: SimServer, requests: list[SimRequest], *,
+             rate_hz: float = 0.0) -> LoadReport:
+    """Submit ``requests`` against ``server`` and wait for every result.
+
+    Burst mode drains on the calling thread when no scheduler thread is
+    running (deterministic for tests); paced mode starts the scheduler
+    thread if needed and stops it again if this call started it.
+    """
+    started_here = False
+    if rate_hz > 0 and not server.running:
+        server.start()
+        started_here = True
+    t0 = time.monotonic()
+    tickets = []
+    for i, req in enumerate(requests):
+        if rate_hz > 0 and i:
+            # open-loop pacing against the schedule, not the previous send
+            time.sleep(max(0.0, t0 + i / rate_hz - time.monotonic()))
+        tickets.append(server.submit(req))
+    if not server.running:
+        server.serve_pending()
+    results = [t.result() for t in tickets]
+    wall = time.monotonic() - t0
+    if started_here:
+        server.stop()
+    return LoadReport(results=results, wall_s=wall, rate_hz=rate_hz)

@@ -1,0 +1,83 @@
+"""Persistent compiled-engine registry: admission never recompiles a hot
+shape.
+
+The registry maps a request fingerprint (:func:`repro.serving.request.
+request_key`) to a live :class:`~repro.solvers.base.SpectralSolver`
+instance. The first admission of a fingerprint builds the solver — and,
+when the request pins no explicit ``plan_cfg``, consults the persistent
+plan cache (``repro.tuning.cache``) under the solver's own
+``problem_key()`` so a previously autotuned plan is picked up without any
+timing sweep at admission time. Every later admission of the same
+fingerprint returns the same instance: its jitted step functions (solo and
+batched) stay warm, so serving a hot shape costs one dispatch, zero
+compiles. (Distinct *batch sizes* of a hot shape each compile once — jit's
+shape cache keys on B.)
+
+Counters: ``serving.engine_cache.hits`` / ``serving.engine_cache.misses``
+(per admission lookup); the plan-cache consult shows up on the existing
+``plan_cache.hits`` / ``plan_cache.misses``.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro import obs
+from repro.serving.request import SimRequest, request_key
+
+
+class EngineRegistry:
+    """Compiled solver engines for one device mesh, keyed by fingerprint."""
+
+    def __init__(self, mesh, *, use_plan_cache: bool = True,
+                 cache_path: str | None = None):
+        self.mesh = mesh
+        self.use_plan_cache = use_plan_cache
+        self.cache_path = cache_path
+        self._engines: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def get(self, req: SimRequest, fingerprint: str | None = None):
+        """The (possibly shared) compiled solver serving ``req``'s shape."""
+        key = fingerprint or request_key(req)
+        with self._lock:
+            solver = self._engines.get(key)
+        if solver is not None:
+            obs.metrics.inc("serving.engine_cache.hits")
+            return solver
+        obs.metrics.inc("serving.engine_cache.misses")
+        solver = self._build(req)
+        with self._lock:
+            # a racing admission may have built it first — keep the winner
+            # so every requester of the fingerprint shares one jit cache
+            solver = self._engines.setdefault(key, solver)
+        return solver
+
+    def _build(self, req: SimRequest):
+        from repro.solvers import make_solver
+
+        plan_cfg = dict(req.plan_cfg) if req.plan_cfg is not None else None
+        solver = make_solver(req.case, self.mesh, req.n, dtype=req.dtype,
+                             plan_cfg=plan_cfg, **dict(req.params))
+        if plan_cfg is None and self.use_plan_cache:
+            # reuse a step-autotuned plan when one is cached for exactly
+            # this problem+substrate; solver construction is cheap (jit is
+            # lazy), so probing with the default plan first costs no compile
+            from repro.tuning.cache import PlanCache
+
+            entry = PlanCache(self.cache_path).get(solver.problem_key())
+            if entry is not None and entry.get("best"):
+                solver = make_solver(req.case, self.mesh, req.n,
+                                     dtype=req.dtype,
+                                     plan_cfg=dict(entry["best"]),
+                                     **dict(req.params))
+        return solver
+
+    def engines(self) -> dict[str, object]:
+        """Snapshot of the live fingerprint → solver map."""
+        with self._lock:
+            return dict(self._engines)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._engines)

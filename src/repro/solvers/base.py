@@ -30,6 +30,12 @@ Solvers whose spectral stage is a pointwise-diagonal k-space multiply
 :func:`repro.core.fft3d.spectral_roundtrip_local`, which streams the
 Y↔Z roundtrip as one slab pipeline when the plan's ``fused_roundtrip``
 knob is on (and is the plain composed cycle when it is off).
+
+The **batched** entry points (``batched_step`` / ``batched_observables``)
+advance a stack of B independent instances of the same problem — the same
+step body ``jax.vmap``-ed over an unsharded leading batch axis inside the
+same ``shard_map`` — in one dispatch on the mesh; ``repro.serving`` builds
+its request batching on them.
 """
 
 from __future__ import annotations
@@ -134,6 +140,64 @@ class SpectralSolver(abc.ABC):
         self._obsj = jax.jit(compat.shard_map(
             functools.partial(self.observables_fields, plan), mesh=mesh,
             in_specs=(spec,), out_specs=P(), check_vma=False))
+        self._batched_stepj = None   # built lazily by batched_step_fns()
+
+    # ---- batched stepping (the serving layer's entry point) --------------
+    def batch_spec(self) -> P:
+        """``field_spec()`` with an unsharded leading batch axis prepended:
+        B independent problem instances stacked along axis 0, each shard
+        holding the full batch of its own pencil."""
+        return P(None, *self.field_spec())
+
+    def batched_step_fns(self):
+        """``(step, observables)`` jitted over a leading batch axis.
+
+        ``step`` maps a fields pytree whose leaves carry an extra leading
+        axis of size B — B independent simulations of *this* problem,
+        stacked — through one sharded solver step: the per-instance
+        ``step_fields`` body is ``jax.vmap``-ed over the batch axis inside
+        the same ``shard_map`` the solo path compiles, so the whole batch
+        advances in a single dispatch on the mesh and each lane's
+        trajectory is bitwise what the solo ``step()`` computes (CI pins
+        this across the mesh × engine matrix). ``observables`` reduces the
+        same stack to ``{name: (B,) array}``.
+
+        Compiled lazily on first use and cached on the solver; jit's shape
+        cache keys on B, so a given batch size compiles once per solver.
+        """
+        if self._batched_stepj is None:
+            plan, mesh, bspec = self.plan, self.mesh, self.batch_spec()
+            self._batched_stepj = jax.jit(compat.shard_map(
+                jax.vmap(functools.partial(self.step_fields, plan)),
+                mesh=mesh, in_specs=(bspec,), out_specs=bspec,
+                check_vma=False))
+            self._batched_obsj = jax.jit(compat.shard_map(
+                jax.vmap(functools.partial(self.observables_fields, plan)),
+                mesh=mesh, in_specs=(bspec,), out_specs=P(None),
+                check_vma=False))
+        return self._batched_stepj, self._batched_obsj
+
+    def batched_step(self, fields):
+        """One Δt for a leading-batch-axis stack of field pytrees."""
+        return self.batched_step_fns()[0](fields)
+
+    def batched_observables(self, fields) -> dict:
+        """``{name: (B,) float array}`` diagnostics for a batched stack."""
+        return self.batched_step_fns()[1](fields)
+
+    def problem_key(self) -> str:
+        """This solver's plan-cache fingerprint key — the canonical id of
+        (case, shape, dtype, physics params, substrate) that
+        ``repro.tuning`` keys tuned plans by and ``repro.serving`` groups
+        batchable requests by."""
+        from repro.tuning.cache import problem_fingerprint
+
+        g = self.plan.grid
+        key, _ = problem_fingerprint(
+            self.n, g.pu, g.pv, real=self.real, components=self.components,
+            dtype=self.dtype.name, u_axes=g.u_axes, v_axes=g.v_axes,
+            case=self.case, solver_params=self.params())
+        return key
 
     # ---- public contract -------------------------------------------------
     def init_state(self, plan: FFT3DPlan | None = None) -> SolverState:

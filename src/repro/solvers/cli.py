@@ -3,12 +3,15 @@
     PYTHONPATH=src python -m repro.solvers.cli --case poisson --n 32 --mesh 4x2
     PYTHONPATH=src python -m repro.solvers.cli --case navier_stokes \\
         --n 16 --steps 4 --autotune
+    PYTHONPATH=src python -m repro.solvers.cli --case heat --n 16 --steps 2 \\
+        --mesh 4x2 --trace trace.json      # Perfetto-loadable span trace
 
 Builds the Pu×Pv pencil mesh (faking host devices when needed), constructs
 the solver — optionally on the plan ``repro.tuning.autotune_solver_step``
 picked by timing the case's *whole* step — runs ``--steps`` cycles printing
 the observables, and checks the case's analytic validation (non-zero exit
-on failure).
+on failure). ``--trace PATH`` records the run through ``repro.obs``
+(dispatch spans per step, wire counters) and writes a Chrome-trace JSON.
 """
 
 from __future__ import annotations

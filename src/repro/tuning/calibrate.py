@@ -1,6 +1,8 @@
 """Measured calibration of the analytic performance model.
 
     PYTHONPATH=src python -m repro.tuning.calibrate [--quick] [--mesh 4x2]
+    PYTHONPATH=src python -m repro.tuning.calibrate --quick --mesh 4x2 \\
+        --trace calib.trace.json   # tune/ span per measurement stage
 
 The perf model's pruning constants — ``ENGINE_MESSAGE_OVERHEAD_S`` (exposed
 per-message dispatch cost of each TransposeEngine) and
@@ -359,7 +361,16 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None,
                     help="output path (default: $REPRO_CALIBRATION or "
                          "~/.cache/repro/calibration.json)")
+    ap.add_argument("--trace", dest="trace_path", default="",
+                    help="write a Chrome-trace JSON (Perfetto-loadable) of "
+                         "the calibration run: one tune/ span per timed "
+                         "measurement stage")
     args = ap.parse_args(argv)
+
+    if args.trace_path:
+        from repro import obs
+        obs.clear()
+        obs.enable()
 
     from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
     pu, pv = parse_mesh_arg(args.mesh)
@@ -379,6 +390,12 @@ def main(argv=None) -> int:
           flush=True)
     doc = run_calibration(mesh, quick=args.quick, iters=args.iters,
                           verbose=True)
+    if args.trace_path:
+        from repro import obs
+        obs.disable()
+        obs.write_chrome_trace(args.trace_path, obs.tracer, obs.metrics)
+        print(f"wrote trace {args.trace_path} "
+              f"({len(obs.tracer.events())} spans)")
     problems = validate_calibration(doc)
     if problems:
         print("calibration NOT written — measurement produced an invalid "

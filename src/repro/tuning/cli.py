@@ -3,6 +3,8 @@
     PYTHONPATH=src python -m repro.tuning.cli --n 64 --mesh 4x2
     PYTHONPATH=src python -m repro.tuning.cli --n 16 --mesh 4x2 \\
         --case navier_stokes --dtype float64
+    PYTHONPATH=src python -m repro.tuning.cli --n 32 --mesh 4x2 \\
+        --trace tune.trace.json    # tune/ span per timed candidate
 
 Sweeps the ``FFT3DPlan`` space for the given problem on a Pu×Pv device mesh
 (host devices are faked to Pu·Pv when the machine has fewer — the flag is set

@@ -1,0 +1,109 @@
+"""Multi-device serving smoke (run in a subprocess so the fake
+device-count XLA flag is set before jax initializes).
+
+Usage: python tests/_dist_serving_check.py [--mesh PUxPV] [--engine NAME]
+(expects PYTHONPATH=src)
+
+The acceptance check the CI mesh × engine matrix names: two concurrent
+heat requests submitted to a :class:`repro.serving.SimServer` on the
+Pu×Pv pencil mesh (default 4x2) must batch into **one** sharded solver
+step over a leading batch axis, and every streamed per-step observable —
+including the accumulated ``t`` clock — must come back **bitwise
+identical** to a solo ``SpectralSolver`` run of the same request (exact
+float equality, no tolerance). A third request with a different
+fingerprint (nls) rides along to prove the queue groups by fingerprint
+instead of batching across engines. ``--engine`` pins the fold
+communications to one TransposeEngine so every matrix cell exercises its
+own collective path. Prints CHECK ... OK per assertion group, then ALL_OK.
+"""
+
+import argparse
+import math
+import sys
+
+from repro.launch.mesh import ensure_host_devices
+
+# the fake-device flag must be set before jax initializes, and the count
+# depends on the --mesh argument — peek at argv ahead of argparse
+_ndev = 8
+if "--mesh" in sys.argv[:-1]:
+    _dims = [int(t) for t in sys.argv[sys.argv.index("--mesh") + 1].split("x")]
+    _ndev = max(8, math.prod(_dims))
+ensure_host_devices(_ndev)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)
+
+from repro import compat, obs  # noqa: E402
+from repro.serving import (SimRequest, SimServer,  # noqa: E402
+                           request_key, scaled_initial_fields)
+from repro.solvers import SolverState  # noqa: E402
+
+
+def solo_history(solver, scale: float, steps: int) -> list:
+    """What an unbatched run records: same initial fields, same clocks."""
+    st = SolverState(fields=scaled_initial_fields(solver, scale))
+    history = [solver.observables(st)]
+    for _ in range(steps):
+        st = solver.step(st)
+        history.append(solver.observables(st))
+    return history
+
+
+def run(pu: int = 4, pv: int = 2, engine: str = ""):
+    assert len(jax.devices()) >= pu * pv, jax.devices()
+    mesh = compat.make_mesh((pu, pv), ("data", "model"))
+    plan_cfg = {"comm_engine": engine} if engine else None
+
+    heat = [SimRequest(case="heat", n=16, steps=3, dtype="float64",
+                       plan_cfg=plan_cfg, scale=1.0, request_id="heat-0"),
+            SimRequest(case="heat", n=16, steps=2, dtype="float64",
+                       plan_cfg=plan_cfg, scale=1.75, request_id="heat-1")]
+    nls = SimRequest(case="nls", n=16, steps=2, dtype="float64",
+                     plan_cfg=plan_cfg, request_id="nls-0")
+    assert request_key(heat[0]) == request_key(heat[1])
+    assert request_key(nls) != request_key(heat[0])
+
+    with obs.capture() as (_, metrics):
+        server = SimServer(mesh, max_batch=4, use_plan_cache=False)
+        tickets = [server.submit(r) for r in (*heat, nls)]
+        served = server.serve_pending()
+    assert served == 3
+    counters = metrics.counters()
+    # fingerprint grouping: the two heat lanes shared one batch, nls got
+    # its own — 2 batches, 2 engine builds, no cross-engine batching
+    assert counters["serving.batches"] == 2, counters
+    assert counters["serving.engine_cache.misses"] == 2, counters
+    assert counters["serving.requests.completed"] == 3, counters
+    results = [t.result(timeout=30) for t in tickets]
+    assert all(r.ok for r in results), [r.error for r in results]
+    assert [r.batch_size for r in results] == [2, 2, 1]
+    print(f"CHECK serving_grouping OK  (2 heat lanes batched, nls solo, "
+          f"{served} served)", flush=True)
+
+    # the identity guarantee, bitwise: every streamed observable equals the
+    # solo run's float exactly (dict == compares float bit patterns here)
+    for req, res in zip((*heat, nls), results):
+        solver = server.registry.get(req)
+        assert (not engine) or solver.plan.comm_engine == engine
+        ref = solo_history(solver, req.scale, req.steps)
+        assert len(res.history) == req.steps + 1 == len(ref)
+        assert res.history == ref, (req.request_id, res.history, ref)
+        ok, lines = solver.validate(res.history)
+        assert ok, (req.request_id, lines)
+        print(f"CHECK serving_{req.request_id} OK  "
+              f"(batched == solo bitwise over {req.steps} steps; "
+              f"{'; '.join(lines)})", flush=True)
+
+    print("ALL_OK", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="4x2", help="PUxPV pencil grid")
+    ap.add_argument("--engine", default="",
+                    help="pin every request's comm engine")
+    args = ap.parse_args()
+    pu, pv = (int(t) for t in args.mesh.lower().split("x"))
+    run(pu, pv, args.engine)

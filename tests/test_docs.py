@@ -1,0 +1,129 @@
+"""The docs tree stays truthful: every relative link in ``README.md`` and
+``docs/`` resolves to a real file (anchors to a real heading), and every
+``python -m <module>`` invocation the docs show names an importable
+module. Runnable standalone (``python tests/test_docs.py`` — the CI docs
+link-check step) or under pytest as part of tier-1.
+"""
+
+import importlib.util
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# standalone invocation has tests/ as sys.path[0]; the repo root covers
+# the benchmarks namespace package, src/ the repro package
+for p in (REPO, os.path.join(REPO, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MODULE_RE = re.compile(r"python -m ([A-Za-z0-9_.]+)")
+HEADING_RE = re.compile(r"^#+\s+(.*)$", re.MULTILINE)
+
+
+def doc_files() -> list:
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    for root, _, names in os.walk(docs):
+        files += [os.path.join(root, n) for n in sorted(names)
+                  if n.endswith(".md")]
+    return files
+
+
+def github_slug(heading: str) -> str:
+    """The anchor GitHub renders for a heading (backticks stripped,
+    non-alphanumerics dropped, spaces hyphenated)."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def iter_relative_links(path: str):
+    with open(path) as f:
+        body = f.read()
+    for target in LINK_RE.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        yield target
+
+
+def check_links() -> list:
+    """Broken relative links / anchors across the doc set."""
+    problems = []
+    for path in doc_files():
+        rel = os.path.relpath(path, REPO)
+        for target in iter_relative_links(path):
+            file_part, _, anchor = target.partition("#")
+            dest = path if not file_part else os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part))
+            if not os.path.exists(dest):
+                problems.append(f"{rel}: link target missing: {target}")
+                continue
+            if anchor and dest.endswith(".md"):
+                with open(dest) as f:
+                    slugs = {github_slug(h)
+                             for h in HEADING_RE.findall(f.read())}
+                if anchor not in slugs:
+                    problems.append(f"{rel}: anchor #{anchor} not a "
+                                    f"heading in {os.path.relpath(dest, REPO)}")
+    return problems
+
+
+def documented_modules() -> set:
+    mods = set()
+    for path in doc_files():
+        with open(path) as f:
+            mods.update(MODULE_RE.findall(f.read()))
+    return mods
+
+
+def check_modules() -> list:
+    """``python -m`` invocations whose module doesn't resolve."""
+    problems = []
+    for mod in sorted(documented_modules()):
+        try:
+            spec = importlib.util.find_spec(mod)
+        except (ImportError, ModuleNotFoundError) as e:
+            spec, problems_entry = None, str(e)
+        else:
+            problems_entry = "not found"
+        if spec is None:
+            problems.append(f"python -m {mod}: {problems_entry}")
+    return problems
+
+
+# ---------------------------------------------------------------------------
+# pytest entry points
+# ---------------------------------------------------------------------------
+
+def test_docs_tree_exists():
+    files = [os.path.relpath(p, REPO) for p in doc_files()]
+    assert "README.md" in files
+    for required in ("docs/architecture.md", "docs/serving.md",
+                     "docs/benchmarks.md"):
+        assert required in files, files
+
+
+def test_relative_links_resolve():
+    assert check_links() == []
+
+
+def test_python_m_invocations_resolve():
+    mods = documented_modules()
+    # the load-bearing entry points must actually be documented
+    assert {"repro.solvers.cli", "repro.tuning.cli", "repro.serving.cli",
+            "repro.launch.serve", "benchmarks.run",
+            "benchmarks.compare"} <= mods, mods
+    assert check_modules() == []
+
+
+if __name__ == "__main__":
+    failures = check_links() + check_modules()
+    for line in failures:
+        print(f"DOCS BROKEN: {line}", file=sys.stderr)
+    n_links = sum(len(list(iter_relative_links(p))) for p in doc_files())
+    print(f"checked {len(doc_files())} docs, {n_links} relative links, "
+          f"{len(documented_modules())} python -m entry points: "
+          f"{'FAILED' if failures else 'OK'}")
+    sys.exit(1 if failures else 0)

@@ -1,0 +1,279 @@
+"""``repro.serving`` subsystem: the fingerprint contract, queue batching
+and fairness, registry reuse, the batched-vs-solo identity, streaming
+order, backpressure, load-generator stats, and the serving metrics.
+"""
+
+import pytest
+
+from repro import compat, obs
+from repro.serving import (EngineRegistry, LoadReport, QueueFullError,
+                           RequestQueue, SimRequest, SimResult, SimServer,
+                           StepUpdate, Ticket, percentile_us, request_key,
+                           run_load, scaled_initial_fields)
+from repro.solvers import SolverState
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def _req(**kw):
+    base = dict(case="heat", n=8, steps=2, dtype="float64")
+    base.update(kw)
+    return SimRequest(**base)
+
+
+def _ticket(seq, **kw):
+    req = _req(**kw)
+    return Ticket(req, request_key(req), seq)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint contract
+# ---------------------------------------------------------------------------
+
+def test_request_key_ignores_per_request_knobs():
+    # steps / scale / request_id never enter the fingerprint: requests
+    # differing only there share one compiled engine and batch together
+    a = _req(steps=1, scale=1.0, request_id="a")
+    b = _req(steps=7, scale=2.5, request_id="b")
+    assert request_key(a) == request_key(b)
+
+
+def test_request_key_separates_engine_shaping_fields():
+    base = request_key(_req())
+    assert request_key(_req(case="nls")) != base
+    assert request_key(_req(n=16)) != base
+    assert request_key(_req(dtype="float32")) != base
+    assert request_key(_req(params={"kappa": 0.5})) != base
+    assert request_key(_req(plan_cfg={"comm_engine": "torus"})) != base
+
+
+def test_request_key_normalizes_plan_cfg_spellings():
+    # the tuning layer's legacy knob mapping (net -> comm_engine) applies
+    # before hashing, so equivalent spellings collide onto one key
+    a = _req(plan_cfg={"net": "torus"})
+    b = _req(plan_cfg={"comm_engine": "torus"})
+    assert request_key(a) == request_key(b)
+    key = request_key(a)
+    assert key.startswith("heat_n8x8x8_float64_")
+
+
+# ---------------------------------------------------------------------------
+# queue: lanes, fairness, backpressure
+# ---------------------------------------------------------------------------
+
+def test_queue_groups_by_fingerprint_and_drains_in_arrival_order():
+    q = RequestQueue()
+    t1 = _ticket(1, request_id="h1")
+    t2 = _ticket(2, case="nls", request_id="n1")
+    t3 = _ticket(3, request_id="h2")
+    for t in (t1, t2, t3):
+        q.submit(t)
+    assert q.depth == 3
+    assert sorted(q.lanes().values()) == [1, 2]
+    # lane of the globally oldest head first (heat, seq 1), FIFO within it
+    batch = q.next_batch(8)
+    assert [t.request.request_id for t in batch] == ["h1", "h2"]
+    assert q.next_batch(8) == [t2]
+    assert q.next_batch(8) == [] and q.depth == 0
+
+
+def test_queue_fairness_oldest_head_wins_even_in_smaller_lane():
+    q = RequestQueue()
+    q.submit(_ticket(1, case="nls"))          # oldest overall
+    q.submit(_ticket(2, request_id="h1"))     # bigger lane, younger head
+    q.submit(_ticket(3, request_id="h2"))
+    first = q.next_batch(8)
+    assert [t.request.case for t in first] == ["nls"]
+
+
+def test_queue_max_batch_caps_the_drain():
+    q = RequestQueue()
+    for i in range(5):
+        q.submit(_ticket(i + 1, request_id=f"r{i}"))
+    assert len(q.next_batch(2)) == 2
+    assert q.depth == 3
+
+
+def test_queue_backpressure_rejects_above_max_pending():
+    q = RequestQueue(max_pending=2)
+    q.submit(_ticket(1))
+    q.submit(_ticket(2))
+    with pytest.raises(QueueFullError, match="max_pending=2"):
+        q.submit(_ticket(3))
+    assert q.depth == 2  # the rejected ticket never entered
+    with pytest.raises(ValueError, match="max_pending"):
+        RequestQueue(max_pending=0)
+
+
+# ---------------------------------------------------------------------------
+# registry: one live engine per fingerprint
+# ---------------------------------------------------------------------------
+
+def test_registry_reuses_the_same_engine_instance(mesh11):
+    reg = EngineRegistry(mesh11, use_plan_cache=False)
+    a = reg.get(_req(steps=1, request_id="a"))
+    b = reg.get(_req(steps=9, request_id="b"))   # same fingerprint
+    assert a is b and len(reg) == 1              # shared jit cache
+    c = reg.get(_req(params={"kappa": 0.5}))
+    assert c is not a and len(reg) == 2
+    assert c.params()["kappa"] == 0.5
+
+
+def test_registry_picks_up_autotuned_plan_from_cache(mesh11, tmp_path):
+    from repro.tuning.cache import PlanCache
+
+    cache = str(tmp_path / "plans.json")
+    probe = EngineRegistry(mesh11, use_plan_cache=False).get(_req())
+    PlanCache(cache).put(probe.problem_key(),
+                         {"best": {"comm_engine": "torus"}})
+    reg = EngineRegistry(mesh11, use_plan_cache=True, cache_path=cache)
+    solver = reg.get(_req())
+    assert solver.plan.comm_engine == "torus"
+    # an explicit plan_cfg bypasses the cache consult entirely
+    pinned = reg.get(_req(plan_cfg={"comm_engine": "switched"}))
+    assert pinned.plan.comm_engine == "switched"
+
+
+# ---------------------------------------------------------------------------
+# server: batched == solo, streaming, run-to-longest
+# ---------------------------------------------------------------------------
+
+def _solo_history(solver, scale, steps):
+    st = SolverState(fields=scaled_initial_fields(solver, scale))
+    history = [solver.observables(st)]
+    for _ in range(steps):
+        st = solver.step(st)
+        history.append(solver.observables(st))
+    return history
+
+
+def test_batched_histories_identical_to_solo_runs(mesh11):
+    server = SimServer(mesh11, max_batch=8, use_plan_cache=False)
+    reqs = [_req(steps=2, scale=1.0, request_id="r0"),
+            _req(steps=3, scale=1.5, request_id="r1"),
+            _req(steps=1, scale=2.0, request_id="r2")]
+    tickets = [server.submit(r) for r in reqs]
+    assert server.serve_pending() == 3
+    solver = server.registry.get(reqs[0])
+    for req, ticket in zip(reqs, tickets):
+        res = ticket.result(timeout=5)
+        assert res.ok and res.batch_size == 3
+        assert len(res.history) == req.steps + 1
+        # bitwise: float(...) == float(...) per observable, including "t"
+        assert res.history == _solo_history(solver, req.scale, req.steps)
+
+
+def test_ticket_streams_updates_in_step_order(mesh11):
+    server = SimServer(mesh11, use_plan_cache=False)
+    ticket = server.submit(_req(steps=3))
+    server.serve_pending()
+    updates = list(ticket.updates(timeout=5))
+    assert [u.step for u in updates] == [0, 1, 2, 3]
+    assert all(isinstance(u, StepUpdate) for u in updates)
+    assert updates[1].t == pytest.approx(updates[3].t / 3)
+    assert ticket.done
+    res = ticket.result()
+    assert isinstance(res, SimResult) and res.latency_s >= 0
+    assert [u.observables for u in updates] == res.history
+
+
+def test_run_to_longest_finishes_short_lanes_at_their_horizon(mesh11):
+    # lanes with differing steps batch; each gets exactly steps+1 entries
+    server = SimServer(mesh11, use_plan_cache=False)
+    short = server.submit(_req(steps=0, request_id="short"))
+    long = server.submit(_req(steps=4, request_id="long"))
+    assert server.serve_once() == 2
+    assert len(short.result().history) == 1      # just the t=0 diagnostics
+    assert len(long.result().history) == 5
+
+
+def test_server_pushes_error_result_instead_of_dying(mesh11):
+    server = SimServer(mesh11, use_plan_cache=False)
+    ticket = server.submit(_req(case="burgers"))  # not a registered case
+    assert server.serve_once() == 1
+    res = ticket.result(timeout=5)
+    assert not res.ok and "unknown solver case" in res.error
+    assert res.history == []
+    # the failed batch didn't wedge the server
+    ok = server.submit(_req())
+    server.serve_pending()
+    assert ok.result(timeout=5).ok
+
+
+def test_server_backpressure_and_validation():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    server = SimServer(mesh, max_pending=1, use_plan_cache=False)
+    server.submit(_req())
+    with pytest.raises(QueueFullError):
+        server.submit(_req())
+    with pytest.raises(ValueError, match="steps"):
+        server.submit(_req(steps=-1))
+    with pytest.raises(ValueError, match="max_batch"):
+        SimServer(mesh, max_batch=0)
+
+
+def test_threaded_server_serves_submissions(mesh11):
+    server = SimServer(mesh11, use_plan_cache=False)
+    server.start()
+    try:
+        assert server.running
+        tickets = [server.submit(_req(request_id=f"r{i}", scale=1.0 + i))
+                   for i in range(3)]
+        results = [t.result(timeout=30) for t in tickets]
+        assert all(r.ok for r in results)
+    finally:
+        server.stop()
+    assert not server.running
+
+
+# ---------------------------------------------------------------------------
+# load generator + metrics
+# ---------------------------------------------------------------------------
+
+def test_percentile_nearest_rank():
+    lat = [1.0, 2.0, 3.0, 4.0]      # already in µs, nearest-rank convention
+    assert percentile_us(lat, 0.50) == 2.0
+    assert percentile_us(lat, 0.99) == 4.0
+    assert percentile_us([], 0.5) == 0.0
+
+
+def test_run_load_burst_stats(mesh11):
+    server = SimServer(mesh11, use_plan_cache=False)
+    reqs = [_req(request_id=f"r{i}", scale=1.0 + 0.5 * i) for i in range(4)]
+    report = run_load(server, reqs)
+    assert isinstance(report, LoadReport)
+    s = report.stats()
+    assert s["n_requests"] == 4 and s["n_failed"] == 0
+    assert s["requests_per_s"] > 0
+    assert s["p50_us"] <= s["p95_us"] <= s["p99_us"]
+
+
+def test_serving_metrics_counters_and_gauges(mesh11):
+    with obs.capture() as (_, metrics):
+        server = SimServer(mesh11, max_batch=2, use_plan_cache=False)
+        tickets = [server.submit(_req(request_id=f"r{i}")) for i in range(3)]
+        server.serve_pending()
+        for t in tickets:
+            assert t.result(timeout=5).ok
+    c = metrics.counters()
+    assert c["serving.requests.submitted"] == 3
+    assert c["serving.requests.admitted"] == 3
+    assert c["serving.requests.completed"] == 3
+    assert c["serving.batches"] == 2             # 3 requests, max_batch 2
+    assert c["serving.engine_cache.misses"] == 1
+    assert c["serving.engine_cache.hits"] == 1   # second batch, warm engine
+    g = metrics.gauges()
+    assert g["serving.queue_depth"] == 0
+    assert g["serving.batch_size"] in (1, 2)
+
+
+def test_rejected_counter_on_backpressure(mesh11):
+    with obs.capture() as (_, metrics):
+        server = SimServer(mesh11, max_pending=1, use_plan_cache=False)
+        server.submit(_req())
+        with pytest.raises(QueueFullError):
+            server.submit(_req())
+    assert metrics.counters()["serving.requests.rejected"] == 1
