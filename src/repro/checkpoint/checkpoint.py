@@ -4,6 +4,18 @@ written on mesh A restores onto mesh B (elastic up/down-scaling), because
 leaves are stored as full logical arrays and re-placed with the target
 shardings at load.
 
+Failure semantics (what ``repro.fleet`` leans on):
+
+* a save is visible only after the atomic rename — a writer killed or
+  raising mid-write leaves a ``step_*.tmp`` turd that :meth:`latest_step`
+  and GC ignore, never a half-checkpoint;
+* an exception in the **async** writer thread is captured, not swallowed:
+  the next :meth:`wait` (or the implicit one at the head of the next
+  :meth:`save`) re-raises it as :class:`CheckpointError`, so a failed save
+  cannot masquerade as success;
+* a torn ``LATEST`` pointer (or a pointer at an incomplete directory)
+  falls back to scanning for the newest *complete* step directory.
+
 Layout:  <dir>/step_<n>/   manifest.json  +  arrays.npz (flat path-keyed)
          <dir>/LATEST      (atomic pointer file)
 """
@@ -18,6 +30,12 @@ import time
 
 import jax
 import numpy as np
+
+from repro import obs
+
+
+class CheckpointError(RuntimeError):
+    """A (possibly async) checkpoint write failed; the save did not land."""
 
 
 def _flatten(tree):
@@ -35,24 +53,56 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self.last_save_bytes = 0       # host bytes of the latest save
         os.makedirs(directory, exist_ok=True)
 
     # ---- save -------------------------------------------------------------
     def save(self, step: int, tree, meta: dict | None = None, block: bool = False):
-        """Snapshot to host memory synchronously, write to disk async."""
+        """Snapshot to host memory synchronously, write to disk async.
+
+        Raises :class:`CheckpointError` if a *previous* async write failed
+        (before starting this one), or — with ``block=True`` or
+        ``async_write=False`` — if this write fails."""
         flat, _ = _flatten(tree)
         host = {k: np.asarray(v) for k, v in flat.items()}  # device->host copy
-        self.wait()
+        self.last_save_bytes = sum(a.nbytes for a in host.values())
+        obs.metrics.inc("checkpoint.saves")
+        obs.metrics.inc("checkpoint.bytes", self.last_save_bytes)
+        self.wait()                    # re-raises a prior async failure
+        if not self.async_write:
+            try:
+                self._write(step, host, meta or {})
+            except BaseException as e:
+                obs.metrics.inc("checkpoint.write_errors")
+                raise CheckpointError(
+                    f"checkpoint write failed: "
+                    f"{type(e).__name__}: {e}") from e
+            return
         self._thread = threading.Thread(
-            target=self._write, args=(step, host, meta or {}), daemon=True)
+            target=self._write_guarded, args=(step, host, meta or {}),
+            daemon=True)
         self._thread.start()
         if block:
             self.wait()
 
     def wait(self):
+        """Join the in-flight async write; re-raise its failure, if any."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            obs.metrics.inc("checkpoint.write_errors")
+            raise CheckpointError(
+                f"async checkpoint write failed: "
+                f"{type(err).__name__}: {err}") from err
+
+    def _write_guarded(self, step: int, host: dict, meta: dict):
+        try:
+            self._write(step, host, meta)
+        except BaseException as e:     # surfaces on the next wait()/save()
+            self._error = e
 
     def _write(self, step: int, host: dict, meta: dict):
         final = os.path.join(self.dir, f"step_{step:08d}")
@@ -78,15 +128,26 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     # ---- restore ------------------------------------------------------------
+    def _complete_steps(self) -> list[int]:
+        """Step numbers with a complete (manifest-bearing) directory."""
+        out = []
+        for d in os.listdir(self.dir):
+            if not d.startswith("step_") or d.endswith(".tmp"):
+                continue
+            if os.path.exists(os.path.join(self.dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
     def latest_step(self) -> int | None:
         ptr = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(ptr):
-            return None
-        with open(ptr) as f:
-            name = f.read().strip()
-        if not os.path.exists(os.path.join(self.dir, name, "manifest.json")):
-            return None  # torn write — fall back to scan
-        return int(name.split("_")[1])
+        if os.path.exists(ptr):
+            with open(ptr) as f:
+                name = f.read().strip()
+            if os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                return int(name.split("_")[1])
+        # torn pointer or incomplete dir — scan for the newest complete step
+        steps = self._complete_steps()
+        return steps[-1] if steps else None
 
     def restore(self, target_tree, step: int | None = None,
                 shardings=None) -> tuple:
@@ -94,6 +155,7 @@ class CheckpointManager:
         ``shardings`` (same structure) if given — this is the elastic path."""
         step = self.latest_step() if step is None else step
         assert step is not None, f"no checkpoint under {self.dir}"
+        t0 = time.monotonic()
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             meta = json.load(f)
@@ -111,4 +173,7 @@ class CheckpointManager:
                 a = jax.device_put(a, shard_flat[k])
             leaves.append(a)
         tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        obs.metrics.inc("checkpoint.restores")
+        obs.metrics.set_gauge("checkpoint.restore_us",
+                              (time.monotonic() - t0) * 1e6)
         return tree, meta

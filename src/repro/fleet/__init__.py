@@ -1,0 +1,47 @@
+"""``repro.fleet`` — fault-tolerant orchestration of solver ensembles.
+
+The ROADMAP's "fleet orchestration + checkpointed fault tolerance" layer:
+one process per *worker*, many workers per *campaign*, and a controller
+that assumes workers die. The pieces, each its own module:
+
+* :mod:`~repro.fleet.records` — :class:`FailureRecord`, the structured
+  failure type the controller, ``repro.serving`` and the reports share,
+  plus the worker exit-code conventions.
+* :mod:`~repro.fleet.faults` — deterministic fault injection
+  (``kill-at-step`` / ``torn-checkpoint`` / ``slow-at-step``), parsed from
+  ``REPRO_FAULT_SPEC`` / ``--inject`` and keyed on (job, attempt, step) so
+  chaos runs are reproducible and assertable.
+* :mod:`~repro.fleet.worker` — the supervised unit: run one solver job
+  with periodic checkpoints, resume from the latest complete snapshot
+  (elastically — possibly on a different submesh shape), apply injected
+  faults.
+* :mod:`~repro.fleet.controller` — :class:`FleetController`: pack jobs
+  onto a device-slot pool, supervise the worker subprocesses, classify
+  deaths (crash / timeout / poison), retry from checkpoint with capped
+  exponential backoff, quarantine exhausted jobs without wedging the
+  campaign.
+* :mod:`~repro.fleet.cli` — ``python -m repro.fleet.cli``: the ensemble
+  entry point and the CI chaos smoke's driver.
+
+The headline invariant (pinned by ``tests/test_fleet_restart.py`` and the
+CI chaos smoke): a campaign with an injected worker kill produces per-job
+observable histories identical to the same campaign run unkilled, and a
+job whose retry budget is exhausted is quarantined while its siblings
+complete. ``docs/fleet.md`` documents the lifecycle end to end.
+
+This package is jax-free to import; only workers touch device state.
+"""
+
+from __future__ import annotations
+
+from repro.fleet.controller import FleetController, FleetJob, JobResult
+from repro.fleet.faults import (Fault, FaultPlan, arm_torn_checkpoint,
+                                parse_fault_spec)
+from repro.fleet.records import (KILL_EXIT, POISON_EXIT, FailureRecord,
+                                 classify_exit)
+
+__all__ = [
+    "FleetController", "FleetJob", "JobResult",
+    "Fault", "FaultPlan", "parse_fault_spec", "arm_torn_checkpoint",
+    "FailureRecord", "classify_exit", "KILL_EXIT", "POISON_EXIT",
+]

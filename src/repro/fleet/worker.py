@@ -1,0 +1,169 @@
+"""One supervised fleet worker: a solver job with checkpoints and faults.
+
+    python -m repro.fleet.worker --spec job.spec.json --attempt 0
+
+The worker is the unit the controller kills, restarts and quarantines. It
+reads a JSON job spec (written by :class:`repro.fleet.controller.
+FleetController`), pins its own fake-device submesh *before* importing
+jax, builds the solver, and then either starts from t=0 (applying the
+job's initial-condition ``scale``) or — if the job's checkpoint directory
+has a complete snapshot — resumes mid-trajectory via
+``SpectralSolver.restore_state`` (elastic: the snapshot may have been
+written on a different submesh shape).
+
+Per step it appends one JSON line ``{"step", "attempt", "obs"}`` to the
+job's shared progress log (flushed immediately, so a hard kill loses at
+most a torn final line) and snapshots through ``CheckpointManager`` every
+``ckpt_every`` steps. On success it writes the result document atomically
+and exits 0. Exit codes: ``records.POISON_EXIT`` for an invalid spec,
+``records.KILL_EXIT`` from the injected hard kill, anything else nonzero
+is a crash the controller will retry.
+
+Faults come from ``REPRO_FAULT_SPEC`` (see :mod:`repro.fleet.faults`) and
+are filtered by (job, attempt) before anything fires — deterministic by
+construction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+
+def _write_json_atomic(path: str, doc: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1)
+    os.replace(tmp, path)
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        for name in files:
+            try:
+                total += os.path.getsize(os.path.join(root, name))
+            except OSError:
+                pass
+    return total
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.fleet.worker")
+    ap.add_argument("--spec", required=True, help="job spec JSON path")
+    ap.add_argument("--attempt", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    with open(args.spec) as f:
+        spec = json.load(f)
+    job_id = spec["job_id"]
+    mesh_shape = tuple(int(d) for d in spec["mesh"])
+
+    # fault plan + device pinning happen before jax initializes
+    from repro.fleet import faults as fl
+    from repro.fleet.records import KILL_EXIT, POISON_EXIT
+    plan = fl.plan_from_env()
+    active = plan.active(job_id, args.attempt)
+
+    from repro.launch.mesh import ensure_host_devices
+    ensure_host_devices(math.prod(mesh_shape))
+
+    import numpy as np
+
+    from repro.core import precision
+    if np.dtype(spec["dtype"]).itemsize >= 8:
+        precision.enable_x64()
+
+    from repro import compat
+    from repro.checkpoint.checkpoint import CheckpointManager
+    from repro.solvers import make_solver
+    from repro.solvers.base import SolverState
+
+    try:
+        mesh = compat.make_mesh(mesh_shape, ("data", "model"))
+        kwargs = dict(spec.get("params") or {})
+        if spec.get("dt") is not None:
+            kwargs["dt"] = spec["dt"]
+        n = spec["n"] if isinstance(spec["n"], int) else tuple(spec["n"])
+        solver = make_solver(spec["case"], mesh, n, dtype=spec["dtype"],
+                             plan_cfg=spec.get("plan_cfg"), **kwargs)
+    except (ValueError, TypeError) as e:
+        # poison config: deterministically invalid — tell the controller
+        # not to waste retries on it
+        print(f"[poison] {type(e).__name__}: {e}", file=sys.stderr, flush=True)
+        return POISON_EXIT
+
+    mgr = CheckpointManager(spec["ckpt_dir"], keep=spec.get("keep", 2))
+    for fault in active:
+        if fault.kind == "torn-checkpoint":
+            fl.arm_torn_checkpoint(mgr, at_step=fault.step)
+    kill = next((f for f in active if f.kind == "kill-at-step"), None)
+    slow = next((f for f in active if f.kind == "slow-at-step"), None)
+
+    restore_us = 0.0
+    if mgr.latest_step() is not None:
+        t0 = time.monotonic()
+        state, meta = solver.restore_state(mgr)
+        restore_us = (time.monotonic() - t0) * 1e6
+        print(f"[resume] job {job_id} from step {state.n_steps} "
+              f"(saved on mesh {meta.get('mesh')}, "
+              f"{restore_us / 1e3:.1f} ms restore)", flush=True)
+    else:
+        from repro.serving.server import scaled_initial_fields
+        state = SolverState(
+            fields=scaled_initial_fields(solver, spec.get("scale", 1.0)))
+
+    progress = open(spec["progress_path"], "a")
+
+    def emit(step: int, observables: dict) -> None:
+        progress.write(json.dumps({"step": step, "attempt": args.attempt,
+                                   "obs": observables}) + "\n")
+        progress.flush()
+
+    steps = int(spec["steps"])
+    every = int(spec.get("ckpt_every", 2))
+    ckpt_meta = {"job_id": job_id, "case": spec["case"],
+                 "mesh": list(mesh_shape), "attempt": args.attempt}
+    if state.n_steps == 0:
+        emit(0, solver.observables(state))
+    for i in range(state.n_steps + 1, steps + 1):
+        state = solver.step(state)
+        emit(i, solver.observables(state))
+        if every and i % every == 0 and i < steps:
+            mgr.save(i, solver.state_tree(state), meta=ckpt_meta)
+        if slow and i == slow.step:
+            print(f"[fault] slow-at-step {i}: sleeping {slow.seconds:g}s",
+                  flush=True)
+            time.sleep(slow.seconds)
+        if kill and i == kill.step:
+            # hard exit skipping every cleanup path (progress close, result
+            # write, atexit) — but drain the in-flight snapshot first, so
+            # whether the retry resumes is a function of (step, ckpt_every)
+            # alone, not of writer-thread timing; the mid-write-tear case
+            # is injected deterministically via torn-checkpoint instead
+            try:
+                mgr.wait()
+            except Exception:
+                pass
+            print(f"[fault] kill-at-step {i}", flush=True)
+            os._exit(KILL_EXIT)
+    # final snapshot; block so a swallowed async write error becomes a crash
+    mgr.save(steps, solver.state_tree(state), meta=ckpt_meta, block=True)
+    progress.close()
+
+    _write_json_atomic(spec["result_path"], {
+        "job_id": job_id, "attempt": args.attempt, "final_step": steps,
+        "restore_latency_us": round(restore_us, 1),
+        "checkpoint_bytes": _dir_bytes(spec["ckpt_dir"]),
+    })
+    print(f"[done] job {job_id}: {steps} steps "
+          f"(attempt {args.attempt})", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

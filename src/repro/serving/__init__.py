@@ -30,6 +30,7 @@ request lifecycle end to end.
 
 from __future__ import annotations
 
+from repro.fleet.records import FailureRecord
 from repro.serving.loadgen import LoadReport, percentile_us, run_load
 from repro.serving.queue import QueueFullError, RequestQueue
 from repro.serving.registry import EngineRegistry
@@ -41,4 +42,5 @@ __all__ = [
     "SimRequest", "SimResult", "StepUpdate", "Ticket", "request_key",
     "RequestQueue", "QueueFullError", "EngineRegistry", "SimServer",
     "scaled_initial_fields", "run_load", "LoadReport", "percentile_us",
+    "FailureRecord",
 ]

@@ -11,6 +11,15 @@ Two arrival modes:
   *running* scheduler thread, the serving analogue of a steady request
   stream.
 
+Backpressure is survived, not ignored: a submit rejected with
+:class:`~repro.serving.queue.QueueFullError` is retried up to
+``max_submit_retries`` times with exponential backoff floored at the
+queue's ``retry_after_hint`` (in burst mode a drain pass frees room first,
+keeping tests deterministic); a request still rejected after the budget is
+recorded as a structured :class:`~repro.fleet.records.FailureRecord`
+instead of silently dropping — a burst larger than ``max_pending`` no
+longer loses requests without a trace.
+
 The report carries per-request latencies (submit → final observable, queue
 wait included), nearest-rank p50/p95/p99 tails, and requests/s over the
 whole run — the numbers ``benchmarks.run --only serving`` puts on the perf
@@ -22,6 +31,8 @@ from __future__ import annotations
 import dataclasses
 import time
 
+from repro.fleet.records import FailureRecord
+from repro.serving.queue import QueueFullError
 from repro.serving.request import SimRequest, SimResult
 from repro.serving.server import SimServer
 
@@ -43,14 +54,21 @@ class LoadReport:
     results: list[SimResult]
     wall_s: float                   # first submit → last result
     rate_hz: float                  # requested arrival rate (0 = burst)
+    rejected: list = dataclasses.field(default_factory=list)
+    submit_retries: int = 0         # resubmissions after QueueFullError
 
     @property
     def n_requests(self) -> int:
-        return len(self.results)
+        return len(self.results) + len(self.rejected)
 
     @property
     def n_failed(self) -> int:
         return sum(1 for r in self.results if not r.ok)
+
+    @property
+    def n_rejected(self) -> int:
+        """Requests shed after exhausting the submit-retry budget."""
+        return len(self.rejected)
 
     @property
     def requests_per_s(self) -> float:
@@ -66,6 +84,8 @@ class LoadReport:
         return {
             "n_requests": self.n_requests,
             "n_failed": self.n_failed,
+            "n_rejected": self.n_rejected,
+            "submit_retries": self.submit_retries,
             "requests_per_s": round(self.requests_per_s, 3),
             "mean_us": round(mean, 3),
             "p50_us": round(percentile_us(lat, 0.50), 3),
@@ -76,12 +96,20 @@ class LoadReport:
 
 
 def run_load(server: SimServer, requests: list[SimRequest], *,
-             rate_hz: float = 0.0) -> LoadReport:
+             rate_hz: float = 0.0, max_submit_retries: int = 0,
+             retry_backoff_s: float = 0.02) -> LoadReport:
     """Submit ``requests`` against ``server`` and wait for every result.
 
     Burst mode drains on the calling thread when no scheduler thread is
     running (deterministic for tests); paced mode starts the scheduler
     thread if needed and stops it again if this call started it.
+
+    A :class:`QueueFullError` is retried up to ``max_submit_retries``
+    times, sleeping ``max(hint, retry_backoff_s · 2^attempt)`` (capped at
+    1 s) between tries — and, when no scheduler thread is draining, running
+    one ``serve_pending()`` pass first so a retry can actually find room.
+    Requests rejected after the budget land in ``LoadReport.rejected`` as
+    :class:`FailureRecord`\\ s (kind ``rejected``).
     """
     started_here = False
     if rate_hz > 0 and not server.running:
@@ -89,15 +117,33 @@ def run_load(server: SimServer, requests: list[SimRequest], *,
         started_here = True
     t0 = time.monotonic()
     tickets = []
+    rejected: list[FailureRecord] = []
+    retries = 0
     for i, req in enumerate(requests):
         if rate_hz > 0 and i:
             # open-loop pacing against the schedule, not the previous send
             time.sleep(max(0.0, t0 + i / rate_hz - time.monotonic()))
-        tickets.append(server.submit(req))
+        for attempt in range(max_submit_retries + 1):
+            try:
+                tickets.append(server.submit(req))
+                break
+            except QueueFullError as e:
+                if attempt >= max_submit_retries:
+                    rejected.append(FailureRecord(
+                        kind="rejected", where="serving.queue",
+                        job_id=req.request_id or f"req{i}", attempt=attempt,
+                        detail=str(e), retryable=True, time_s=time.time()))
+                    break
+                retries += 1
+                if not server.running:
+                    server.serve_pending()    # free room deterministically
+                time.sleep(min(max(e.retry_after_hint,
+                                   retry_backoff_s * (2 ** attempt)), 1.0))
     if not server.running:
         server.serve_pending()
     results = [t.result() for t in tickets]
     wall = time.monotonic() - t0
     if started_here:
         server.stop()
-    return LoadReport(results=results, wall_s=wall, rate_hz=rate_hz)
+    return LoadReport(results=results, wall_s=wall, rate_hz=rate_hz,
+                      rejected=rejected, submit_retries=retries)

@@ -11,7 +11,10 @@ solver step.
 
 Backpressure is a hard depth bound: when ``max_pending`` is set, a submit
 that would exceed it raises :class:`QueueFullError` immediately (the
-caller sheds load or retries; nothing blocks inside the scheduler).
+caller sheds load or retries; nothing blocks inside the scheduler). The
+rejection carries a ``retry_after_hint`` — the queue's advice, in seconds,
+on when a retry might find room (scaled by how overfull the queue is);
+the load generator's bounded retry loop honors it.
 
 Gauges: ``serving.queue_depth`` tracks the pending count on every submit
 and every batch pull; ``serving.requests.rejected`` counts shed load.
@@ -27,16 +30,26 @@ from repro.serving.request import Ticket
 
 
 class QueueFullError(RuntimeError):
-    """Submit refused: the queue is at its ``max_pending`` depth bound."""
+    """Submit refused: the queue is at its ``max_pending`` depth bound.
+
+    ``retry_after_hint`` (seconds) is the queue's advice on when to retry:
+    a base hint scaled by the relative overfullness at rejection time.
+    Purely advisory — the queue promises nothing about future depth."""
+
+    def __init__(self, msg: str, retry_after_hint: float = 0.05):
+        super().__init__(msg)
+        self.retry_after_hint = float(retry_after_hint)
 
 
 class RequestQueue:
     """Thread-safe pending-request store with fingerprint lanes."""
 
-    def __init__(self, max_pending: int | None = None):
+    def __init__(self, max_pending: int | None = None,
+                 retry_hint_s: float = 0.05):
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.max_pending = max_pending
+        self.retry_hint_s = float(retry_hint_s)
         self._lanes: dict[str, collections.deque[Ticket]] = {}
         self._depth = 0
         self._lock = threading.Lock()
@@ -46,9 +59,10 @@ class RequestQueue:
         with self._lock:
             if self.max_pending is not None and self._depth >= self.max_pending:
                 obs.metrics.inc("serving.requests.rejected")
+                hint = self.retry_hint_s * (self._depth / self.max_pending)
                 raise QueueFullError(
                     f"queue at max_pending={self.max_pending} "
-                    f"({self._depth} pending)")
+                    f"({self._depth} pending)", retry_after_hint=hint)
             self._lanes.setdefault(ticket.fingerprint,
                                    collections.deque()).append(ticket)
             self._depth += 1

@@ -35,12 +35,14 @@ rounds.
 
 from __future__ import annotations
 
+import collections
 import threading
 import time
 
 import jax
 
 from repro import obs
+from repro.fleet.records import FailureRecord
 from repro.serving.queue import RequestQueue
 from repro.serving.registry import EngineRegistry
 from repro.serving.request import (SimRequest, SimResult, StepUpdate, Ticket,
@@ -74,6 +76,10 @@ class SimServer:
         self.registry = registry or EngineRegistry(
             mesh, use_plan_cache=use_plan_cache, cache_path=cache_path)
         self.queue = RequestQueue(max_pending)
+        # per-lane failure trail, same structured type the fleet uses
+        # (bounded: serving failures are diagnostics, not campaign state)
+        self.failures: collections.deque[FailureRecord] = collections.deque(
+            maxlen=256)
         self._seq = 0
         self._lock = threading.Lock()
         self._wake = threading.Event()
@@ -127,7 +133,13 @@ class SimServer:
             obs.metrics.inc("serving.batches_failed")
             err = f"{type(e).__name__}: {e}"
             now = time.monotonic()
+            wall = time.time()
             for t in tickets:
+                self.failures.append(FailureRecord(
+                    kind="batch_error", where="serving.batch",
+                    job_id=t.request.request_id or fp, detail=err,
+                    retryable=False, time_s=wall))
+                obs.metrics.inc("serving.requests.failed")
                 t._push(SimResult(request=t.request, fingerprint=fp,
                                   history=[], batch_size=nbatch,
                                   submitted_s=t.submitted_s, finished_s=now,

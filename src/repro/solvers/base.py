@@ -199,6 +199,38 @@ class SpectralSolver(abc.ABC):
             case=self.case, solver_params=self.params())
         return key
 
+    # ---- checkpoint contract (repro.fleet rides on this) -----------------
+    def state_tree(self, state: SolverState):
+        """``state`` as a checkpointable pytree for ``CheckpointManager``.
+
+        Leaves are the (sharded) field arrays plus the host-side clock as
+        0-d numpy scalars; flat tree paths are mesh-shape-independent, so a
+        snapshot written here restores on any pencil grid of the same
+        problem (:meth:`restore_state` is the inverse)."""
+        return {"fields": state.fields,
+                "t": np.float64(state.t),
+                "n_steps": np.int64(state.n_steps)}
+
+    def restore_state(self, manager, step: int | None = None
+                      ) -> tuple[SolverState, dict]:
+        """``(state, manifest meta)`` from ``manager``'s checkpoint.
+
+        The elastic path of the fleet's retry loop: the snapshot may have
+        been written by a solver of the same problem on a *different*
+        submesh shape — leaves are stored as full logical arrays, and this
+        method re-places them with **this** solver's shardings
+        (``NamedSharding(self.mesh, self.field_spec())``). Restoring onto
+        the same shape is bitwise; a different shape changes only the
+        layout, so the continued trajectory matches to roundoff."""
+        fields = self.initial_fields()         # shape/dtype template
+        target = {"fields": fields, "t": np.float64(0.0),
+                  "n_steps": np.int64(0)}
+        sh = jax.sharding.NamedSharding(self.mesh, self.field_spec())
+        shardings = {"fields": jax.tree.map(lambda _: sh, fields)}
+        tree, meta = manager.restore(target, step=step, shardings=shardings)
+        return SolverState(fields=tree["fields"], t=float(tree["t"]),
+                           n_steps=int(tree["n_steps"])), meta
+
     # ---- public contract -------------------------------------------------
     def init_state(self, plan: FFT3DPlan | None = None) -> SolverState:
         assert plan is None or plan == self.plan, \

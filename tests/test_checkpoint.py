@@ -1,0 +1,136 @@
+"""``repro.checkpoint`` failure semantics: atomic visibility, keep-last-k
+GC, the torn-LATEST scan fallback, and — the satellite this PR fixes — the
+async writer surfacing its failure on the next ``wait()``/``save()``
+instead of swallowing it. The torn writes come from the fleet's
+deterministic fault injector (:func:`repro.fleet.faults.
+arm_torn_checkpoint`), which reproduces exactly what a mid-write kill
+leaves on disk.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.checkpoint.checkpoint import CheckpointError, CheckpointManager
+from repro.fleet.faults import arm_torn_checkpoint
+
+
+def _tree(v: float = 0.0):
+    return {"fields": [np.full((4, 4), v), np.arange(8.0) + v],
+            "t": np.float64(v), "n_steps": np.int64(int(v))}
+
+
+def _assert_tree_equal(a, b):
+    assert np.array_equal(a["fields"][0], b["fields"][0])
+    assert np.array_equal(a["fields"][1], b["fields"][1])
+    assert a["t"] == b["t"] and a["n_steps"] == b["n_steps"]
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + GC + pointer fallback
+# ---------------------------------------------------------------------------
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    assert mgr.latest_step() is None
+    mgr.save(2, _tree(2.0), meta={"case": "heat"}, block=True)
+    assert mgr.latest_step() == 2
+    assert mgr.last_save_bytes > 0
+    tree, meta = mgr.restore(_tree(0.0))
+    _assert_tree_equal(tree, _tree(2.0))
+    assert meta["case"] == "heat" and meta["step"] == 2
+
+
+def test_keep_last_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _tree(float(step)), block=True)
+    kept = sorted(d for d in os.listdir(mgr.dir) if d.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+    assert mgr.latest_step() == 4
+    # an old step is gone for good, not just unlisted
+    with pytest.raises((KeyError, OSError, AssertionError)):
+        mgr.restore(_tree(0.0), step=1)
+
+
+def test_latest_step_scan_fallback_on_torn_pointer(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    mgr.save(1, _tree(1.0), block=True)
+    mgr.save(2, _tree(2.0), block=True)
+    ptr = os.path.join(mgr.dir, "LATEST")
+    # pointer at a directory that was never completed
+    with open(ptr, "w") as f:
+        f.write("step_00000099")
+    assert mgr.latest_step() == 2
+    tree, _ = mgr.restore(_tree(0.0))
+    _assert_tree_equal(tree, _tree(2.0))
+    # no pointer at all: same scan
+    os.remove(ptr)
+    assert mgr.latest_step() == 2
+
+
+# ---------------------------------------------------------------------------
+# the async-writer error capture (the satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_async_write_error_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    mgr.save(2, _tree(2.0), block=True)
+    arm_torn_checkpoint(mgr, at_step=4)
+    mgr.save(4, _tree(4.0))            # async: returns without raising
+    with pytest.raises(CheckpointError, match="injected torn checkpoint"):
+        mgr.wait()
+    # the torn tmp is invisible; the last complete snapshot still resolves
+    assert mgr.latest_step() == 2
+    tree, _ = mgr.restore(_tree(0.0))
+    _assert_tree_equal(tree, _tree(2.0))
+    # the error was consumed — the manager recovers, next save lands
+    mgr.save(6, _tree(6.0), block=True)
+    assert mgr.latest_step() == 6
+
+
+def test_async_write_error_surfaces_on_next_save(tmp_path):
+    # the implicit wait() at the head of save() re-raises too: a failed
+    # async write can never masquerade as success across saves
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    arm_torn_checkpoint(mgr, at_step=0)
+    mgr.save(2, _tree(2.0))
+    with pytest.raises(CheckpointError, match="OSError"):
+        mgr.save(4, _tree(4.0))
+    mgr.save(6, _tree(6.0), block=True)   # fault fired once; recovered
+    assert mgr.latest_step() == 6
+
+
+def test_blocking_save_raises_inline(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+    arm_torn_checkpoint(mgr, at_step=0)
+    with pytest.raises(CheckpointError, match="injected torn checkpoint"):
+        mgr.save(2, _tree(2.0), block=True)
+    assert mgr.latest_step() is None
+
+
+def test_sync_mode_raises_inline(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=3, async_write=False)
+    arm_torn_checkpoint(mgr, at_step=0)
+    with pytest.raises(CheckpointError, match="injected torn checkpoint"):
+        mgr.save(2, _tree(2.0))
+    mgr.save(4, _tree(4.0))
+    assert mgr.latest_step() == 4
+
+
+def test_checkpoint_metrics(tmp_path):
+    with obs.capture() as (_, metrics):
+        mgr = CheckpointManager(str(tmp_path / "ck"), keep=3)
+        mgr.save(2, _tree(2.0), block=True)
+        arm_torn_checkpoint(mgr, at_step=4)
+        with pytest.raises(CheckpointError):
+            mgr.save(4, _tree(4.0), block=True)
+        mgr.restore(_tree(0.0))
+    c = metrics.counters()
+    assert c["checkpoint.saves"] == 2
+    assert c["checkpoint.write_errors"] == 1
+    assert c["checkpoint.restores"] == 1
+    assert c["checkpoint.bytes"] == 2 * mgr.last_save_bytes
+    assert metrics.gauges()["checkpoint.restore_us"] > 0

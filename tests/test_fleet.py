@@ -1,0 +1,284 @@
+"""``repro.fleet`` unit coverage: the fault-spec grammar, the structured
+failure records, and the controller's supervision loop — retry, backoff
+mesh reshaping, quarantine, timeout kills, env hygiene — exercised against
+a fast jax-free stub worker (the real-worker integration lives in
+``tests/test_fleet_restart.py``).
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+from repro import obs
+from repro.fleet import (Fault, FailureRecord, FleetController, FleetJob,
+                         classify_exit, parse_fault_spec)
+from repro.fleet.faults import plan_from_env
+from repro.fleet.records import KILL_EXIT, POISON_EXIT
+
+# ---------------------------------------------------------------------------
+# fault-spec grammar
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_spec_grammar():
+    plan = parse_fault_spec(
+        "kill-at-step:3; torn-checkpoint:2:times=2@job=job1;"
+        "slow-at-step:1:30.5")
+    assert len(plan.faults) == 3 and bool(plan)
+    kill, torn, slow = plan.faults
+    assert kill == Fault(kind="kill-at-step", step=3)
+    assert torn.times == 2 and torn.job == "job1"
+    assert slow.seconds == 30.5
+    assert not parse_fault_spec("") and not parse_fault_spec(None)
+
+
+def test_fault_filtering_by_job_and_attempt():
+    plan = parse_fault_spec("kill-at-step:3@job=job0;torn-checkpoint:1:times=2")
+    # default times=1: attempt 0 only — a retry sails through
+    assert [f.kind for f in plan.active("job0", 0)] == \
+        ["kill-at-step", "torn-checkpoint"]
+    assert [f.kind for f in plan.active("job0", 1)] == ["torn-checkpoint"]
+    assert plan.active("job0", 2) == []
+    assert [f.kind for f in plan.active("job1", 0)] == ["torn-checkpoint"]
+
+
+@pytest.mark.parametrize("bad", [
+    "explode-at-step:3",            # unknown kind
+    "kill-at-step",                 # missing step
+    "kill-at-step:x",               # non-integer step
+    "kill-at-step:3:5",             # extra positional arg
+    "slow-at-step:3",               # missing seconds
+    "kill-at-step:3:whens=2",       # unknown option
+    "kill-at-step:3:times=0",       # times < 1
+    "kill-at-step:3@job=",          # empty job id
+    "kill-at-step:3@jid=j0",        # malformed filter
+])
+def test_parse_fault_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_fault_spec(bad)
+
+
+def test_plan_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULT_SPEC", "kill-at-step:7")
+    assert plan_from_env().faults[0].step == 7
+    monkeypatch.delenv("REPRO_FAULT_SPEC")
+    assert not plan_from_env()
+    assert plan_from_env("slow-at-step:1:2").faults[0].seconds == 2.0
+
+
+# ---------------------------------------------------------------------------
+# failure records + exit classification
+# ---------------------------------------------------------------------------
+
+def test_failure_record_roundtrip_and_validation():
+    rec = FailureRecord(kind="timeout", where="fleet.worker", job_id="j0",
+                        attempt=1, detail="deadline", exit_code=None,
+                        retryable=True, time_s=1.5)
+    clone = FailureRecord.from_dict({**rec.to_dict(), "extra": "ignored"})
+    assert clone == rec
+    with pytest.raises(ValueError, match="unknown failure kind"):
+        FailureRecord(kind="gremlin", where="x", job_id="j0")
+
+
+def test_classify_exit():
+    assert classify_exit(POISON_EXIT) == ("poison", False)
+    assert classify_exit(KILL_EXIT) == ("crash", True)
+    assert classify_exit(1) == ("crash", True)
+
+
+# ---------------------------------------------------------------------------
+# the controller against a stub worker (no jax in the subprocess)
+# ---------------------------------------------------------------------------
+
+_STUB = r'''
+import argparse, json, os, sys, time
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--spec")
+ap.add_argument("--attempt", type=int, default=0)
+a = ap.parse_args()
+with open(a.spec) as f:
+    spec = json.load(f)
+mode = spec["params"].get("mode", "ok")
+if mode == "poison":
+    sys.exit(4)                                   # records.POISON_EXIT
+if mode == "hang":
+    time.sleep(60)
+if mode == "crash-once" and a.attempt == 0:
+    with open(spec["progress_path"], "a") as f:
+        f.write(json.dumps({"step": 0, "attempt": 0,
+                            "obs": {"amp": 1.0}}) + "\n")
+        f.write('{"step": 1, "att')               # torn tail, then die
+        f.flush()
+    os._exit(13)                                  # records.KILL_EXIT
+for step in range(spec["steps"] + 1):
+    obs = {"amp": 1.0 / (step + 1), "mesh": spec["mesh"]}
+    if mode == "env":
+        obs = {"has_xla": int("XLA_FLAGS" in os.environ),
+               "fault": os.environ.get("REPRO_FAULT_SPEC", "")}
+    with open(spec["progress_path"], "a") as f:
+        f.write(json.dumps({"step": step, "attempt": a.attempt,
+                            "obs": obs}) + "\n")
+tmp = spec["result_path"] + ".tmp"
+with open(tmp, "w") as f:
+    json.dump({"job_id": spec["job_id"], "attempt": a.attempt,
+               "final_step": spec["steps"], "restore_latency_us": 12.5,
+               "checkpoint_bytes": 2048}, f)
+os.replace(tmp, spec["result_path"])
+'''
+
+
+@pytest.fixture()
+def stub(tmp_path):
+    path = tmp_path / "stub_worker.py"
+    path.write_text(_STUB)
+    return (sys.executable, str(path))
+
+
+def _job(jid, mode, **kw):
+    kw.setdefault("steps", 3)
+    kw.setdefault("mesh", (1, 1))
+    return FleetJob(job_id=jid, case="heat", params={"mode": mode}, **kw)
+
+
+def _controller(jobs, stub, tmp_path, **kw):
+    kw.setdefault("total_slots", 4)
+    kw.setdefault("backoff_base_s", 0.01)
+    kw.setdefault("backoff_cap_s", 0.05)
+    kw.setdefault("verbose", False)
+    return FleetController(jobs, workdir=str(tmp_path / "work"),
+                           worker_argv=stub, **kw)
+
+
+def test_crash_is_retried_and_completes(stub, tmp_path):
+    ctl = _controller([_job("j0", "crash-once")], stub, tmp_path)
+    with obs.capture() as (_, metrics):
+        results = ctl.run()
+    res = results["j0"]
+    assert res.ok and res.attempts == 2
+    assert [f.kind for f in res.failures] == ["crash"]
+    assert res.failures[0].exit_code == KILL_EXIT and res.failures[0].retryable
+    # torn tail tolerated; attempt-1 lines win the merge
+    assert sorted(res.history) == [0, 1, 2, 3]
+    assert res.final_observables()["amp"] == 0.25
+    assert res.restore_latency_us == 12.5 and res.checkpoint_bytes == 2048
+    assert ctl.counters["fleet.jobs.scheduled"] == 2
+    assert ctl.counters["fleet.jobs.retried"] == 1
+    assert ctl.counters["fleet.jobs.failures"] == 1
+    assert ctl.counters["fleet.jobs.completed"] == 1
+    assert ctl.counters["fleet.jobs.quarantined"] == 0
+    # mirrored into repro.obs when tracing is on
+    assert metrics.counters()["fleet.jobs.retried"] == 1
+
+
+def test_poison_quarantines_without_retry_and_siblings_survive(stub, tmp_path):
+    ctl = _controller([_job("bad", "poison"), _job("good", "ok")],
+                      stub, tmp_path, max_retries=3)
+    results = ctl.run()
+    bad, good = results["bad"], results["good"]
+    assert bad.status == "quarantined" and bad.attempts == 1
+    assert [(f.kind, f.retryable) for f in bad.failures] == [("poison", False)]
+    assert bad.failures[0].exit_code == POISON_EXIT
+    assert good.ok and good.attempts == 1          # never blocked on bad
+    assert ctl.counters["fleet.jobs.quarantined"] == 1
+    assert ctl.counters["fleet.jobs.retried"] == 0
+
+
+def test_timeout_kill_is_classified_and_budget_quarantines(stub, tmp_path):
+    ctl = _controller([_job("hung", "hang")], stub, tmp_path,
+                      max_retries=0, timeout_s=0.5)
+    results = ctl.run()
+    res = results["hung"]
+    assert res.status == "quarantined"
+    assert [f.kind for f in res.failures] == ["timeout"]
+    assert "deadline" in res.failures[0].detail
+
+
+def test_retry_budget_exhaustion_collects_the_full_trail(stub, tmp_path):
+    # every attempt poisons itself crash-like? no — hang at tiny timeout
+    ctl = _controller([_job("hung", "hang")], stub, tmp_path,
+                      max_retries=2, timeout_s=0.3)
+    results = ctl.run()
+    res = results["hung"]
+    assert res.status == "quarantined" and res.attempts == 3
+    assert [f.kind for f in res.failures] == ["timeout"] * 3
+    assert [f.attempt for f in res.failures] == [0, 1, 2]
+
+
+def test_reshape_on_retry_changes_the_attempt_submesh(stub, tmp_path):
+    ctl = _controller([_job("j0", "crash-once", mesh=(2, 1))], stub, tmp_path,
+                      reshape_on_retry=((1, 2), (2, 2)))
+    assert ctl._retry_mesh(ctl.jobs[0], 0) == (2, 1)
+    assert ctl._retry_mesh(ctl.jobs[0], 1) == (1, 2)
+    assert ctl._retry_mesh(ctl.jobs[0], 2) == (2, 2)
+    assert ctl._retry_mesh(ctl.jobs[0], 3) == (1, 2)
+    results = ctl.run()
+    assert results["j0"].ok
+    # the retried attempt's spec really carried the reshaped submesh
+    with open(os.path.join(ctl.workdir, "j0.attempt1.spec.json")) as f:
+        assert json.load(f)["mesh"] == [1, 2]
+    assert results["j0"].history[3]["mesh"] == [1, 2]
+
+
+def test_worker_env_is_scrubbed_and_faults_forwarded(stub, tmp_path,
+                                                     monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    spec = "kill-at-step:99@job=nobody"
+    ctl = _controller([_job("j0", "env")], stub, tmp_path, fault_spec=spec)
+    results = ctl.run()
+    obs0 = results["j0"].history[0]
+    assert obs0["has_xla"] == 0            # inherited flag must not leak in
+    assert obs0["fault"] == spec           # spec rides the env to the worker
+
+
+def test_controller_validates_before_launching(stub, tmp_path):
+    with pytest.raises(ValueError, match="duplicate job ids"):
+        _controller([_job("a", "ok"), _job("a", "ok")], stub, tmp_path)
+    with pytest.raises(ValueError, match="needs 8 slots"):
+        _controller([_job("big", "ok", mesh=(4, 2))], stub, tmp_path,
+                    total_slots=4)
+    with pytest.raises(ValueError, match="exceeds the 4-slot pool"):
+        _controller([_job("a", "ok")], stub, tmp_path,
+                    reshape_on_retry=((8, 1),))
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        _controller([_job("a", "ok")], stub, tmp_path,
+                    fault_spec="explode:1")
+
+
+def test_report_schema_is_json_serializable(stub, tmp_path):
+    ctl = _controller([_job("j0", "crash-once"), _job("bad", "poison")],
+                      stub, tmp_path)
+    results = ctl.run()
+    doc = json.loads(json.dumps(ctl.report(results)))
+    assert doc["schema"] == "fleet-report/v1"
+    assert doc["counters"]["fleet.jobs.completed"] == 1
+    assert set(doc["jobs"]) == {"j0", "bad"}
+    assert doc["jobs"]["j0"]["status"] == "completed"
+    assert doc["jobs"]["j0"]["final_step"] == 3
+    assert doc["jobs"]["bad"]["failures"][0]["kind"] == "poison"
+
+
+# ---------------------------------------------------------------------------
+# the CLI's ensemble builder (no subprocess)
+# ---------------------------------------------------------------------------
+
+def test_cli_build_jobs_sweep_and_replicas():
+    from repro.fleet.cli import build_jobs, build_parser
+
+    ap = build_parser()
+    sweep = build_jobs(ap.parse_args(
+        ["--sweep", "kappa=0.05,0.1,0.2", "--submesh", "2x2"]))
+    assert [j.params for j in sweep] == \
+        [{"kappa": 0.05}, {"kappa": 0.1}, {"kappa": 0.2}]
+    assert all(j.mesh == (2, 2) for j in sweep)
+    reps = build_jobs(ap.parse_args(["--jobs", "3"]))
+    assert [j.scale for j in reps] == [1.0, 1.25, 1.5]
+    assert [j.job_id for j in reps] == ["job0", "job1", "job2"]
+    with pytest.raises(SystemExit):
+        build_jobs(ap.parse_args(["--submesh", "banana"]))
+    with pytest.raises(SystemExit):
+        build_jobs(ap.parse_args(["--sweep", "kappa"]))
+    with pytest.raises(SystemExit):
+        build_jobs(ap.parse_args(["--jobs", "0"]))

@@ -1,0 +1,76 @@
+"""Driver-level fleet fault tolerance: kill-injected ensemble workers must
+resume from their checkpoints and land on observables identical to the
+unkilled campaign, and a job with an exhausted retry budget must be
+quarantined without wedging its siblings — the acceptance proof the CI
+chaos smoke re-runs at 4-job scale."""
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fleet(workdir, report, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_FAULT_SPEC", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.fleet.cli", "--case", "heat",
+         "--n", "16", "--steps", "4", "--jobs", "2", "--submesh", "2x1",
+         "--slots", "4", "--ckpt-every", "2", "--workdir", workdir,
+         "--report", report, *extra],
+        env=env, capture_output=True, text=True, timeout=1200)
+    return out
+
+
+def _report(path):
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == "fleet-report/v1"
+    return doc
+
+
+def test_killed_ensemble_resumes_to_identical_observables(tmp_path):
+    clean = _fleet(str(tmp_path / "clean"), str(tmp_path / "clean.json"))
+    assert clean.returncode == 0, (clean.stdout[-1500:], clean.stderr[-3000:])
+    chaos = _fleet(str(tmp_path / "chaos"), str(tmp_path / "chaos.json"),
+                   extra=("--inject", "kill-at-step:3"))
+    assert chaos.returncode == 0, (chaos.stdout[-1500:], chaos.stderr[-3000:])
+    assert "retry in" in chaos.stdout            # the controller rescheduled
+
+    ref, got = _report(tmp_path / "clean.json"), _report(tmp_path / "chaos.json")
+    assert got["counters"]["fleet.jobs.retried"] == 2
+    assert got["counters"]["fleet.jobs.quarantined"] == 0
+    for jid in ("job0", "job1"):
+        cj, kj = ref["jobs"][jid], got["jobs"][jid]
+        assert cj["status"] == kj["status"] == "completed"
+        assert cj["attempts"] == 1 and kj["attempts"] == 2
+        assert kj["failures"][0]["kind"] == "crash"
+        # the headline identity: the merged per-step observables of the
+        # killed-and-resumed run equal the unkilled run's, bit for bit
+        assert kj["history"] == cj["history"], jid
+        assert kj["restore_latency_us"] > 0      # it really resumed
+    # the retried attempt resumed from the step-2 snapshot
+    for log in sorted(os.listdir(tmp_path / "chaos")):
+        if log.endswith(".attempt1.log"):
+            with open(tmp_path / "chaos" / log) as f:
+                assert "[resume]" in f.read()
+
+
+def test_exhausted_job_is_quarantined_without_blocking_siblings(tmp_path):
+    out = _fleet(str(tmp_path / "q"), str(tmp_path / "q.json"),
+                 extra=("--inject", "kill-at-step:1:times=99@job=job0",
+                        "--max-retries", "1"))
+    # quarantine => campaign exit code 1, but the campaign still finished
+    assert out.returncode == 1, (out.stdout[-1500:], out.stderr[-3000:])
+    assert "QUARANTINED" in out.stdout
+    doc = _report(tmp_path / "q.json")
+    j0, j1 = doc["jobs"]["job0"], doc["jobs"]["job1"]
+    assert j0["status"] == "quarantined" and j0["attempts"] == 2
+    assert [f["kind"] for f in j0["failures"]] == ["crash", "crash"]
+    assert all(f["exit_code"] == 13 for f in j0["failures"])
+    assert j1["status"] == "completed" and j1["attempts"] == 1
+    assert doc["counters"]["fleet.jobs.quarantined"] == 1

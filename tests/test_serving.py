@@ -108,6 +108,16 @@ def test_queue_backpressure_rejects_above_max_pending():
         RequestQueue(max_pending=0)
 
 
+def test_queue_rejection_carries_retry_hint():
+    q = RequestQueue(max_pending=2, retry_hint_s=0.1)
+    q.submit(_ticket(1))
+    q.submit(_ticket(2))
+    with pytest.raises(QueueFullError) as e:
+        q.submit(_ticket(3))
+    # depth == bound at rejection: hint is exactly the base
+    assert e.value.retry_after_hint == pytest.approx(0.1)
+
+
 # ---------------------------------------------------------------------------
 # registry: one live engine per fingerprint
 # ---------------------------------------------------------------------------
@@ -192,11 +202,19 @@ def test_run_to_longest_finishes_short_lanes_at_their_horizon(mesh11):
 
 def test_server_pushes_error_result_instead_of_dying(mesh11):
     server = SimServer(mesh11, use_plan_cache=False)
-    ticket = server.submit(_req(case="burgers"))  # not a registered case
+    ticket = server.submit(_req(case="burgers", request_id="bad"))
     assert server.serve_once() == 1
     res = ticket.result(timeout=5)
     assert not res.ok and "unknown solver case" in res.error
     assert res.history == []
+    # the lane's death left a structured record (the fleet's shared type)
+    from repro.fleet.records import FailureRecord
+    assert len(server.failures) == 1
+    rec = server.failures[0]
+    assert isinstance(rec, FailureRecord)
+    assert rec.kind == "batch_error" and rec.where == "serving.batch"
+    assert rec.job_id == "bad" and not rec.retryable
+    assert "unknown solver case" in rec.detail
     # the failed batch didn't wedge the server
     ok = server.submit(_req())
     server.serve_pending()
@@ -268,6 +286,33 @@ def test_serving_metrics_counters_and_gauges(mesh11):
     g = metrics.gauges()
     assert g["serving.queue_depth"] == 0
     assert g["serving.batch_size"] in (1, 2)
+
+
+def test_run_load_retries_backpressure_within_budget(mesh11):
+    # a burst 3x the queue bound: every rejection is retried after a drain
+    # pass, so nothing is shed and nothing is lost
+    server = SimServer(mesh11, max_pending=1, use_plan_cache=False)
+    reqs = [_req(request_id=f"r{i}", scale=1.0 + 0.5 * i) for i in range(3)]
+    report = run_load(server, reqs, max_submit_retries=2,
+                      retry_backoff_s=0.001)
+    assert len(report.results) == 3 and all(r.ok for r in report.results)
+    assert report.n_rejected == 0 and report.submit_retries == 2
+    assert report.stats()["submit_retries"] == 2
+
+
+def test_run_load_records_rejections_after_budget(mesh11):
+    from repro.fleet.records import FailureRecord
+
+    server = SimServer(mesh11, max_pending=1, use_plan_cache=False)
+    reqs = [_req(request_id=f"r{i}") for i in range(3)]
+    report = run_load(server, reqs)          # max_submit_retries=0: shed
+    assert len(report.results) == 1 and report.n_rejected == 2
+    assert report.n_requests == 3            # shed load still counted
+    for rec in report.rejected:
+        assert isinstance(rec, FailureRecord)
+        assert rec.kind == "rejected" and rec.where == "serving.queue"
+    assert [r.job_id for r in report.rejected] == ["r1", "r2"]
+    assert report.stats()["n_rejected"] == 2
 
 
 def test_rejected_counter_on_backpressure(mesh11):
